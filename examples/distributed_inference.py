@@ -1,0 +1,102 @@
+"""Distributed inference across pool nodes with pipeline parallelism —
+the paper's Fig 8b flow run concretely: a small decoder's layers are
+partitioned over DockerSSD nodes (PP stages), each stage executes its
+layer slice as a containerized task, activations hop stage-to-stage over
+Ether-oN, and the pool survives a mid-run node failure.
+
+  PYTHONPATH=src python examples/distributed_inference.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import (SHARABLE_NS, StoragePool, make_blob, ImageManifest,
+                        register_app)
+from repro.models import layers as L
+from repro.models.api import get_model
+
+CFG = dataclasses.replace(
+    get_arch("granite-3-2b"),
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+    vocab_size=512)
+MODEL = get_model(CFG, compute_dtype=jnp.float32)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+
+
+@register_app("llm-stage")
+def llm_stage(ctx, stage: int = 0, n_stages: int = 2):
+    """One pipeline stage: run my slice of layers on the activation
+    fetched from my sharable namespace."""
+    ctx.bind("/act/in.npy")
+    h = np.frombuffer(ctx.fs.read("/act/in.npy", SHARABLE_NS),
+                      np.float32).reshape(1, -1, CFG.d_model)
+    ctx.release("/act/in.npy")
+    h = jnp.asarray(h)
+    per = CFG.n_layers // n_stages
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None, :]
+    for li in range(stage * per, (stage + 1) * per):
+        lp = jax.tree.map(lambda a: a[li], PARAMS["layers"])
+        a = L.apply_norm(lp["attn_norm"], h, CFG.norm)
+        h = h + L.attention_block(lp["attn"], a, CFG, positions=positions)
+        m = L.apply_norm(lp["mlp_norm"], h, CFG.norm)
+        h = h + L.apply_mlp(lp["mlp"], m, CFG.act)
+    ctx.log(f"stage {stage}: ran layers {stage*per}..{(stage+1)*per-1}")
+    return np.asarray(h)
+
+
+def run_pipeline(pool, placement, tokens):
+    """Drive microbatches through the stages over the pool."""
+    h = np.asarray(L.embed_tokens(PARAMS["embed"], jnp.asarray(tokens),
+                                  jnp.float32), np.float32)
+    stages = sorted(set(placement.stage_of.values()))
+    for stage in stages:
+        ip = [i for i in placement.node_ips
+              if placement.stage_of[i] == stage][0]
+        node = pool.nodes[ip]
+        node.fs.write("/act/in.npy", h.tobytes(), SHARABLE_NS, actor="host")
+        cid, h = node.docker.cmd_run("llm-stage", stage=stage,
+                                     n_stages=len(stages))
+    h = np.asarray(L.apply_norm(PARAMS["final_norm"], jnp.asarray(h),
+                                CFG.norm))
+    logits = np.asarray(L.unembed(PARAMS["embed"], PARAMS.get("lm_head"),
+                                  jnp.asarray(h), CFG.tie_embeddings))
+    return logits
+
+
+def main():
+    pool = StoragePool(n_nodes=4)
+    blob = make_blob(ImageManifest("llm-stage", "llm-stage", ["weights"]),
+                     {"weights": b"stage-shard"})
+    pool.broadcast_pull("llm-stage", blob)
+    pl = pool.place_distributed("llm", "llm-stage", pp=2)
+    print(f"pipeline placement: {pl.stage_of}")
+
+    tokens = np.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], np.int32)
+    logits = run_pipeline(pool, pl, tokens)
+
+    # verify against the monolithic model
+    ref, _ = MODEL.forward(PARAMS, {"tokens": jnp.asarray(tokens)})
+    err = float(np.abs(logits - np.asarray(ref)).max())
+    print(f"pipelined-vs-monolithic max err: {err:.2e}")
+    assert err < 1e-3
+
+    # node failure mid-service: reschedule, run again, same answer
+    victim = pl.node_ips[0]
+    pool.nodes[victim].fail()
+    pool.check_heartbeats(now=1e9)
+    print(f"failed {victim} -> {pool.events[-1]}")
+    logits2 = run_pipeline(pool, pool.placements["llm"], tokens)
+    err2 = float(np.abs(logits2 - np.asarray(ref)).max())
+    print(f"after reschedule, max err: {err2:.2e}")
+    assert err2 < 1e-3
+    print("pipelined inference survived the failure with identical output")
+
+
+if __name__ == "__main__":
+    main()

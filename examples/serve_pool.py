@@ -1,0 +1,70 @@
+"""Distributed LLM inference on the computing-enabled storage pool —
+the paper's case study (Fig 8b) at demo scale.
+
+Serves a small GQA decoder with batched requests through the **tiered
+paged KV cache** (HBM window + "flash" tier + prefetch) and the Pallas
+``paged_attention`` kernel, then reports the D-Cache-style telemetry
+(page-ins/outs, prefetch hits) plus the analytical pool model's verdict
+for the full-size systems.
+
+  PYTHONPATH=src python examples/serve_pool.py
+"""
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import analytical as A
+from repro.models.api import get_model
+from repro.runtime.serve import PagedServer
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_arch("granite-3-2b"),
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+        vocab_size=512)
+    model = get_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # deliberately small HBM window -> the flash tier gets exercised
+    server = PagedServer(model, params, page_size=8,
+                         hbm_pages_per_layer=12, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    n_req, prompt_len, gen = 3, 24, 16
+    t0 = time.time()
+    for i in range(n_req):
+        prompt = rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+        server.add_request(i, prompt)
+    # the HBM window holds two active requests; the third spills to the
+    # flash tier and pages back in when its turn comes (D-Cache tiering)
+    out = server.decode(gen, seqs=[0, 1])
+    out.update(server.decode(gen, seqs=[2]))
+    dt = time.time() - t0
+    toks = n_req * (prompt_len + gen)
+    print(f"served {n_req} requests x ({prompt_len} prompt + {gen} gen) "
+          f"= {toks} tokens in {dt:.1f}s")
+    stats = server.tier_stats()
+    print(f"tiered-KV telemetry: page_ins={stats['page_ins']} "
+          f"page_outs={stats['page_outs']} hits={stats['hits']} "
+          f"prefetch_hits={stats['prefetch_hits']} "
+          f"residency={stats['residency']:.2f}")
+    print("sample generations:", {k: v[:6] for k, v in out.items()})
+
+    # what this buys at full scale (paper Fig 12b, our analytical model):
+    res = A.evaluate_pool()
+    r = A.headline_ratios(res)
+    print(f"\nfull-scale verdict (analytical, 8 LLMs, seq 32K): "
+          f"D-Cache beats H-Cache {r['d_cache_vs_h_cache']:.1f}x "
+          f"(paper: 7.9x), H-NoCache {r['d_cache_vs_h_nocache']:.0f}x "
+          f"(paper: 3.2Kx)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Checkpoint manager — fault-tolerant save/restore for 1000+ nodes.
+
+  * **Atomic commits**: leaves are written to ``step_N.tmp/`` and the
+    directory is renamed only after a manifest (tree structure, shapes,
+    dtypes, step) is fully written — a crash mid-save never corrupts the
+    latest checkpoint.
+  * **Async saves**: a background thread serializes while training
+    continues (the caller passes already-device-fetched arrays or jax
+    arrays; fetching is the only sync point).
+  * **Sharded layout**: each leaf is a separate ``.npy`` keyed by its
+    tree path, so per-host shard saving parallelizes trivially and
+    partial restores are possible.
+  * **Elastic restore**: ``restore(..., mesh, specs)`` re-device_puts
+    every leaf under the *new* mesh's NamedShardings — checkpoints move
+    between 256-chip and 512-chip (or degraded) meshes freely.
+  * λFS integration: with ``fs=`` the blobs are stored inside a
+    DockerSSD's private namespace (the pool's disaggregated checkpoint
+    store) instead of the local filesystem.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 fs=None, fs_prefix: str = "/ckpt"):
+        self.dir = directory
+        self.keep = keep
+        self.fs = fs
+        self.fs_prefix = fs_prefix
+        self._save_thread: Optional[threading.Thread] = None
+        self._last_error: Optional[Exception] = None
+        if fs is None:
+            os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = True):
+        """Serialize a pytree.  With blocking=False the write happens on a
+        background thread (async checkpointing)."""
+        arrays = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        struct = jax.tree.map(lambda x: None, tree)
+        treedef = jax.tree_util.tree_structure(struct)
+        manifest = {
+            "step": step,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                     for k, v in arrays.items()},
+            "treedef": str(treedef),
+        }
+        if blocking:
+            self._write(step, arrays, manifest)
+        else:
+            self.wait()
+            self._save_thread = threading.Thread(
+                target=self._write_guarded, args=(step, arrays, manifest),
+                daemon=True)
+            self._save_thread.start()
+
+    def _write_guarded(self, step, arrays, manifest):
+        try:
+            self._write(step, arrays, manifest)
+        except Exception as e:  # surfaced on next wait()
+            self._last_error = e
+
+    def _write(self, step, arrays, manifest):
+        if self.fs is not None:
+            base = f"{self.fs_prefix}/step_{step}.tmp"
+            for k, v in arrays.items():
+                buf = io.BytesIO()
+                np.save(buf, v)
+                self.fs.write(f"{base}/{k.replace('/', '__')}.npy",
+                              buf.getvalue())
+            self.fs.write(f"{base}/manifest.json",
+                          json.dumps(manifest).encode())
+            # atomic commit: write the manifest pointer last
+            self.fs.write(f"{self.fs_prefix}/step_{step}/COMMITTED",
+                          json.dumps(manifest).encode())
+            for name in self.fs.listdir(base):
+                self.fs.symlink(f"{base}/{name}",
+                                f"{self.fs_prefix}/step_{step}/{name}")
+            return
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for k, v in arrays.items():
+            np.save(os.path.join(tmp, k.replace("/", "__") + ".npy"), v)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # the atomic commit point
+        self._gc()
+
+    def wait(self):
+        if self._save_thread is not None:
+            self._save_thread.join()
+            self._save_thread = None
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"))
+
+    # -- restore ----------------------------------------------------------------
+
+    def steps(self):
+        if self.fs is not None:
+            names = [n for n in self.fs.listdir(self.fs_prefix)
+                     if n.startswith("step_") and not n.endswith(".tmp")]
+            return sorted(int(n.split("_")[1]) for n in names)
+        if not os.path.isdir(self.dir):
+            return []
+        return sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                      if d.startswith("step_") and not d.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, *, step: Optional[int] = None,
+                mesh=None, specs=None) -> Any:
+        """Restore into the structure of ``template``.  With mesh+specs the
+        leaves are device_put under the new mesh (elastic resharding)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError("no checkpoints")
+        keys = _flatten(template)
+
+        def load(k):
+            fname = k.replace("/", "__") + ".npy"
+            if self.fs is not None:
+                data = self.fs.read(f"{self.fs_prefix}/step_{step}/{fname}")
+                return np.load(io.BytesIO(data))
+            return np.load(os.path.join(self.dir, f"step_{step}", fname))
+
+        flat_loaded = {k: load(k) for k in keys}
+        leaves_order = list(keys.keys())
+        treedef = jax.tree_util.tree_structure(template)
+        arrays = [flat_loaded[k] for k in leaves_order]
+        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        if mesh is not None and specs is not None:
+            from jax.sharding import NamedSharding
+            tree = jax.tree.map(
+                lambda a, sp: jax.device_put(
+                    a, NamedSharding(mesh, sp) if not isinstance(
+                        sp, NamedSharding) else sp),
+                tree, specs)
+        return tree

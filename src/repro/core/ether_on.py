@@ -1,0 +1,217 @@
+"""Ether-oN — Ethernet over NVMe.
+
+Faithful control-plane model of the paper's transport: Ethernet frames
+are tunneled through two vendor-specific NVMe commands
+
+  * ``0xE0`` **transmit frame** — host -> SSD.  The driver copies the
+    sk_buff (headers+payload+checksum) into 4 KiB-aligned kernel pages
+    and points the command's PRP list at them.
+  * ``0xE1`` **receive frame** — the *asynchronous upcall*: the driver
+    pre-posts ``UPCALL_SLOTS`` (=4, the paper's tuned value) receive
+    commands per SQ; the SSD completes one whenever an ISP-container
+    sends a frame to the host, and the driver immediately re-posts a
+    fresh one.  This is how a PCIe device that cannot issue NVMe
+    commands nonetheless *initiates* communication.
+
+The event loop is deterministic; per-operation cost accounting feeds
+the Fig-3/Fig-11 models.  On the TPU mapping (DESIGN.md) this layer is
+the pool's control plane; bulk tensor traffic rides jax collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+PAGE = 4096
+OPC_TRANSMIT = 0xE0
+OPC_RECEIVE = 0xE1
+UPCALL_SLOTS = 4      # pre-allocated receive commands per SQ (paper-tuned)
+ETH_HEADER = 14
+MTU = 1500
+
+
+class EtherONError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class EthernetFrame:
+    src_ip: str
+    dst_ip: str
+    payload: bytes
+    ethertype: int = 0x0800
+    checksum: int = 0
+
+    def seal(self) -> "EthernetFrame":
+        self.checksum = zlib.crc32(self.payload)
+        return self
+
+    def verify(self) -> bool:
+        return self.checksum == zlib.crc32(self.payload)
+
+    @property
+    def wire_bytes(self) -> int:
+        return ETH_HEADER + len(self.payload) + 4
+
+
+@dataclasses.dataclass
+class NVMeCommand:
+    opcode: int
+    cid: int
+    sq_id: int
+    prp: List[int]                   # page ids of the kernel pages
+    n_pages: int
+    frame: Optional[EthernetFrame] = None   # contents of those pages
+    reception_code: int = 0
+
+
+@dataclasses.dataclass
+class Costs:
+    """Per-op latencies (us) — cost accounting for the perf models."""
+    doorbell: float = 0.3
+    dma_per_page: float = 0.9
+    completion_msi: float = 1.2
+    page_copy_per_kb: float = 0.08
+
+
+class EtherONStats:
+    def __init__(self):
+        self.tx_commands = 0
+        self.rx_completions = 0
+        self.pages_allocated = 0
+        self.bytes_tx = 0
+        self.bytes_rx = 0
+        self.reposts = 0
+        self.lock_syncs = 0
+        self.time_us = 0.0
+
+
+class EtherONDriver:
+    """Host-side kernel driver + virtual network adapter."""
+
+    def __init__(self, host_ip: str, costs: Costs = Costs()):
+        self.host_ip = host_ip
+        self.costs = costs
+        self.stats = EtherONStats()
+        self._cid = 0
+        self._devices: Dict[str, "DockerSSDEndpoint"] = {}
+        self._outstanding_rx: Dict[str, Deque[NVMeCommand]] = {}
+        self._rx_backlog: Dict[str, Deque[EthernetFrame]] = {}
+        self._inbox: Deque[EthernetFrame] = deque()
+        self._next_page = 0
+
+    # -- device attach / init ------------------------------------------------
+
+    def attach(self, dev: "DockerSSDEndpoint"):
+        self._devices[dev.ip] = dev
+        dev._driver = self
+        self._outstanding_rx[dev.ip] = deque()
+        self._rx_backlog[dev.ip] = deque()
+        # kernel init: pre-submit the upcall commands
+        for _ in range(UPCALL_SLOTS):
+            self._post_receive(dev.ip)
+
+    def _alloc_pages(self, nbytes: int) -> List[int]:
+        n = max(1, -(-nbytes // PAGE))
+        pages = list(range(self._next_page, self._next_page + n))
+        self._next_page += n
+        self.stats.pages_allocated += n
+        return pages
+
+    def _post_receive(self, ip: str):
+        self._cid += 1
+        cmd = NVMeCommand(OPC_RECEIVE, self._cid, sq_id=0,
+                          prp=self._alloc_pages(PAGE), n_pages=1,
+                          reception_code=self._cid)
+        self._outstanding_rx[ip].append(cmd)
+        self.stats.reposts += 1
+        self.stats.time_us += self.costs.doorbell
+
+    # -- host -> SSD ----------------------------------------------------------
+
+    def transmit(self, frame: EthernetFrame):
+        """Translate an Ethernet frame into a 0xE0 NVMe command."""
+        if frame.dst_ip not in self._devices:
+            raise EtherONError(f"no route to {frame.dst_ip}")
+        frame.seal()
+        pages = self._alloc_pages(frame.wire_bytes)
+        self._cid += 1
+        cmd = NVMeCommand(OPC_TRANSMIT, self._cid, sq_id=0, prp=pages,
+                          n_pages=len(pages), frame=frame)
+        c = self.costs
+        self.stats.tx_commands += 1
+        self.stats.bytes_tx += frame.wire_bytes
+        self.stats.time_us += (c.page_copy_per_kb * frame.wire_bytes / 1024 +
+                               c.doorbell + c.dma_per_page * len(pages) +
+                               c.completion_msi)
+        self._devices[frame.dst_ip]._receive_from_host(cmd)
+
+    # -- SSD -> host (upcall path) ---------------------------------------------
+
+    def _upcall(self, ip: str, frame: EthernetFrame):
+        """Device completes an outstanding 0xE1 command."""
+        q = self._outstanding_rx[ip]
+        if not q:
+            # all slots in flight: device-side backpressure queue
+            self._rx_backlog[ip].append(frame)
+            return
+        cmd = q.popleft()
+        assert cmd.opcode == OPC_RECEIVE
+        if not frame.verify():
+            raise EtherONError("checksum mismatch on upcall frame")
+        c = self.costs
+        self.stats.rx_completions += 1
+        self.stats.bytes_rx += frame.wire_bytes
+        self.stats.time_us += (c.dma_per_page * cmd.n_pages +
+                               c.completion_msi +
+                               c.page_copy_per_kb * frame.wire_bytes / 1024)
+        self._inbox.append(frame)
+        # immediately re-post to keep communication alive
+        self._post_receive(ip)
+        if self._rx_backlog[ip]:
+            self._upcall(ip, self._rx_backlog[ip].popleft())
+
+    def poll(self) -> Optional[EthernetFrame]:
+        return self._inbox.popleft() if self._inbox else None
+
+    def outstanding_slots(self, ip: str) -> int:
+        return len(self._outstanding_rx[ip])
+
+    # λFS inode-lock synchronization rides Ether-oN as a special packet
+    def send_lock_sync(self, path: str, refcount: int, holder):
+        self.stats.lock_syncs += 1
+        self.stats.time_us += self.costs.doorbell + self.costs.completion_msi
+
+
+class DockerSSDEndpoint:
+    """Device-side Ether-oN terminus: owns an IP, hands frames to the
+    Virtual-FW network handler, sends responses via the upcall path."""
+
+    def __init__(self, ip: str):
+        self.ip = ip
+        self._driver: Optional[EtherONDriver] = None
+        self._handler: Optional[Callable[[EthernetFrame], Optional[bytes]]] = None
+        self.rx_frames = 0
+
+    def set_handler(self, fn: Callable[[EthernetFrame], Optional[bytes]]):
+        self._handler = fn
+
+    def _receive_from_host(self, cmd: NVMeCommand):
+        assert cmd.opcode == OPC_TRANSMIT
+        frame = cmd.frame
+        if not frame.verify():
+            raise EtherONError("checksum mismatch on transmit frame")
+        self.rx_frames += 1
+        if self._handler is not None:
+            resp = self._handler(frame)
+            if resp is not None:
+                self.send_to_host(resp, dst_ip=frame.src_ip)
+
+    def send_to_host(self, payload: bytes, dst_ip: str):
+        """ISP-container initiated traffic — possibly multiple MTU frames."""
+        for off in range(0, max(len(payload), 1), MTU):
+            chunk = payload[off:off + MTU]
+            frame = EthernetFrame(self.ip, dst_ip, chunk).seal()
+            self._driver._upcall(self.ip, frame)

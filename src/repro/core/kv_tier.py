@@ -1,0 +1,198 @@
+"""Tiered paged KV cache — the D-Cache mechanism on TPU terms.
+
+The paper's core serving insight: the KV cache lives on storage local
+to the compute (flash inside the DockerSSD) instead of behind a host
+swap path.  TPU adaptation (DESIGN.md): a **page-granular KV cache**
+whose hot window sits in device HBM and whose cold extent sits in the
+host tier ("flash"), with asynchronous prefetch so page-in overlaps
+compute.  ``repro.kernels.paged_attention`` consumes the HBM window
+directly via the page table.
+
+The accounting (hits/misses/bytes moved) feeds the analytical model's
+D-Cache-vs-H-Cache comparison; the page-table management mirrors λFS
+block allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class KVTierStats:
+    page_ins: int = 0
+    page_outs: int = 0
+    hits: int = 0
+    misses: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    prefetch_hits: int = 0
+
+
+class PagedKVCache:
+    """Two-tier paged KV store for one layer group.
+
+    HBM window: ``hbm_pages`` physical pages of shape
+    [page, n_kv_heads, head_dim] (x2 for k and v).  Host tier: unbounded
+    numpy storage.  Logical pages are (seq_id, page_idx).
+    """
+
+    def __init__(self, *, page_size: int, hbm_pages: int, n_kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.page = page_size
+        self.hbm_pages = hbm_pages
+        self.hkv = n_kv_heads
+        self.hd = head_dim
+        self.dtype = dtype
+        shape = (hbm_pages, page_size, n_kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(hbm_pages))
+        # logical -> physical, LRU-ordered
+        self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
+        self._host: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
+        self._lengths: Dict[int, int] = {}
+        self._prefetched: set = set()
+        self._pinned: set = set()
+        self.stats = KVTierStats()
+
+    # -- sequence management -------------------------------------------------
+
+    def add_sequence(self, seq_id: int):
+        self._lengths[seq_id] = 0
+
+    def length(self, seq_id: int) -> int:
+        return self._lengths[seq_id]
+
+    def _page_bytes(self) -> int:
+        return int(self.page * self.hkv * self.hd *
+                   jnp.dtype(self.dtype).itemsize) * 2
+
+    # -- page lifecycle ---------------------------------------------------------
+
+    def _evict_one(self):
+        # LRU among unpinned pages (pinned = part of an in-flight view)
+        victim = None
+        for lkey in self._resident:                          # LRU order
+            if lkey not in self._pinned:
+                victim = lkey
+                break
+        if victim is None:
+            raise RuntimeError(
+                "HBM window too small for the pinned working set "
+                f"({len(self._pinned)} pages pinned, {self.hbm_pages} total)")
+        phys = self._resident.pop(victim)
+        k = np.asarray(self.k_pages[phys])
+        v = np.asarray(self.v_pages[phys])
+        self._host[victim] = (k, v)
+        self._free.append(phys)
+        self.stats.page_outs += 1
+        self.stats.bytes_out += self._page_bytes()
+
+    def _alloc(self, lkey) -> int:
+        if not self._free:
+            self._evict_one()
+        phys = self._free.pop()
+        self._resident[lkey] = phys
+        return phys
+
+    def _page_in(self, lkey) -> int:
+        """Bring a host-tier page into HBM."""
+        phys = self._alloc(lkey)
+        k, v = self._host.pop(lkey)
+        self.k_pages = self.k_pages.at[phys].set(jnp.asarray(k, self.dtype))
+        self.v_pages = self.v_pages.at[phys].set(jnp.asarray(v, self.dtype))
+        self.stats.page_ins += 1
+        self.stats.bytes_in += self._page_bytes()
+        return phys
+
+    def ensure_resident(self, seq_id: int, *, pin: bool = False) -> List[int]:
+        """Make every page of a sequence resident; returns physical ids in
+        logical order.  With ``pin=True`` the pages are protected from
+        eviction until :meth:`unpin_all` (used while assembling a batched
+        kernel view so later page-ins cannot invalidate earlier entries)."""
+        n_pages = -(-max(self._lengths[seq_id], 1) // self.page)
+        out = []
+        for pi in range(n_pages):
+            lkey = (seq_id, pi)
+            if lkey in self._resident:
+                self._resident.move_to_end(lkey)
+                if lkey in self._prefetched:
+                    self.stats.prefetch_hits += 1
+                    self._prefetched.discard(lkey)
+                self.stats.hits += 1
+            elif lkey in self._host:
+                self.stats.misses += 1
+                self._page_in(lkey)
+            else:  # brand-new page
+                self._alloc(lkey)
+            if pin:
+                self._pinned.add(lkey)
+            out.append(self._resident[(seq_id, pi)])
+        return out
+
+    def unpin_all(self):
+        self._pinned.clear()
+
+    def prefetch(self, seq_id: int):
+        """Async prefetch model: pages needed by the *next* step are pulled
+        in now so the transfer overlaps compute (double buffering)."""
+        n_pages = -(-(self._lengths[seq_id] + 1) // self.page)
+        for pi in range(n_pages):
+            lkey = (seq_id, pi)
+            if lkey in self._host:
+                self._page_in(lkey)
+                self._prefetched.add(lkey)
+
+    # -- writes -------------------------------------------------------------------
+
+    def append_token(self, seq_id: int, k_tok: jnp.ndarray,
+                     v_tok: jnp.ndarray):
+        """k_tok/v_tok: [n_kv_heads, head_dim] for the new position."""
+        pos = self._lengths[seq_id]
+        pi, off = divmod(pos, self.page)
+        lkey = (seq_id, pi)
+        if lkey not in self._resident:
+            if lkey in self._host:
+                self._page_in(lkey)
+            else:
+                self._alloc(lkey)
+        phys = self._resident[lkey]
+        self._resident.move_to_end(lkey)
+        self.k_pages = self.k_pages.at[phys, off].set(
+            k_tok.astype(self.dtype))
+        self.v_pages = self.v_pages.at[phys, off].set(
+            v_tok.astype(self.dtype))
+        self._lengths[seq_id] = pos + 1
+
+    # -- read view for the kernel ---------------------------------------------------
+
+    def kernel_view(self, seq_ids: List[int]):
+        """Returns (k_pages, v_pages, page_table, lengths) ready for
+        ``repro.kernels.ops.paged_attention``."""
+        tables = []
+        max_pages = max(-(-max(self._lengths[s], 1) // self.page)
+                        for s in seq_ids)
+        try:
+            for s in seq_ids:
+                phys = self.ensure_resident(s, pin=True)
+                phys = phys + [0] * (max_pages - len(phys))
+                tables.append(phys)
+        finally:
+            self.unpin_all()
+        page_table = jnp.asarray(tables, jnp.int32)
+        lengths = jnp.asarray([self._lengths[s] for s in seq_ids], jnp.int32)
+        # k_pages/v_pages are immutable jnp snapshots: the returned view
+        # stays valid even if later appends/evictions rewrite the window.
+        return self.k_pages, self.v_pages, page_table, lengths
+
+    # -- occupancy ---------------------------------------------------------------
+
+    def residency(self) -> float:
+        return len(self._resident) / self.hbm_pages

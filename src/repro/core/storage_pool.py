@@ -1,0 +1,207 @@
+"""Computing-enabled storage pool — DockerSSD disaggregation.
+
+Each DockerSSD (Ether-oN IP + Virtual-FW + mini-docker + λFS) is an
+independent node; nodes form an *array* behind a PCIe switch, arrays
+form a *cluster* behind a switch tray (Fig 8a).  The pool orchestrates
+containers across nodes (docker-compose/Kubernetes-style), supports
+the two offloading modes from the paper (independent apps per node vs
+one distributed job spanning nodes), and provides the fleet features a
+1000+-node deployment needs: heartbeats, failure detection and
+container rescheduling, straggler re-replication, elastic membership.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.container import MiniDocker
+from repro.core.ether_on import DockerSSDEndpoint, EtherONDriver
+from repro.core.lambda_fs import LambdaFS
+from repro.core.virtual_fw import VirtualFW
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    ghz: float = 2.2
+    cores: int = 6
+    dram_gb: float = 2.0
+    flash_gb: float = 400.0
+    channels: int = 12
+
+
+class DockerSSDNode:
+    """One disaggregated computational SSD."""
+
+    def __init__(self, ip: str, spec: NodeSpec = NodeSpec()):
+        self.ip = ip
+        self.spec = spec
+        self.fs = LambdaFS(capacity_bytes=int(spec.flash_gb * 1e9))
+        self.endpoint = DockerSSDEndpoint(ip)
+        self.fw = VirtualFW(self.fs, self.endpoint)
+        self.docker = MiniDocker(self.fw, self.fs)
+        # λFS lock syncs ride the pool's Ether-oN driver
+        self.alive = True
+        self.last_heartbeat = 0.0
+        self.latency_ema_ms = 1.0
+        self.endpoint.set_handler(self._on_frame)
+
+    def _on_frame(self, frame):
+        """HTTP-over-Ether-oN: docker-cli requests land here."""
+        req = frame.payload.decode(errors="replace")
+        if req.startswith(("GET ", "POST ")):
+            return self.docker.handle_http(req)
+        return None
+
+    def heartbeat(self, now: float) -> bool:
+        if self.alive:
+            self.last_heartbeat = now
+        return self.alive
+
+    def fail(self):
+        self.alive = False
+
+    def recover(self):
+        self.alive = True
+
+
+@dataclasses.dataclass
+class Placement:
+    """A distributed job's shard assignment (the pool-level DP/TP/PP of
+    the paper's Fig 8b)."""
+    job: str
+    node_ips: List[str]
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    stage_of: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class StoragePool:
+    """Array/cluster of DockerSSDs with a docker-compose-like scheduler."""
+
+    def __init__(self, n_nodes: int, host_ip: str = "10.0.0.1",
+                 spec: NodeSpec = NodeSpec(), array_size: int = 16,
+                 heartbeat_timeout: float = 3.0,
+                 straggler_factor: float = 3.0):
+        self.driver = EtherONDriver(host_ip)
+        self.nodes: Dict[str, DockerSSDNode] = {}
+        self.arrays: List[List[str]] = []
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_factor = straggler_factor
+        self.placements: Dict[str, Placement] = {}
+        self.events: List[Tuple[str, str]] = []
+        for i in range(n_nodes):
+            ip = f"10.0.{1 + i // array_size}.{2 + i % array_size}"
+            node = DockerSSDNode(ip, spec)
+            node.fs.attach_ether(self.driver)
+            self.nodes[ip] = node
+            self.driver.attach(node.endpoint)
+            if i % array_size == 0:
+                self.arrays.append([])
+            self.arrays[-1].append(ip)
+
+    # -- membership -----------------------------------------------------------
+
+    def alive_nodes(self) -> List[str]:
+        return [ip for ip, n in self.nodes.items() if n.alive]
+
+    def check_heartbeats(self, now: Optional[float] = None) -> List[str]:
+        """Returns newly-dead node ips and reschedules their containers."""
+        now = time.monotonic() if now is None else now
+        dead = []
+        for ip, node in self.nodes.items():
+            if not node.heartbeat(now) and \
+                    now - node.last_heartbeat > self.heartbeat_timeout:
+                dead.append(ip)
+        for ip in dead:
+            self._reschedule_off(ip)
+        return dead
+
+    def stragglers(self) -> List[str]:
+        alive = [self.nodes[ip] for ip in self.alive_nodes()]
+        if not alive:
+            return []
+        med = sorted(n.latency_ema_ms for n in alive)[len(alive) // 2]
+        return [n.ip for n in alive
+                if n.latency_ema_ms > self.straggler_factor * max(med, 1e-6)]
+
+    # -- image distribution / scheduling ----------------------------------------
+
+    def broadcast_pull(self, name: str, blob: bytes, ips=None):
+        for ip in (ips or self.alive_nodes()):
+            self.nodes[ip].docker.cmd_pull(name, blob)
+
+    def place_distributed(self, job: str, image: str, *, dp: int = 1,
+                          tp: int = 1, pp: int = 1) -> Placement:
+        """Group nodes into one distributed system (the paper's preferred
+        mode).  Needs dp*tp*pp healthy nodes; stage id = pipeline stage."""
+        need = dp * tp * pp
+        avail = [ip for ip in self.alive_nodes()
+                 if ip not in self._occupied()]
+        if len(avail) < need:
+            raise RuntimeError(f"pool has {len(avail)} free nodes; "
+                               f"need {need}")
+        chosen = avail[:need]
+        pl = Placement(job=job, node_ips=chosen, dp=dp, tp=tp, pp=pp)
+        for i, ip in enumerate(chosen):
+            pl.stage_of[ip] = (i // (dp * tp)) % pp
+        self.placements[job] = pl
+        self.events.append(("place", job))
+        return pl
+
+    def place_independent(self, job: str, image: str, n: int) -> Placement:
+        """Mode 1: independent app instances across nodes."""
+        avail = [ip for ip in self.alive_nodes()
+                 if ip not in self._occupied()][:n]
+        pl = Placement(job=job, node_ips=avail)
+        self.placements[job] = pl
+        return pl
+
+    def run_on(self, job: str, fn: Callable[[DockerSSDNode, int], Any]):
+        """Execute fn(node, rank) over a placement's nodes; EMA latency."""
+        pl = self.placements[job]
+        out = []
+        for rank, ip in enumerate(pl.node_ips):
+            node = self.nodes[ip]
+            if not node.alive:
+                raise RuntimeError(f"node {ip} died mid-job")
+            t0 = time.monotonic()
+            out.append(fn(node, rank))
+            dt = (time.monotonic() - t0) * 1e3
+            node.latency_ema_ms = 0.8 * node.latency_ema_ms + 0.2 * dt
+        return out
+
+    def _occupied(self):
+        occ = set()
+        for pl in self.placements.values():
+            occ.update(pl.node_ips)
+        return occ
+
+    def _reschedule_off(self, dead_ip: str):
+        """Failure handling: replace a dead node in every placement with a
+        free healthy one (container restart on the new node)."""
+        for pl in self.placements.values():
+            if dead_ip in pl.node_ips:
+                free = [ip for ip in self.alive_nodes()
+                        if ip not in self._occupied()]
+                if not free:
+                    self.events.append(("degraded", pl.job))
+                    pl.node_ips.remove(dead_ip)
+                    continue
+                new_ip = free[0]
+                idx = pl.node_ips.index(dead_ip)
+                pl.node_ips[idx] = new_ip
+                pl.stage_of[new_ip] = pl.stage_of.pop(dead_ip, 0)
+                self.events.append(("reschedule", f"{pl.job}:{dead_ip}->{new_ip}"))
+
+    # -- elastic membership --------------------------------------------------------
+
+    def scale_to(self, n: int, spec: NodeSpec = NodeSpec()):
+        cur = len(self.nodes)
+        for i in range(cur, n):
+            ip = f"10.0.{1 + i // 16}.{2 + i % 16}"
+            node = DockerSSDNode(ip, spec)
+            self.nodes[ip] = node
+            self.driver.attach(node.endpoint)
+        self.events.append(("scale", str(n)))

@@ -1,0 +1,63 @@
+"""Embedding-bag aggregation — Pallas TPU kernel (DLRM 'embed' workload).
+
+The paper's rm1/rm2 workloads do sparse embedding-table lookups +
+sum-pooling inside the SSD.  TPU adaptation: the table shard lives in
+HBM ("flash"); lookup indices arrive via scalar prefetch so each grid
+step DMAs exactly one table row HBM->VMEM and accumulates the pool in
+the output block — a near-data gather that never materializes [B, L, D].
+
+Grid: (batch, lookups); the lookup axis is sequential per sample.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embed_kernel(idx_ref, w_ref, table_ref, o_ref, *, n_lookups: int,
+                  weighted: bool):
+    b = pl.program_id(0)
+    li = pl.program_id(1)
+
+    @pl.when(li == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = table_ref[0, :].astype(jnp.float32)
+    if weighted:
+        row = row * w_ref[b, li]
+    o_ref[0, :] = o_ref[0, :] + row.astype(o_ref.dtype)
+
+
+def embed_agg(table, indices, weights=None, *, interpret: bool = False):
+    """table: [V, D]; indices: [B, L] int32; weights: optional [B, L] f32.
+    Returns [B, D] sum-pooled embeddings."""
+    v, d = table.shape
+    b, l = indices.shape
+    weighted = weights is not None
+    if weights is None:
+        weights = jnp.ones((b, l), jnp.float32)
+
+    kernel = functools.partial(_embed_kernel, n_lookups=l, weighted=weighted)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, l),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # weights, whole array
+            pl.BlockSpec((1, d), lambda bb, li, idx: (idx[bb, li], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bb, li, idx: (bb, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="embed_agg",
+    )(indices, weights, table)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True``;
+on TPU they compile natively.  ``ref.py`` holds the pure-jnp oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref  # noqa: F401  (re-exported oracle module)
+from repro.kernels.embed_agg import embed_agg as _embed_agg
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import (paged_attention as _paged,
+                                            paged_attention_q8 as _paged_q8)
+from repro.kernels.rwkv_scan import rwkv_scan as _rwkv
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _paged(q, k_pages, v_pages, page_table, lengths,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_q8(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                       lengths, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _paged_q8(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                     lengths, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embed_agg(table, indices, weights=None, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _embed_agg(table, indices, weights, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_scan(r, k, v, logw, u, s0, chunk: int = 32,
+              interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rwkv(r, k, v, logw, u, s0, chunk=chunk, interpret=interpret)

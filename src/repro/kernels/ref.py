@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (self-contained, no Pallas).
+
+These are the correctness references the kernel sweep tests
+``assert_allclose`` against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Sk,D] (GQA by head grouping)."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), sk - sq)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v)
+    return out.reshape(b, h, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Decode attention over a paged KV cache.
+
+    q: [B, H, D] (one new token per sequence)
+    k_pages/v_pages: [n_pages, page, Hkv, D]  (the "flash" pool)
+    page_table: [B, pages_per_seq] int32 physical page ids
+    lengths: [B] int32 valid token counts
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    g = h // hkv
+    # gather logical KV [B, S, Hkv, D]
+    k = k_pages[page_table].reshape(b, pages_per_seq * page, hkv, d)
+    v = v_pages[page_table].reshape(b, pages_per_seq * page, hkv, d)
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(d)
+    valid = jnp.arange(pages_per_seq * page)[None] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(q.dtype), v)
+    return out.reshape(b, h, d)
+
+
+def paged_attention_q8_ref(q, k_pages, v_pages, k_scale, v_scale,
+                           page_table, lengths):
+    """Oracle for the int8-KV paged kernel: dequantize, then the fp ref."""
+    kd = k_pages.astype(jnp.float32) * k_scale[..., None]
+    vd = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_attention_ref(q, kd.astype(q.dtype), vd.astype(q.dtype),
+                               page_table, lengths)
+
+
+# ---------------------------------------------------------------------------
+# embedding-bag aggregation (DLRM 'embed' workload)
+# ---------------------------------------------------------------------------
+
+
+def embed_agg_ref(table, indices, weights=None):
+    """Sum-pool embedding lookups (sparse-feature aggregation).
+
+    table: [V, D]; indices: [B, L] int32; weights: optional [B, L].
+    Returns [B, D] = sum_l w[b,l] * table[indices[b,l]].
+    """
+    rows = table[indices]                        # [B, L, D]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    return jnp.sum(rows, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv chunked recurrence
+# ---------------------------------------------------------------------------
+
+
+def wkv_ref(r, k, v, logw, u, s0):
+    """Naive per-token scan.  r/k/logw: [B,S,H,dk]; v: [B,S,H,dv];
+    u: [H,dk]; s0: [B,H,dk,dv].  Returns (o [B,S,H,dv], sT)."""
+    def step(state, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = jnp.exp(wt)[..., None] * state + kv
+        return state, o
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, logw))
+    sT, os = lax.scan(step, s0, xs)
+    return jnp.moveaxis(os, 0, 1), sT

@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline probe runner: per-cell extrapolated FLOPs/bytes/collective
+bytes from compiled 1-/2-layer probes (see runtime/costprobe.py).
+
+  PYTHONPATH=src python -m repro.launch.probe --all --mesh single \
+      --out results/probe.jsonl
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+
+from repro.configs.base import SHAPES, cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import roofline
+from repro.runtime.costprobe import probe_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/probe.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--opt", type=int, default=0)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for arch, shape, _ in cells(runnable_only=True):
+            for m in meshes:
+                todo.append((arch.name, shape.name, m))
+    else:
+        for m in meshes:
+            todo.append((args.arch, args.shape, m))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") == "ok" and                             r.get("opt_level", 0) == args.opt:
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    from repro.launch.dryrun import active_params, count_params
+    import jax
+
+    n_fail = 0
+    for arch_id, shape_name, mesh_name in todo:
+        if (get_arch(arch_id).name, shape_name, mesh_name) in done:
+            print(f"SKIP (done) {arch_id} {shape_name} {mesh_name}")
+            continue
+        print(f"=== probe {arch_id} x {shape_name} x {mesh_name} ===",
+              flush=True)
+        t0 = time.time()
+        rec = dict(arch=get_arch(arch_id).name, shape=shape_name,
+                   mesh=mesh_name, status="ok", opt_level=args.opt)
+        try:
+            mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+            chips = int(np.prod(list(mesh.shape.values())))
+            with mesh:
+                total = probe_cell(arch_id, shape_name, mesh, mesh_name,
+                                   opt_level=args.opt)
+            # cost_analysis is PER-DEVICE for SPMD modules -> globalize
+            for k in ("flops", "bytes", "coll"):
+                total[k] *= chips
+            cfg = get_arch(arch_id)
+            from repro.models.api import get_model
+            import jax.numpy as jnp
+            model = get_model(cfg)
+            pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            n_active = active_params(cfg, pshape)
+            shape = SHAPES[shape_name]
+            tokens = (shape.global_batch * shape.seq_len
+                      if shape.kind != "decode" else shape.global_batch)
+            mf = roofline.model_flops_estimate(n_active, tokens, shape.kind)
+            terms = roofline.RooflineTerms(
+                arch=rec["arch"], shape=shape_name, mesh=mesh_name,
+                chips=chips, hlo_flops=total["flops"],
+                hlo_bytes=total["bytes"], coll_bytes=total["coll"],
+                coll_breakdown={}, model_flops=mf)
+            rec["roofline"] = terms.to_dict()
+            rec["n_active"] = int(n_active)
+            print(f"  flops={total['flops']:.3e} bytes={total['bytes']:.3e} "
+                  f"coll={total['coll']:.3e} "
+                  f"useful={terms.useful_flops_ratio:.2f} "
+                  f"bottleneck={terms.bottleneck} "
+                  f"step={terms.step_time_s*1e3:.1f}ms "
+                  f"roofline_frac={terms.roofline_fraction:.3f}", flush=True)
+        except Exception as e:
+            rec["status"] = "fail"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            n_fail += 1
+            print(f"  FAIL {rec['error']}", flush=True)
+        rec["total_s"] = round(time.time() - t0, 1)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    print(f"probe done: {len(todo)} cells, {n_fail} failures")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

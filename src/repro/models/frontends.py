@@ -1,0 +1,23 @@
+"""Modality frontends — STUBS per task spec.
+
+``[audio]``/``[vlm]`` archs specify the transformer BACKBONE only; the
+modality frontend supplies *precomputed* frame/patch embeddings.  These
+helpers generate deterministic synthetic embeddings with the right
+shapes/dtypes for smoke tests, and the ShapeDtypeStructs for dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_embed_spec(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for precomputed patch/frame embeddings."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def synth_embeddings(cfg, batch: int, seq: int, rng=None, dtype=jnp.float32):
+    """Deterministic synthetic patch/frame embeddings (stub frontend)."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    return (0.02 * jax.random.normal(rng, (batch, seq, cfg.d_model))).astype(dtype)

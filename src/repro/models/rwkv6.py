@@ -1,0 +1,349 @@
+"""RWKV-6 "Finch": attention-free RNN with data-dependent decay
+(arXiv:2404.05892), JAX implementation.
+
+Training/prefill use a *chunked* parallel form of the wkv recurrence in
+which every exponent is a difference of cumulative log-decays and hence
+<= 0 — numerically safe in f32 without renormalization tricks.  Decode
+is the O(1) recurrent step (this is why rwkv6 runs the ``long_500k``
+shape).  A Pallas TPU kernel of the chunk kernel lives in
+``repro.kernels.rwkv_scan``; this module is its algorithmic reference.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+LORA_R = 32
+DECAY_LORA_R = 64
+
+
+# ---------------------------------------------------------------------------
+# wkv recurrence — chunked parallel form and step form
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunk(r, k, v, logw, u, s0):
+    """One chunk of the wkv recurrence for a single (batch, head).
+
+    r/k/logw: [C, dk]; v: [C, dv]; u: [dk]; s0: [dk, dv].
+    Returns (o: [C, dv], sC: [dk, dv]).  All exponents are <= 0.
+    """
+    cum = jnp.cumsum(logw, axis=0)                      # [C, dk] incl. t
+    cum_excl = cum - logw                               # prod over 1..t-1
+    # intra-chunk scores: t > s strictly
+    diff = cum_excl[:, None, :] - cum[None, :, :]       # [t, s, dk]
+    c = r.shape[0]
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)
+    # mask BEFORE exp (exp of masked positive entries would overflow and
+    # poison gradients via inf * 0)
+    dmat = jnp.exp(jnp.where(tri[:, :, None], diff, -jnp.inf))
+    scores = jnp.einsum("ti,si,tsi->ts", r, k, dmat)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)         # [C]
+    o = scores @ v + diag[:, None] * v
+    # inter-chunk (initial state)
+    o = o + (r * jnp.exp(cum_excl)) @ s0
+    # state update
+    k2 = k * jnp.exp(cum[-1][None, :] - cum)            # [C, dk]
+    sC = jnp.exp(cum[-1])[:, None] * s0 + k2.T @ v
+    return o, sC
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = 32,
+                unroll: bool = False):
+    """Full-sequence wkv via scan over chunks.
+
+    r/k/logw: [B, S, H, dk]; v: [B, S, H, dv]; u: [H, dk];
+    s0: [B, H, dk, dv].  Returns (o: [B, S, H, dv], sT).
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    ck = min(chunk, s)
+    assert s % ck == 0, (s, ck)
+    n = s // ck
+
+    def resh(x):  # [B,S,H,*] -> [N, B, H, C, *]
+        return jnp.moveaxis(x.reshape(b, n, ck, h, -1), (1, 3), (0, 2))
+
+    rs, ks, vs, ws = resh(r), resh(k), resh(v), resh(logw)
+
+    chunk_fn = jax.vmap(jax.vmap(wkv_chunk, in_axes=(0, 0, 0, 0, 0, 0)),
+                        in_axes=(0, 0, 0, 0, None, 0))
+
+    def body(state, xs):
+        rc, kc, vc, wc = xs
+        o, state = chunk_fn(rc, kc, vc, wc, u, state)
+        return state, o
+
+    sT, os = lax.scan(body, s0, (rs, ks, vs, ws),
+                      unroll=unroll)                    # os: [N,B,H,C,dv]
+    o = jnp.moveaxis(os, (0, 2), (1, 3)).reshape(b, s, h, dv)
+    return o, sT
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """One-token recurrence.  r/k/logw: [B,H,dk]; v: [B,H,dv];
+    state: [B,H,dk,dv].  Returns (o [B,H,dv], new state)."""
+    kv = k[..., :, None] * v[..., None, :]              # [B,H,dk,dv]
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new = jnp.exp(logw)[..., None] * state + kv
+    return o, new
+
+
+def wkv_ref(r, k, v, logw, u, s0):
+    """Naive per-token scan — oracle for the chunked form and the kernel."""
+    def body(state, xs):
+        rt, kt, vt, wt = xs
+        o, state = wkv_step(rt, kt, vt, wt, u, state)
+        return state, o
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, logw))
+    sT, os = lax.scan(body, s0, xs)
+    return jnp.moveaxis(os, 0, 1), sT
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+class RWKV6LM:
+    def __init__(self, cfg, compute_dtype=jnp.bfloat16, chunk: int = 32,
+                 remat: str = "full", loss_chunk: int = 256,
+                 unroll_inner: bool = False):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.chunk = chunk
+        self.remat = remat
+        self.loss_chunk = loss_chunk
+        self.unroll = unroll_inner
+        self.n_heads = cfg.d_model // cfg.ssm_head_dim
+        self.dk = cfg.ssm_head_dim
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, rng, dtype=jnp.float32) -> Dict[str, Any]:
+        cfg, d, h, dk = self.cfg, self.cfg.d_model, self.n_heads, self.dk
+        keys = jax.random.split(rng, 4)
+
+        def init_layer(key):
+            ks = jax.random.split(key, 12)
+            tm = {
+                "mu_x": jnp.zeros((d,), dtype), "mu_w": jnp.zeros((d,), dtype),
+                "mu_k": jnp.zeros((d,), dtype), "mu_v": jnp.zeros((d,), dtype),
+                "mu_r": jnp.zeros((d,), dtype), "mu_g": jnp.zeros((d,), dtype),
+                "lora_a": L.dense_init(ks[0], (d, 5 * LORA_R), dtype=dtype),
+                "lora_b": (jnp.zeros((5, LORA_R, d), dtype)),
+                "w0": jnp.full((d,), -0.6, dtype),  # w ~ exp(-exp(-0.6)) ~ 0.58
+                "wa": L.dense_init(ks[1], (d, DECAY_LORA_R), dtype=dtype),
+                "wb": jnp.zeros((DECAY_LORA_R, d), dtype),
+                "u": (0.5 * jax.random.normal(ks[2], (h, dk))).astype(dtype),
+                "wr": L.dense_init(ks[3], (d, d), dtype=dtype),
+                "wk": L.dense_init(ks[4], (d, d), dtype=dtype),
+                "wv": L.dense_init(ks[5], (d, d), dtype=dtype),
+                "wg": L.dense_init(ks[6], (d, d), dtype=dtype),
+                "wo": L.dense_init(ks[7], (d, d), dtype=dtype),
+                "ln_x": jnp.ones((h, dk), dtype),
+            }
+            cm = {
+                "mu_k": jnp.zeros((d,), dtype), "mu_r": jnp.zeros((d,), dtype),
+                "wk": L.dense_init(ks[8], (d, cfg.d_ff), dtype=dtype),
+                "wv": L.dense_init(ks[9], (cfg.d_ff, d), dtype=dtype),
+                "wr": L.dense_init(ks[10], (d, d), dtype=dtype),
+            }
+            return {
+                "ln1": L.init_norm(ks[11], d, "layernorm", dtype),
+                "time_mix": tm,
+                "ln2": L.init_norm(ks[11], d, "layernorm", dtype),
+                "channel_mix": cm,
+            }
+
+        layer_keys = jax.random.split(keys[0], cfg.n_layers)
+        return {
+            "embed": L.init_embed(keys[1], cfg, dtype),
+            "ln0": L.init_norm(keys[2], d, "layernorm", dtype),
+            "final_norm": L.init_norm(keys[2], d, "layernorm", dtype),
+            "layers": jax.vmap(init_layer)(layer_keys),
+            "lm_head": {"w": L.dense_init(keys[3], (d, cfg.vocab_size),
+                                          dtype=dtype)},
+        }
+
+    # -- time mix ------------------------------------------------------------
+
+    def _ddlerp(self, tm, x, sx):
+        """Data-dependent token-shift interpolation -> (xw,xk,xv,xr,xg)."""
+        dx = sx - x
+        xxx = x + dx * tm["mu_x"].astype(x.dtype)
+        lo = jnp.tanh(xxx @ tm["lora_a"].astype(x.dtype))
+        lo = lo.reshape(*x.shape[:-1], 5, LORA_R)
+        mix = jnp.einsum("...ck,ckd->...cd", lo, tm["lora_b"].astype(x.dtype))
+        mus = jnp.stack([tm["mu_w"], tm["mu_k"], tm["mu_v"], tm["mu_r"],
+                         tm["mu_g"]]).astype(x.dtype)
+        outs = x[..., None, :] + dx[..., None, :] * (mus + mix)
+        return [outs[..., i, :] for i in range(5)]
+
+    def _tm_proj(self, tm, x, sx):
+        xw, xk, xv, xr, xg = self._ddlerp(tm, x, sx)
+        b = x.shape[0]
+        lead = x.shape[:-1]
+        h, dk = self.n_heads, self.dk
+        w_dec = tm["w0"].astype(jnp.float32) + (
+            jnp.tanh(xw @ tm["wa"].astype(x.dtype)) @ tm["wb"].astype(x.dtype)
+        ).astype(jnp.float32)
+        logw = -jnp.exp(w_dec)                                # [..., d] <= 0
+        r = (xr @ tm["wr"].astype(x.dtype)).reshape(*lead, h, dk)
+        k = (xk @ tm["wk"].astype(x.dtype)).reshape(*lead, h, dk)
+        v = (xv @ tm["wv"].astype(x.dtype)).reshape(*lead, h, dk)
+        g = jax.nn.silu(xg @ tm["wg"].astype(x.dtype))
+        logw = logw.reshape(*lead, h, dk)
+        return r, k, v, g, logw
+
+    def _time_mix_seq(self, tm, x, shift_state, wkv_state):
+        """x: [B,S,d].  Returns (out, last_x, new_wkv_state)."""
+        b, s, d = x.shape
+        sx = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+        r, k, v, g, logw = self._tm_proj(tm, x, sx)
+        o, sT = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), logw,
+                            tm["u"].astype(jnp.float32),
+                            wkv_state, chunk=self.chunk, unroll=self.unroll)
+        o = L.group_norm_heads(o.astype(x.dtype), tm["ln_x"])
+        out = (o.reshape(b, s, d) * g) @ tm["wo"].astype(x.dtype)
+        return out, x[:, -1], sT
+
+    def _channel_mix_seq(self, cm, x, shift_state):
+        sx = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+        dx = sx - x
+        xk = x + dx * cm["mu_k"].astype(x.dtype)
+        xr = x + dx * cm["mu_r"].astype(x.dtype)
+        kk = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(x.dtype)))
+        out = jax.nn.sigmoid(xr @ cm["wr"].astype(x.dtype)) * (
+            kk @ cm["wv"].astype(x.dtype))
+        return out, x[:, -1]
+
+    # -- forward -------------------------------------------------------------
+
+    def _state0(self, b, dtype=jnp.float32):
+        cfg = self.cfg
+        return {
+            "shift_tm": jnp.zeros((cfg.n_layers, b, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((cfg.n_layers, b, cfg.d_model), dtype),
+            "wkv": jnp.zeros((cfg.n_layers, b, self.n_heads, self.dk, self.dk),
+                             jnp.float32),
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def backbone(self, params, h, state):
+        cfg = self.cfg
+
+        def layer_fn(carry, xs):
+            hh = carry
+            lp, st_tm, st_cm, wkv = xs
+            a = L.apply_norm(lp["ln1"], hh, "layernorm")
+            o, n_tm, n_wkv = self._time_mix_seq(lp["time_mix"], a, st_tm, wkv)
+            hh = hh + o
+            c = L.apply_norm(lp["ln2"], hh, "layernorm")
+            o2, n_cm = self._channel_mix_seq(lp["channel_mix"], c, st_cm)
+            return hh + o2, (n_tm, n_cm, n_wkv)
+
+        if self.remat != "none":
+            layer_fn = jax.checkpoint(layer_fn)
+        h, (tm, cm, wkv) = lax.scan(
+            layer_fn, h,
+            (params["layers"], state["shift_tm"].astype(h.dtype),
+             state["shift_cm"].astype(h.dtype), state["wkv"]),
+            unroll=self.unroll)
+        new_state = {"shift_tm": tm.astype(state["shift_tm"].dtype),
+                     "shift_cm": cm.astype(state["shift_cm"].dtype),
+                     "wkv": wkv,
+                     "index": state["index"] + h.shape[1]}
+        return L.apply_norm(params["final_norm"], h, "layernorm"), new_state
+
+    def _embed(self, params, batch):
+        if "embeds" in batch:
+            h = batch["embeds"].astype(self.compute_dtype)
+        else:
+            h = L.embed_tokens(params["embed"], batch["tokens"],
+                               self.compute_dtype)
+        return L.apply_norm(params["ln0"], h, "layernorm")
+
+    def forward(self, params, batch):
+        h = self._embed(params, batch)
+        state = self._state0(h.shape[0], self.compute_dtype)
+        h, _ = self.backbone(params, h, state)
+        logits = (h @ params["lm_head"]["w"].astype(h.dtype)).astype(jnp.float32)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        ce = L.cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    # -- serving -------------------------------------------------------------
+
+    def cache_spec(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        del seq  # O(1) state — the whole point of the SSM family
+        cfg = self.cfg
+        return {
+            "shift_tm": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.d_model), dtype),
+            "shift_cm": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.d_model), dtype),
+            "wkv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, self.n_heads, self.dk, self.dk),
+                jnp.float32),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        spec = self.cache_spec(batch, seq, dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def prefill(self, params, batch, cache_dtype=jnp.bfloat16):
+        h = self._embed(params, batch)
+        state = self._state0(h.shape[0], self.compute_dtype)
+        h, state = self.backbone(params, h, state)
+        logits = (h[:, -1] @ params["lm_head"]["w"].astype(h.dtype)).astype(
+            jnp.float32)
+        state = {**state,
+                 "shift_tm": state["shift_tm"].astype(cache_dtype),
+                 "shift_cm": state["shift_cm"].astype(cache_dtype)}
+        return logits, state
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: [B].  O(1) per token — no KV growth."""
+        h = L.embed_tokens(params["embed"], tokens[:, None],
+                           self.compute_dtype)[:, 0]          # [B, d]
+        h = L.apply_norm(params["ln0"], h, "layernorm")
+
+        def layer_fn(hh, xs):
+            lp, st_tm, st_cm, wkv = xs
+            a = L.apply_norm(lp["ln1"], hh, "layernorm")
+            r, k, v, g, logw = self._tm_proj(lp["time_mix"], a,
+                                             st_tm.astype(a.dtype))
+            o, n_wkv = wkv_step(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), logw,
+                                lp["time_mix"]["u"].astype(jnp.float32), wkv)
+            o = L.group_norm_heads(o.astype(a.dtype), lp["time_mix"]["ln_x"])
+            o = (o.reshape(*hh.shape[:-1], -1) * g) @ lp["time_mix"]["wo"].astype(a.dtype)
+            hh = hh + o
+            c = L.apply_norm(lp["ln2"], hh, "layernorm")
+            dx = st_cm.astype(c.dtype) - c
+            xk = c + dx * lp["channel_mix"]["mu_k"].astype(c.dtype)
+            xr = c + dx * lp["channel_mix"]["mu_r"].astype(c.dtype)
+            kk = jnp.square(jax.nn.relu(xk @ lp["channel_mix"]["wk"].astype(c.dtype)))
+            o2 = jax.nn.sigmoid(xr @ lp["channel_mix"]["wr"].astype(c.dtype)) * (
+                kk @ lp["channel_mix"]["wv"].astype(c.dtype))
+            return hh + o2, (a.astype(st_tm.dtype), c.astype(st_cm.dtype), n_wkv)
+
+        h, (tm, cm, wkv) = lax.scan(
+            layer_fn, h, (params["layers"], cache["shift_tm"],
+                          cache["shift_cm"], cache["wkv"]),
+            unroll=self.unroll)
+        h = L.apply_norm(params["final_norm"], h, "layernorm")
+        logits = (h @ params["lm_head"]["w"].astype(h.dtype)).astype(jnp.float32)
+        return logits, {"shift_tm": tm, "shift_cm": cm, "wkv": wkv,
+                        "index": cache["index"] + 1}

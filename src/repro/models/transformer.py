@@ -1,0 +1,267 @@
+"""Decoder-only (and encoder-only) transformer LM.
+
+Structure is scan-over-layers with stacked per-layer params (compact HLO,
+fast multi-pod compiles) and optional remat.  Supports:
+  * dense / MoE FFN, GQA / MQA / MHA, RoPE, tied embeddings, QKV bias
+  * ``forward`` for training (tokens or precomputed frontend embeddings)
+  * ``prefill`` returning last-token logits + KV cache
+  * ``decode_step`` against a seq-sharded KV cache (the DockerSSD
+    "compute-at-the-KV-shard" schedule; see layers.decode_attention)
+Cross-entropy is computed seq-chunked so the [B,S,V] logits tensor is
+never materialized (vocab up to 257k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+AUX_LOSS_COEF = 0.01
+
+
+class TransformerLM:
+    def __init__(self, cfg, compute_dtype=jnp.bfloat16, q_chunk: int = 1024,
+                 remat: str = "full", loss_chunk: int = 256,
+                 moe_no_drop: bool = False, unroll_inner: bool = False,
+                 kv_quant: str = "none", moe_impl: str = "dense"):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.q_chunk = q_chunk
+        self.remat = remat
+        self.loss_chunk = loss_chunk
+        self.moe_no_drop = moe_no_drop
+        self.unroll = unroll_inner
+        self.kv_quant = kv_quant
+        self.moe_impl = moe_impl
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, rng, dtype=jnp.float32) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_head, k_norm, k_layers = jax.random.split(rng, 4)
+
+        def init_layer(key):
+            ks = jax.random.split(key, 4)
+            p = {
+                "attn_norm": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+                "attn": L.init_attention(ks[1], cfg, dtype),
+                "mlp_norm": L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+            }
+            p["mlp"] = (L.init_moe(ks[3], cfg, dtype) if cfg.is_moe
+                        else L.init_mlp(ks[3], cfg, dtype))
+            return p
+
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        params = {
+            "embed": L.init_embed(k_embed, cfg, dtype),
+            "final_norm": L.init_norm(k_norm, cfg.d_model, cfg.norm, dtype),
+            "layers": jax.vmap(init_layer)(layer_keys),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dtype)}
+        return params
+
+    # -- blocks -------------------------------------------------------------
+
+    def _layer(self, h, lp, positions):
+        cfg = self.cfg
+        a = L.apply_norm(lp["attn_norm"], h, cfg.norm)
+        h = h + L.attention_block(lp["attn"], a, cfg, positions=positions,
+                                  q_chunk=self.q_chunk, unroll=self.unroll)
+        m = L.apply_norm(lp["mlp_norm"], h, cfg.norm)
+        if cfg.is_moe:
+            if self.moe_impl == "shardmap":
+                mo, aux = L.apply_moe_shardmap(lp["mlp"], m, cfg,
+                                               no_drop=self.moe_no_drop)
+            else:
+                mo, aux = L.apply_moe(lp["mlp"], m, cfg,
+                                      no_drop=self.moe_no_drop)
+        else:
+            mo, aux = L.apply_mlp(lp["mlp"], m, cfg.act), jnp.zeros((), jnp.float32)
+        return h + mo, aux
+
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        policy = None
+        if self.remat == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+
+    def backbone(self, params, h, positions):
+        """Run the layer stack.  h: [B,S,d] compute_dtype."""
+        layer_fn = self._maybe_remat(
+            lambda hh, lp: self._layer(hh, lp, positions))
+
+        def body(hh, lp):
+            hh, aux = layer_fn(hh, lp)
+            return hh, aux
+
+        h, auxs = lax.scan(body, h, params["layers"], unroll=self.unroll)
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm)
+        return h, jnp.sum(auxs)
+
+    def _inputs_to_h(self, params, batch):
+        if "embeds" in batch:
+            return batch["embeds"].astype(self.compute_dtype)
+        return L.embed_tokens(params["embed"], batch["tokens"], self.compute_dtype)
+
+    # -- training forward / loss --------------------------------------------
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full logits (small vocab / tests).  Returns (logits_f32, aux)."""
+        h = self._inputs_to_h(params, batch)
+        b, s, _ = h.shape
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+        h, aux = self.backbone(params, h, positions)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           self.cfg.tie_embeddings)
+        return logits, aux
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        h = self._inputs_to_h(params, batch)
+        b, s, _ = h.shape
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+        h, aux = self.backbone(params, h, positions)
+        labels = batch["labels"]
+        ce = self._chunked_ce(params, h, labels)
+        total = ce + AUX_LOSS_COEF * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def _chunked_ce(self, params, h, labels):
+        """Seq-chunked CE: logits materialized one chunk at a time."""
+        cfg = self.cfg
+        b, s, d = h.shape
+        ck = min(self.loss_chunk, s)
+        n = s // ck
+        if s % ck:
+            n, ck = 1, s
+
+        def chunk(carry, idx):
+            hh = lax.dynamic_slice_in_dim(h, idx * ck, ck, axis=1)
+            ll = lax.dynamic_slice_in_dim(labels, idx * ck, ck, axis=1)
+            logits = L.unembed(params["embed"], params.get("lm_head"), hh,
+                               cfg.tie_embeddings)
+            mask = (ll != -1).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ll[..., None].clip(0),
+                                       axis=-1)[..., 0]
+            nll = jnp.sum((lse - gold) * mask)
+            return (carry[0] + nll, carry[1] + jnp.sum(mask)), None
+
+        chunk = self._maybe_remat(chunk) if self.remat != "none" else chunk
+        (nll, cnt), _ = lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 jnp.arange(n), unroll=self.unroll)
+        return nll / jnp.maximum(cnt, 1.0)
+
+    # -- serving ------------------------------------------------------------
+
+    def cache_spec(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.hd)
+        if self.kv_quant == "int8":
+            sshape = shape[:-1]
+            return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                    "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                    "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                    "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                    "index": jax.ShapeDtypeStruct((), jnp.int32)}
+        return {"k": jax.ShapeDtypeStruct(shape, dtype),
+                "v": jax.ShapeDtypeStruct(shape, dtype),
+                "index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        spec = self.cache_spec(batch, seq, dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def prefill(self, params, batch, cache_dtype=jnp.bfloat16):
+        """Returns (last-token logits [B,V] f32, cache)."""
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch)
+        b, s, _ = h.shape
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+
+        def body(hh, lp):
+            a = L.apply_norm(lp["attn_norm"], hh, cfg.norm)
+            q, k, v = L._qkv(lp["attn"], a, cfg)
+            if cfg.rope:
+                q = L.apply_rope(q, positions, cfg.rope_theta)
+                k = L.apply_rope(k, positions, cfg.rope_theta)
+            o = L.chunked_attention(q, k, v, causal=cfg.causal,
+                                    q_chunk=self.q_chunk,
+                                    positions_q=positions,
+                                    positions_k=positions, unroll=self.unroll)
+            hh = hh + o.reshape(b, s, -1) @ lp["attn"]["wo"].astype(hh.dtype)
+            m = L.apply_norm(lp["mlp_norm"], hh, cfg.norm)
+            if cfg.is_moe:
+                mo, _ = L.apply_moe(lp["mlp"], m, cfg,
+                                    no_drop=self.moe_no_drop)
+            else:
+                mo = L.apply_mlp(lp["mlp"], m, cfg.act)
+            kc = jnp.swapaxes(k, 1, 2).astype(cache_dtype)   # [B,Hkv,S,D]
+            vc = jnp.swapaxes(v, 1, 2).astype(cache_dtype)
+            return hh + mo, (kc, vc)
+
+        body = self._maybe_remat(body)
+        h, (kc, vc) = lax.scan(body, h, params["layers"], unroll=self.unroll)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h[:, -1:],
+                           cfg.tie_embeddings)[:, 0]
+        cache = {"k": kc, "v": vc,
+                 "index": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """One token for every sequence in the batch.
+
+        tokens: [B] int32.  cache: {"k": [L,B,Hkv,S,D], "v": ..., "index"}.
+        Returns (logits [B,V] f32, new cache).
+        """
+        cfg = self.cfg
+        index = cache["index"]
+        h = L.embed_tokens(params["embed"], tokens[:, None], self.compute_dtype)
+        q8 = self.kv_quant == "int8"
+
+        def body(hh, xs):
+            if q8:
+                lp, kc, vc, ksc, vsc = xs
+                a = L.apply_norm(lp["attn_norm"], hh, cfg.norm)
+                o, kc, vc, ksc, vsc = L.decode_attention_q8(
+                    lp["attn"], a, cfg, kc, vc, ksc, vsc, index)
+            else:
+                lp, kc, vc = xs
+                a = L.apply_norm(lp["attn_norm"], hh, cfg.norm)
+                o, kc, vc = L.decode_attention(lp["attn"], a, cfg, kc, vc,
+                                               index)
+            hh = hh + o
+            m = L.apply_norm(lp["mlp_norm"], hh, cfg.norm)
+            if cfg.is_moe:
+                mo, _ = L.apply_moe(lp["mlp"], m, cfg, no_drop=True)
+            else:
+                mo = L.apply_mlp(lp["mlp"], m, cfg.act)
+            if q8:
+                return hh + mo, (kc, vc, ksc, vsc)
+            return hh + mo, (kc, vc)
+
+        if q8:
+            h, (kc, vc, ksc, vsc) = lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]),
+                unroll=self.unroll)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc,
+                         "index": index + 1}
+        else:
+            h, (kc, vc) = lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"]),
+                unroll=self.unroll)
+            new_cache = {"k": kc, "v": vc, "index": index + 1}
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           cfg.tie_embeddings)[:, 0]
+        return logits, new_cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, clip_by_global_norm  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

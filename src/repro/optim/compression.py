@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick for 1000+ node scale).
+
+Int8 row-wise quantization with **error feedback** (the residual of each
+step is added to the next step's gradient), plus a cheap bf16 mode.
+On real hardware this halves/quarters the bytes on the ``pod``-axis
+gradient all-reduce; here the quantize/dequantize pipeline is exact code
+(property-tested: with error feedback the *accumulated* update converges
+to the true gradient sum).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x):
+    """Row-wise symmetric int8 quantization.  x: f32[...]."""
+    flat = x.reshape(x.shape[0], -1) if x.ndim > 1 else x.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale, shape):
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def compress_grads(grads, residuals, mode: str = "int8"):
+    """Compress+decompress each gradient leaf with error feedback.
+
+    Returns (decompressed_grads, new_residuals).  The decompressed value
+    is what the (cheaper) collective would deliver; the residual carries
+    the quantization error into the next step.
+    """
+    if mode == "none":
+        return grads, residuals
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if mode == "bf16":
+            out = g32.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            q, s = _quant_int8(g32)
+            out = _dequant_int8(q, s, g32.shape)
+        return out.astype(g.dtype), g32 - out
+
+    out = jax.tree.map(one, grads, residuals)
+    dec = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return dec, res
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params, mode: str) -> int:
+    """Bytes the gradient all-reduce would move under ``mode``."""
+    per = {"none": 4, "bf16": 2, "int8": 1}[mode]
+    return sum(p.size * per for p in jax.tree.leaves(params))

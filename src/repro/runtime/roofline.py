@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 / chip, 819 GB/s HBM / chip,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes            / (chips * HBM_BW)
+  collective term = collective_bytes     / (chips * ICI_BW)
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are parsed
+out of the (post-SPMD) compiled HLO text by summing output operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the compiled module.
+
+    HLO lines look like ``%all-reduce.119 = f32[16,256,49155]{2,1,0}
+    all-reduce(%x), ...`` — the *op* is the token on the right-hand side
+    of ``=``; the left-hand side is the instruction name (which may also
+    contain the op string), so we only scan the RHS.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        for kind in _COLLECTIVES:
+            pos = rhs.find(f" {kind}(")
+            if pos < 0:
+                pos = rhs.find(f" {kind}-start(")
+            if pos < 0:
+                continue
+            head = rhs[:pos + 1]
+            nbytes = sum(_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE_RE.findall(head))
+            out[kind] += nbytes
+            out["count"] += 1
+            break
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float = 0.0           # 6*N(active)*D
+    bytes_per_device: float = 0.0      # from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate = max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the estimated step
+        time (== MFU bound when compute-dominated)."""
+        if self.step_time_s == 0:
+            return 0.0
+        return (self.model_flops / self.step_time_s) / (self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bottleneck=self.bottleneck,
+                 step_time_s=self.step_time_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(compiled, lowered_text: Optional[str], arch: str, shape: str,
+            mesh_name: str, chips: int, model_flops: float) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    mem = compiled.memory_analysis()
+    bpd = 0.0
+    if mem is not None:
+        bpd = (getattr(mem, "argument_size_in_bytes", 0) +
+               getattr(mem, "output_size_in_bytes", 0) +
+               getattr(mem, "temp_size_in_bytes", 0))
+    return RooflineTerms(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                         hlo_flops=flops, hlo_bytes=nbytes,
+                         coll_bytes=float(total_coll), coll_breakdown=coll,
+                         model_flops=model_flops, bytes_per_device=bpd)
+
+
+def model_flops_estimate(n_active_params: int, tokens: int,
+                         kind: str) -> float:
+    """6*N*D for training; 2*N*D for inference forward."""
+    if kind == "train":
+        return 6.0 * n_active_params * tokens
+    return 2.0 * n_active_params * tokens

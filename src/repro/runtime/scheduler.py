@@ -1,0 +1,130 @@
+"""Continuous-batching request scheduler over the tiered PagedServer.
+
+Production serving needs more than a static batch: requests arrive and
+finish at different times.  This scheduler implements the standard
+continuous-batching loop on top of the paper's tiered KV mechanism:
+
+  * admission control — a request is admitted when the HBM window can
+    pin its projected working set alongside the active batch
+    (otherwise it waits; the flash tier holds preempted sequences);
+  * iteration-level scheduling — every step decodes the current active
+    set; finished sequences (EOS or max_tokens) free their pages
+    immediately and a waiting request takes the slot;
+  * tail telemetry — per-request latency and the tier counters, the
+    serving-side analogue of mini-docker's container monitoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_tokens: int
+    eos_id: Optional[int] = None
+    # telemetry
+    t_arrive: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return (len(self.output) >= self.max_tokens or
+                (self.eos_id is not None and self.output and
+                 self.output[-1] == self.eos_id))
+
+
+class ContinuousBatcher:
+    """Iteration-level scheduler for a PagedServer."""
+
+    def __init__(self, server, *, max_active: int = 8):
+        self.server = server
+        self.max_active = max_active
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_arrive = time.monotonic()
+        self.waiting.append(req)
+
+    def _pages_needed(self, req: Request) -> int:
+        page = self.server.caches[0].page
+        return -(-(len(req.prompt) + req.max_tokens) // page)
+
+    def _window_has_room(self, req: Request) -> bool:
+        cache = self.server.caches[0]
+        pinned_now = sum(self._pages_needed(r) for r in self.active.values())
+        return pinned_now + self._pages_needed(req) <= cache.hbm_pages
+
+    def _admit(self):
+        while (self.waiting and len(self.active) < self.max_active and
+               self._window_has_room(self.waiting[0])):
+            req = self.waiting.popleft()
+            last = self.server.add_request(req.rid, req.prompt)
+            req.t_first = time.monotonic()
+            req.output.append(int(np.argmax(np.asarray(last))))
+            self.active[req.rid] = req
+
+    # -- the serving loop -----------------------------------------------------
+
+    def step(self) -> int:
+        """One scheduler iteration: admit, decode the active set once,
+        retire finished sequences.  Returns tokens produced."""
+        self._admit()
+        # retire anything already done from its prefill token
+        self._retire()
+        if not self.active:
+            return 0
+        out = self.server.decode(1, seqs=list(self.active))
+        n = 0
+        for rid, toks in out.items():
+            self.active[rid].output.extend(toks)
+            n += len(toks)
+        self._retire()
+        return n
+
+    def _retire(self):
+        for rid in [r for r, q in self.active.items() if q.done]:
+            req = self.active.pop(rid)
+            req.t_done = time.monotonic()
+            self.finished.append(req)
+            # free the sequence's pages in every layer's cache
+            for cache in self.server.caches:
+                self._free_sequence(cache, rid)
+            self.server._seqs.remove(rid)
+            self.server._pending.pop(rid, None)
+
+    @staticmethod
+    def _free_sequence(cache, seq_id: int):
+        for lkey in [k for k in list(cache._resident) if k[0] == seq_id]:
+            cache._free.append(cache._resident.pop(lkey))
+        for lkey in [k for k in list(cache._host) if k[0] == seq_id]:
+            cache._host.pop(lkey)
+        cache._lengths.pop(seq_id, None)
+
+    def run_to_completion(self, max_iters: int = 10_000) -> dict:
+        it = 0
+        while (self.waiting or self.active) and it < max_iters:
+            self.step()
+            it += 1
+        lat = [r.t_done - r.t_arrive for r in self.finished]
+        ttft = [r.t_first - r.t_arrive for r in self.finished]
+        return {
+            "requests": len(self.finished),
+            "iters": it,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "tier": self.server.tier_stats(),
+        }

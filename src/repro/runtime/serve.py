@@ -1,0 +1,153 @@
+"""Serving runtime.
+
+Two paths:
+
+  * ``make_serving_fns`` — production path: jitted prefill/decode with
+    the D-Cache sharding rules (KV sequence-sharded over the ``model``
+    axis = the storage pool; see runtime/sharding.py).  Used by
+    ``launch/serve.py`` and the dry-run.
+  * ``PagedServer`` — the paper's tiered mechanism made concrete on one
+    device: per-layer **PagedKVCache** (HBM window + host "flash" tier,
+    prefetch) consumed by the Pallas ``paged_attention`` kernel.  The
+    layer loop runs in Python so each layer reads its own page table —
+    this is the ISP-container serving loop of the case study.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.kv_tier import PagedKVCache
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.runtime import sharding as shd
+
+
+def make_serving_fns(model, mesh=None):
+    """Returns (prefill_fn, decode_fn), jitted; sharded when mesh given."""
+    if mesh is None:
+        return (jax.jit(model.prefill), jax.jit(model.decode_step,
+                                                donate_argnums=(1,)))
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          shd.param_specs(mesh, params_shape))
+
+    prefill = jax.jit(model.prefill, in_shardings=(pshard, None))
+
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    decode_j = jax.jit(decode, donate_argnums=(1,),
+                       in_shardings=(pshard, None, None))
+    return prefill, decode_j
+
+
+class PagedServer:
+    """Tiered-KV serving for a TransformerLM on one device (demo scale).
+
+    Each layer owns a PagedKVCache; decode attention goes through the
+    Pallas paged_attention kernel against the HBM window, with next-step
+    prefetch after every token (compute/page-in overlap model).
+    """
+
+    def __init__(self, model, params, *, page_size: int = 16,
+                 hbm_pages_per_layer: int = 64, dtype=jnp.float32):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.dtype = dtype
+        cfg = self.cfg
+        self.caches = [
+            PagedKVCache(page_size=page_size,
+                         hbm_pages=hbm_pages_per_layer,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                         dtype=dtype)
+            for _ in range(cfg.n_layers)]
+        self._seqs: List[int] = []
+        self._pending: Dict[int, int] = {}
+
+    # -- request handling -------------------------------------------------------
+
+    def add_request(self, seq_id: int, prompt: np.ndarray):
+        """Prefill a prompt into the paged caches, token by token
+        (teacher-forcing the pages; fine at demo scale)."""
+        for cache in self.caches:
+            cache.add_sequence(seq_id)
+        self._seqs.append(seq_id)
+        last = None
+        for tok in prompt:
+            last = self._step({seq_id: int(tok)})[seq_id]
+        self._pending[seq_id] = int(jnp.argmax(last))
+        return last
+
+    def decode(self, n_tokens: int, greedy: bool = True,
+               seqs: Optional[List[int]] = None) -> Dict[int, list]:
+        """Batched decode across live sequences (or a subset — the HBM
+        window only needs to hold the *active* batch's working set; idle
+        sequences spill to the flash tier)."""
+        active = self._seqs if seqs is None else seqs
+        out = {s: [] for s in active}
+        # continue from the tokens pending after prefill
+        cur = {s: self._pending.get(s, 0) for s in active}
+        for _ in range(n_tokens):
+            logits = self._step(cur)
+            for s in active:
+                nxt = int(jnp.argmax(logits[s]))
+                out[s].append(nxt)
+                cur[s] = nxt
+        self._pending.update(cur)
+        return out
+
+    # -- one batched token step through the layer loop ----------------------------
+
+    def _step(self, tokens: Dict[int, int]) -> Dict[int, jnp.ndarray]:
+        cfg = self.cfg
+        seqs = list(tokens.keys())
+        params = self.params
+        tok = jnp.asarray([tokens[s] for s in seqs], jnp.int32)
+        h = L.embed_tokens(params["embed"], tok[:, None], self.dtype)
+        lengths_before = {s: self.caches[0].length(s) for s in seqs}
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            cache = self.caches[li]
+            a = L.apply_norm(lp["attn_norm"], h, cfg.norm)
+            q, k, v = L._qkv(lp["attn"], a, cfg)
+            pos = jnp.asarray([[lengths_before[s]] for s in seqs], jnp.int32)
+            if cfg.rope:
+                q = L.apply_rope(q, pos, cfg.rope_theta)
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+            # append the new kv into the paged tier
+            for bi, s in enumerate(seqs):
+                cache.append_token(s, k[bi, 0], v[bi, 0])
+            k_pages, v_pages, page_table, lengths = cache.kernel_view(seqs)
+            o = ops.paged_attention(q[:, 0].astype(self.dtype), k_pages,
+                                    v_pages, page_table, lengths)
+            h = h + (o.reshape(len(seqs), 1, -1) @
+                     lp["attn"]["wo"].astype(h.dtype))
+            m = L.apply_norm(lp["mlp_norm"], h, cfg.norm)
+            if cfg.is_moe:
+                mo, _ = L.apply_moe(lp["mlp"], m, cfg, no_drop=True)
+            else:
+                mo = L.apply_mlp(lp["mlp"], m, cfg.act)
+            h = h + mo
+            cache.prefetch(seqs[0])         # overlap next step's page-ins
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           cfg.tie_embeddings)[:, 0]
+        return {s: logits[i] for i, s in enumerate(seqs)}
+
+    # -- telemetry -----------------------------------------------------------------
+
+    def tier_stats(self) -> Dict[str, int]:
+        agg = {}
+        for c in self.caches:
+            for k, v in vars(c.stats).items():
+                agg[k] = agg.get(k, 0) + v
+        agg["residency"] = float(np.mean([c.residency()
+                                          for c in self.caches]))
+        return agg

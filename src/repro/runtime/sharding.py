@@ -1,0 +1,226 @@
+"""Sharding rules: map param/activation pytrees to PartitionSpecs.
+
+Axis roles:
+  * ``model`` — tensor parallelism (heads/ffn/vocab/experts) and, for
+    decode, the **KV-cache sequence dimension**: each model shard is one
+    "DockerSSD" of the computing-enabled storage pool, owning a
+    contiguous KV extent (the paper's D-Cache placement).
+  * ``data`` (+ ``pod`` when present) — batch data parallelism and
+    ZeRO-3-style FSDP of the weights.
+
+Every axis assignment is divisibility-guarded: if a dim does not divide
+by the axis size the next-smaller axis subset (or replication) is used,
+so the same rules serve all 10 archs and both production meshes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh):
+    return fsdp_axes(mesh)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def axes_if_div(mesh: Mesh, dim: int, axes) -> Optional[tuple]:
+    """Largest prefix-subset of ``axes`` whose product divides ``dim``."""
+    axes = tuple(axes)
+    while axes:
+        if dim % _axes_size(mesh, axes) == 0:
+            return axes
+        axes = axes[:-1]
+    return None
+
+
+def _ax(mesh: Mesh, dim: int, *axes) -> Any:
+    got = axes_if_div(mesh, dim, axes)
+    if got is None:
+        return None
+    return got if len(got) > 1 else got[0]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w", "wr", "wg",
+                 "in_proj", "lora_a", "wa"}
+_ROW_PARALLEL = {"wo", "w_down", "wv_cm", "out_proj", "wb"}
+_REPLICATED = {"scale", "bias", "b_up", "b_down", "bq", "bk", "bv",
+               "router", "w0", "u", "ln_x", "a_log", "d_skip", "dt_bias",
+               "conv_b", "lora_b", "mu_x", "mu_w", "mu_k", "mu_v", "mu_r",
+               "mu_g"}
+
+
+def param_spec(mesh: Mesh, path: Sequence[str], shape) -> P:
+    """Spec for one parameter leaf given its key path and shape."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    fa = fsdp_axes(mesh)
+    stacked = "layers" in path            # leading layer dim from scan-stack
+    core = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+
+    def done(*spec):
+        return P(*(lead + spec))
+
+    # --- special cases -----------------------------------------------------
+    if parent == "embed" and name == "table":
+        v, d = core
+        s0 = _ax(mesh, v, "model")
+        if s0 is not None:
+            return done(s0, _ax(mesh, d, *fa))
+        return done(None, _ax(mesh, d, "model"))
+    if parent == "lm_head" and name == "w":
+        d, v = core
+        s1 = _ax(mesh, v, "model")
+        if s1 is not None:
+            return done(_ax(mesh, d, *fa), s1)
+        return done(_ax(mesh, d, "model"), None)
+    if parent == "mlp" and len(core) == 3:            # MoE expert weights
+        e = core[0]
+        se = _ax(mesh, e, "model")
+        return done(se, _ax(mesh, core[1], *fa), None)
+    if name == "conv_w":                              # [D_CONV, conv_dim]
+        return done(None, _ax(mesh, core[-1], "model"))
+    # rwkv channel-mix wv is row-parallel [d_ff, d]
+    if name == "wv" and parent == "channel_mix":
+        return done(_ax(mesh, core[0], "model"), _ax(mesh, core[1], *fa))
+    if name in _REPLICATED or len(core) < 2:
+        return done(*([None] * len(core)))
+    if name in _ROW_PARALLEL:
+        return done(_ax(mesh, core[0], "model"), _ax(mesh, core[1], *fa))
+    if name in _COL_PARALLEL:
+        return done(_ax(mesh, core[0], *fa), _ax(mesh, core[1], "model"))
+    # default: replicate
+    return done(*([None] * len(core)))
+
+
+def _key_of(entry) -> str:
+    return getattr(entry, "key", getattr(entry, "name", str(entry)))
+
+
+def param_specs(mesh: Mesh, params) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs
+    or concrete arrays)."""
+    def visit(path, leaf):
+        keys = tuple(_key_of(p) for p in path)
+        return param_spec(mesh, keys, leaf.shape)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_shardings(mesh: Mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params))
+
+
+def serve_param_specs(mesh: Mesh, params) -> Any:
+    """Serving-time param specs: TP (model axis) only — no ZeRO/FSDP
+    sharding over the data axes.  Decode reads every weight once per
+    token; FSDP would force a full parameter all-gather per step (the
+    dominant collective in the baseline measurement, EXPERIMENTS.md
+    §Perf).  Serving replicates over data/pod and shards over model."""
+    fa = set(fsdp_axes(mesh))
+
+    def strip(spec):
+        def keep(ax):
+            if ax is None:
+                return None
+            if isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a not in fa)
+                return kept if len(kept) > 1 else (kept[0] if kept else None)
+            return None if ax in fa else ax
+        return P(*(keep(ax) for ax in spec))
+
+    return jax.tree.map(strip, param_specs(mesh, params),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cast_float_specs(tree, dtype):
+    """ShapeDtypeStruct tree with float leaves cast (serving stores bf16)."""
+    import jax.numpy as jnp
+
+    def one(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, dtype)
+        return l
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, specs) -> Any:
+    """Specs for a train/prefill input batch dict."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        s0 = _ax(mesh, b, *ba)
+        rest = [None] * (len(leaf.shape) - 1)
+        if len(leaf.shape) == 3:  # embeds [B,S,d] — shard d over model
+            rest[-1] = _ax(mesh, leaf.shape[-1], "model")
+        return P(s0, *rest)
+
+    return jax.tree.map(one, specs)
+
+
+def cache_spec_shardings(mesh: Mesh, cache_specs, multi_pod_seq: bool = True):
+    """Specs for a decode cache pytree.
+
+    KV tensors [L, B, Hkv, S, D]: batch -> data axes, **sequence -> model
+    (+ pod)** — the D-Cache storage-pool placement.  SSM/conv/shift states:
+    batch -> data axes, feature dim -> model when divisible.
+    """
+    ba = batch_axes(mesh)
+    seq_axes = ("pod", "model") if ("pod" in mesh.axis_names and
+                                    multi_pod_seq) else ("model",)
+
+    def one(path, leaf):
+        keys = tuple(_key_of(p) for p in path)
+        shape = leaf.shape
+        if keys and keys[-1] in ("k", "v") and len(shape) == 5:
+            l, b, hkv, s, d = shape
+            sb = _ax(mesh, b, "data")
+            ss = _ax(mesh, s, *seq_axes)
+            return P(None, sb, None, ss, None)
+        if keys and keys[-1] in ("k_scale", "v_scale") and len(shape) == 4:
+            l, b, hkv, s = shape
+            return P(None, _ax(mesh, b, "data"), None,
+                     _ax(mesh, s, *seq_axes))
+        if keys and keys[-1] == "index":
+            return P()
+        # states: [L, B, ...feature...]
+        if len(shape) >= 3:
+            sb = _ax(mesh, shape[1], *ba)
+            rest = [None] * (len(shape) - 2)
+            rest[-1] = _ax(mesh, shape[-1], "model")
+            return P(None, sb, *rest)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def decode_token_spec(mesh: Mesh, batch: int) -> P:
+    return P(_ax(mesh, batch, "data"))
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,123 @@
+"""Validation of the analytical LLM-pool model (Fig 12/13) and the ISP
+cost model (Fig 3/11) against the paper's claims."""
+import numpy as np
+import pytest
+
+from repro.core import analytical as A
+from repro.core import isp_perf as I
+
+
+@pytest.fixture(scope="module")
+def pool_results():
+    return A.evaluate_pool()
+
+
+def test_fig12b_headline_ratios(pool_results):
+    r = A.headline_ratios(pool_results)
+    assert 6.0 <= r["d_cache_vs_h_cache"] <= 10.0          # paper: 7.9x
+    assert 300 <= r["h_cache_vs_h_nocache"] <= 560         # paper: 421x
+    assert 3400 <= r["d_cache_vs_d_nocache"] <= 6200       # paper: 4.6Kx
+    assert 2300 <= r["d_cache_vs_h_nocache"] <= 4300       # paper: 3.2Kx
+    assert 1.4 <= r["d_nocache_slowdown_vs_h"] <= 2.0      # paper: 1.7x
+
+
+def test_fig12a_parallelism_patterns(pool_results):
+    """Cache -> tensor parallel; NoCache on hosts -> pipeline-heavy."""
+    for name, row in pool_results.items():
+        dp, tp, pp = row["configs"]["H-Cache"]["parallelism"]
+        assert tp >= pp and tp >= dp, (name, "H-Cache", (dp, tp, pp))
+        dp, tp, pp = row["configs"]["D-Cache"]["parallelism"]
+        assert tp >= pp and tp >= dp, (name, "D-Cache", (dp, tp, pp))
+    big = ["gopher-280B", "turing-530B", "palm-540B", "megatron-1T"]
+    for name in big:
+        dp, tp, pp = pool_results[name]["configs"]["H-NoCache"]["parallelism"]
+        assert pp > 1, (name, (dp, tp, pp))
+
+
+def test_fig13a_crossovers():
+    rl = A.seq_sensitivity("lamda-137B")
+    rm = A.seq_sensitivity("megatron-1T")
+    assert A.crossover_point(rl) == 256                     # paper: 256
+    assert 256 <= A.crossover_point(rm) <= 2048             # paper: 1024
+    # converged speedup ~9.5x
+    assert 8.0 <= rl[-1]["speedup"] <= 12.5
+    # below crossover the host wins (DockerSSD ~60% of host perf)
+    assert rl[0]["speedup"] < 1.0
+
+
+def test_fig13_smaller_models_benefit_more():
+    """Same (moderate) seq length -> the smaller model is already past its
+    crossover and shows greater speedup (paper: larger models spend more
+    time in MLPs, delaying the KV-cache benefit)."""
+    rl = {r["seq_len"]: r["speedup"] for r in A.seq_sensitivity("lamda-137B")}
+    rm = {r["seq_len"]: r["speedup"] for r in A.seq_sensitivity("megatron-1T")}
+    for s in (256, 512):
+        assert rl[s] > rm[s], (s, rl[s], rm[s])
+
+
+def test_fig13cd_batch_sensitivity():
+    rows = A.batch_sensitivity("lamda-137B", seq_len=1024)
+    sp = [r["speedup"] for r in rows]
+    assert max(sp) <= 1.6                                   # paper: <=~1.3x
+    assert sp == sorted(sp)                                 # grows w/ batch
+
+
+def test_generation_time_monotonic_in_seq():
+    m = A.POOL_LLMS[0]
+    ts = [A.generation_time(m, seq_len=s, batch=16, dp=1, tp=16, pp=1,
+                            cache=True, device="ssd")["total"]
+          for s in (1024, 4096, 16384)]
+    assert ts[0] < ts[1] < ts[2]
+
+
+# ---------------------------------------------------------------------------
+# ISP model (Fig 3 / Fig 11)
+# ---------------------------------------------------------------------------
+
+
+def test_fig11_headline_ratios():
+    r = I.headline_ratios()
+    assert 1.4 <= r["dvirtfw_vs_pisp"] <= 1.8               # paper: 1.6x
+    assert 1.5 <= r["dvirtfw_vs_dnaive"] <= 2.1             # paper: 1.8x
+    assert 1.4 <= r["dvirtfw_vs_dfullos"] <= 1.8            # paper: 1.6x
+    assert 1.1 <= r["dvirtfw_vs_host"] <= 1.5               # paper: 1.3x
+    assert 0.10 <= r["pispv_vs_pispr"] <= 0.17              # paper: 13.7%
+    assert 0.04 <= r["dfullos_over_pispv"] <= 0.15          # paper: 9.3%
+    assert 0.08 <= r["dnaive_over_dfullos"] <= 0.18         # paper: 12.8%
+
+
+def test_fig3_breakdown():
+    r = I.headline_ratios()
+    assert 0.30 <= r["host_storage_share"] <= 0.46          # paper: 38%
+    assert 0.35 <= r["pisp_comm_share"] <= 0.50             # paper: 43%
+    assert 0.40 <= r["pisp_storage_reduction"] <= 0.60      # paper: 50%
+    assert r["pisp_vs_host"] > 1.0                          # P.ISP slower e2e
+
+
+def test_table2_constants():
+    assert len(I.WORKLOADS) == 13
+    by = {f"{w.program}-{w.name}": w for w in I.WORKLOADS}
+    assert by["embed-rm1"].io_size_gb == 1.3
+    assert by["mariadb-tpch4"].syscalls == 1.1e6
+    assert by["vsftpd-fileup"].tcp_packets == 1.2e6
+
+
+def test_all_six_models_complete():
+    out = I.evaluate_all()
+    assert len(out) == 13
+    for wl, models in out.items():
+        assert set(models) == set(I.MODELS)
+        for m, compos in models.items():
+            assert set(compos) == set(I.COMPONENTS)
+            assert all(v >= 0 for v in compos.values())
+
+
+def test_dvirtfw_component_story():
+    """D-VirtFW: no LBA-set, no Kernel-ctx, tiny System."""
+    w = I.WORKLOADS[0]
+    d = I.components(w, "D-VirtFW")
+    p = I.components(w, "P.ISP-V")
+    f = I.components(w, "D-FullOS")
+    assert d["LBA-set"] == 0 and d["Kernel-ctx"] == 0
+    assert p["LBA-set"] > 0 and p["Kernel-ctx"] > 0
+    assert d["System"] < f["System"] / 10

@@ -1,0 +1,274 @@
+"""Unit tests for the DockerSSD core layer."""
+import pytest
+
+from repro.core import (DockerSSDNode, EtherONDriver, EthernetFrame,
+                        ImageManifest, LambdaFS, LockHeld, MPUViolation,
+                        PRIVATE_NS, SHARABLE_NS, StoragePool, TCPConn,
+                        UPCALL_SLOTS, VirtualFW, make_blob, register_app)
+from repro.core.ether_on import DockerSSDEndpoint, OPC_RECEIVE, OPC_TRANSMIT
+from repro.core.virtual_fw import (IO_SYSCALLS, NETWORK_SYSCALLS,
+                                   THREAD_SYSCALLS)
+
+
+# ---------------------------------------------------------------------------
+# Ether-oN
+# ---------------------------------------------------------------------------
+
+
+def _pair():
+    drv = EtherONDriver("10.0.0.1")
+    dev = DockerSSDEndpoint("10.0.0.2")
+    drv.attach(dev)
+    return drv, dev
+
+
+def test_etheron_transmit_roundtrip():
+    drv, dev = _pair()
+    got = []
+    dev.set_handler(lambda fr: got.append(fr.payload) or None)
+    drv.transmit(EthernetFrame("10.0.0.1", "10.0.0.2", b"hello isp"))
+    assert got == [b"hello isp"]
+    assert drv.stats.tx_commands == 1
+    assert drv.stats.pages_allocated >= 1
+
+
+def test_etheron_upcall_and_repost():
+    drv, dev = _pair()
+    assert drv.outstanding_slots("10.0.0.2") == UPCALL_SLOTS
+    dev.send_to_host(b"result", "10.0.0.1")
+    assert drv.poll().payload == b"result"
+    # slot was consumed and immediately re-posted
+    assert drv.outstanding_slots("10.0.0.2") == UPCALL_SLOTS
+
+
+def test_etheron_backpressure_burst():
+    """A burst larger than the slot pool must still deliver in order."""
+    drv, dev = _pair()
+    payload = bytes(range(256)) * 40          # ~10KB -> 7 MTU frames
+    dev.send_to_host(payload, "10.0.0.1")
+    chunks = []
+    while True:
+        fr = drv.poll()
+        if fr is None:
+            break
+        chunks.append(fr.payload)
+    assert b"".join(chunks) == payload
+    assert drv.outstanding_slots("10.0.0.2") == UPCALL_SLOTS
+
+
+def test_etheron_page_alignment():
+    drv, dev = _pair()
+    dev.set_handler(lambda fr: None)
+    before = drv.stats.pages_allocated
+    drv.transmit(EthernetFrame("10.0.0.1", "10.0.0.2", b"x" * 5000))
+    # 5018-byte wire frame -> 2 x 4KiB pages
+    assert drv.stats.pages_allocated - before == 2
+
+
+def test_etheron_vendor_opcodes():
+    assert OPC_TRANSMIT == 0xE0 and OPC_RECEIVE == 0xE1
+
+
+# ---------------------------------------------------------------------------
+# λFS
+# ---------------------------------------------------------------------------
+
+
+def test_lambdafs_namespace_protection():
+    fs = LambdaFS()
+    fs.write("/images/blobs/x", b"blob", PRIVATE_NS)
+    with pytest.raises(PermissionError):
+        fs.read("/images/blobs/x", PRIVATE_NS, actor="host")
+    fs.write("/data/in", b"payload", SHARABLE_NS, actor="host")
+    assert fs.read("/data/in", SHARABLE_NS, actor="host") == b"payload"
+
+
+def test_lambdafs_inode_lock_protocol():
+    fs = LambdaFS()
+    fs.write("/data/f", b"1", SHARABLE_NS)
+    fs.host_open("/data/f")
+    with pytest.raises(LockHeld):
+        fs.container_bind("/data/f", "c1")
+    fs.host_close("/data/f")
+    fs.container_bind("/data/f", "c1")
+    with pytest.raises(LockHeld):
+        fs.host_open("/data/f")
+    with pytest.raises(LockHeld):
+        fs.container_bind("/data/f", "c2")
+    fs.container_bind("/data/f", "c1")        # re-entrant for holder
+    fs.container_release("/data/f", "c1")
+    fs.host_open("/data/f")
+
+
+def test_lambdafs_locks_not_persistent():
+    fs = LambdaFS()
+    fs.write("/data/f", b"1", SHARABLE_NS)
+    fs.container_bind("/data/f", "c1")
+    fs.power_failure()
+    fs.host_open("/data/f")                   # lock cleared by crash
+
+
+def test_lambdafs_path_walk_cache():
+    fs = LambdaFS()
+    fs.write("/a/b/c/d", b"x", PRIVATE_NS)
+    walks_before = fs.stats.path_walks
+    fs.read("/a/b/c/d", PRIVATE_NS)
+    assert fs.stats.node_cache_hits > 0
+    assert fs.stats.path_walks == walks_before
+
+
+def test_lambdafs_capacity():
+    fs = LambdaFS(capacity_bytes=10)
+    with pytest.raises(Exception):
+        fs.write("/big", b"x" * 100, PRIVATE_NS)
+
+
+# ---------------------------------------------------------------------------
+# Virtual-FW
+# ---------------------------------------------------------------------------
+
+
+def test_virtualfw_syscall_tables():
+    assert len(THREAD_SYSCALLS) == 65
+    assert len(IO_SYSCALLS) == 43
+    assert len(NETWORK_SYSCALLS) == 25
+
+
+def test_virtualfw_syscall_dispatch():
+    fs = LambdaFS()
+    fw = VirtualFW(fs)
+    fd = fw.syscall("openat", "/tmp/x")
+    fw.syscall("write", fd, b"data")
+    assert fw.syscall("read", fd) == b"data"
+    fw.syscall("close", fd)
+    assert fw.syscall_counts["openat"] == 1
+    # emulation cost is function-call scale
+    assert fw.emulated_us < 1.0
+
+
+def test_virtualfw_mpu_protection():
+    fw = VirtualFW(LambdaFS())
+    with pytest.raises(MPUViolation):
+        fw.pools.fw_read(0)
+    fw.pools.privileged = True
+    assert fw.pools.fw_read(0) is not None
+    fw.pools.privileged = False
+    fw.pools.isp_write(1, b"args")            # ISP pool open in user mode
+    assert fw.pools.isp_read(1) == b"args"
+
+
+def test_tcp_fsm():
+    c = TCPConn()
+    c.event("passive_open")
+    c.event("syn")
+    c.event("ack")
+    assert c.state == "ESTABLISHED"
+    c.event("fin")
+    c.event("close")
+    c.event("ack")
+    assert c.state == "CLOSED"
+    with pytest.raises(ValueError):
+        c.event("fin")
+
+
+def test_virtualfw_footprint():
+    fp = VirtualFW.binary_footprint()
+    assert 80 < fp["reduction"] < 90          # Fig 10: ~83.4x
+
+
+# ---------------------------------------------------------------------------
+# mini-docker
+# ---------------------------------------------------------------------------
+
+
+@register_app("echo")
+def _echo(ctx, value=41):
+    ctx.log("running")
+    ctx.syscall("brk")
+    return value + 1
+
+
+def _node():
+    return DockerSSDNode("10.0.0.2")
+
+
+def test_minidocker_lifecycle():
+    node = _node()
+    blob = make_blob(ImageManifest("img", "echo", ["base"]),
+                     {"base": b"\x00"})
+    node.docker.cmd_pull("img", blob)
+    assert "img" in node.docker.images()
+    cid = node.docker.cmd_create("img")
+    out = node.docker.cmd_start(cid, value=1)
+    assert out == 2
+    assert b"exit code=0" in node.docker.cmd_logs(cid)
+    ps = node.docker.cmd_ps()
+    assert ps[0]["state"] == "exited"
+    out2 = node.docker.cmd_restart(cid, value=10)
+    assert out2 == 11
+    node.docker.cmd_kill(cid)
+    node.docker.cmd_rm(cid)
+    assert node.docker.cmd_ps() == []
+    node.docker.cmd_rmi("img")
+    assert "img" not in node.docker.images()
+
+
+def test_minidocker_cgroup_budget():
+    @register_app("hog")
+    def hog(ctx):
+        ctx.alloc(2 << 30)
+
+    node = _node()
+    blob = make_blob(ImageManifest("hog", "hog", []), {})
+    node.docker.cmd_pull("hog", blob)
+    cid = node.docker.cmd_create("hog", mem_budget=1 << 20)
+    with pytest.raises(MemoryError):
+        node.docker.cmd_start(cid)
+    assert node.docker.cmd_ps()[0]["state"] == "dead"
+
+
+def test_minidocker_http_over_etheron():
+    pool = StoragePool(1)
+    ip = pool.alive_nodes()[0]
+    pool.driver.transmit(EthernetFrame("10.0.0.1", ip,
+                                       b"GET /containers/json"))
+    assert pool.driver.poll().payload == b"[]"
+
+
+# ---------------------------------------------------------------------------
+# storage pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_failure_reschedule():
+    pool = StoragePool(6)
+    blob = make_blob(ImageManifest("img", "echo", []), {})
+    pool.broadcast_pull("img", blob)
+    pl = pool.place_distributed("job", "img", tp=4)
+    victim = pl.node_ips[0]
+    pool.nodes[victim].fail()
+    dead = pool.check_heartbeats(now=1e9)
+    assert victim in dead
+    assert victim not in pool.placements["job"].node_ips
+    assert len(pool.placements["job"].node_ips) == 4
+    assert any(e[0] == "reschedule" for e in pool.events)
+
+
+def test_pool_straggler_detection():
+    pool = StoragePool(4)
+    slow = pool.alive_nodes()[0]
+    pool.nodes[slow].latency_ema_ms = 100.0
+    assert pool.stragglers() == [slow]
+
+
+def test_pool_elastic_scale():
+    pool = StoragePool(2)
+    pool.scale_to(5)
+    assert len(pool.alive_nodes()) == 5
+
+
+def test_pool_pipeline_stages():
+    pool = StoragePool(8)
+    pl = pool.place_distributed("j", "img", tp=2, pp=4)
+    stages = sorted(set(pl.stage_of.values()))
+    assert stages == [0, 1, 2, 3]

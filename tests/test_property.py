@@ -1,0 +1,205 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EtherONDriver, EthernetFrame, LambdaFS, LockHeld,
+                        PagedKVCache, SHARABLE_NS, UPCALL_SLOTS)
+from repro.core.ether_on import DockerSSDEndpoint
+from repro.kernels import ref
+from repro.models.rwkv6 import wkv_chunked
+from repro.optim import compression as comp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# λFS inode-lock protocol: mutual exclusion between host and containers
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.sampled_from(
+    ["host_open", "host_close", "bind_a", "bind_b", "rel_a", "rel_b"]),
+    ), min_size=1, max_size=40))
+def test_inode_lock_mutual_exclusion(ops):
+    fs = LambdaFS()
+    fs.write("/d/f", b"x", SHARABLE_NS)
+    host_refs = 0
+    holder = None
+    for (op,) in ops:
+        try:
+            if op == "host_open":
+                fs.host_open("/d/f")
+                host_refs += 1
+            elif op == "host_close" and host_refs > 0:
+                fs.host_close("/d/f")
+                host_refs -= 1
+            elif op == "bind_a":
+                fs.container_bind("/d/f", "a")
+                holder = "a"
+            elif op == "bind_b":
+                fs.container_bind("/d/f", "b")
+                holder = "b"
+            elif op == "rel_a" and holder == "a":
+                fs.container_release("/d/f", "a")
+                holder = None
+            elif op == "rel_b" and holder == "b":
+                fs.container_release("/d/f", "b")
+                holder = None
+        except (LockHeld, Exception) as e:
+            if not isinstance(e, LockHeld):
+                raise
+        node = fs._get(SHARABLE_NS, "/d/f")
+        # THE invariant: never both host openers and a container holder
+        assert not (node.host_refcount > 0 and
+                    node.container_holder is not None)
+        assert node.host_refcount == host_refs
+        assert node.container_holder == holder
+
+
+# ---------------------------------------------------------------------------
+# Ether-oN: payload integrity + upcall slot conservation
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.binary(min_size=0, max_size=8000))
+def test_etheron_payload_integrity(payload):
+    drv = EtherONDriver("10.0.0.1")
+    dev = DockerSSDEndpoint("10.0.0.2")
+    drv.attach(dev)
+    echoed = []
+    dev.set_handler(lambda fr: fr.payload)      # echo back via upcall
+    drv.transmit(EthernetFrame("10.0.0.1", "10.0.0.2", payload))
+    chunks = []
+    while True:
+        fr = drv.poll()
+        if fr is None:
+            break
+        chunks.append(fr.payload)
+    assert b"".join(chunks) == payload
+    assert drv.outstanding_slots("10.0.0.2") == UPCALL_SLOTS
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(1, 4000), min_size=1, max_size=12))
+def test_etheron_slot_invariant_under_bursts(sizes):
+    drv = EtherONDriver("10.0.0.1")
+    dev = DockerSSDEndpoint("10.0.0.2")
+    drv.attach(dev)
+    total = 0
+    for n in sizes:
+        dev.send_to_host(b"z" * n, "10.0.0.1")
+        total += n
+        assert 0 <= drv.outstanding_slots("10.0.0.2") <= UPCALL_SLOTS
+    got = 0
+    while (fr := drv.poll()) is not None:
+        got += len(fr.payload)
+    assert got == total
+
+
+# ---------------------------------------------------------------------------
+# gradient compression: error feedback preserves the accumulated signal
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["int8", "bf16"]))
+def test_error_feedback_accumulation(seed, mode):
+    rng = np.random.default_rng(seed)
+    g_true = [rng.normal(size=(8, 16)).astype(np.float32) for _ in range(12)]
+    params = {"w": jnp.zeros((8, 16))}
+    res = comp.init_residuals(params)
+    acc_dec = np.zeros((8, 16), np.float32)
+    for g in g_true:
+        dec, res = comp.compress_grads({"w": jnp.asarray(g)}, res, mode)
+        acc_dec += np.asarray(dec["w"])
+    acc_true = np.sum(g_true, axis=0)
+    # with error feedback the *accumulated* update tracks the true sum to
+    # within one step's quantization error
+    step_err = np.abs(np.asarray(res["w"])).max()
+    assert np.abs(acc_dec - acc_true).max() <= step_err + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# tiered KV cache: paged view always equals a dense reference
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 3), st.integers(4, 24))
+def test_kv_tier_consistency(seed, n_seqs, n_tokens):
+    """Interleaved appends under eviction pressure; per-seq kernel views
+    (pinned) must always reconstruct the dense reference."""
+    rng = np.random.default_rng(seed)
+    hkv, hd, page = 2, 8, 4
+    pages_per_seq = -(-n_tokens // page)
+    # window holds one sequence's view (+1) but not all sequences -> spill
+    hbm_pages = pages_per_seq + 1
+    cache = PagedKVCache(page_size=page, hbm_pages=hbm_pages,
+                         n_kv_heads=hkv, head_dim=hd, dtype=jnp.float32)
+    dense = {s: [] for s in range(n_seqs)}
+    for s in range(n_seqs):
+        cache.add_sequence(s)
+    for t in range(n_tokens):
+        for s in range(n_seqs):
+            k = rng.normal(size=(hkv, hd)).astype(np.float32)
+            v = rng.normal(size=(hkv, hd)).astype(np.float32)
+            cache.append_token(s, jnp.asarray(k), jnp.asarray(v))
+            dense[s].append(k)
+    for s in range(n_seqs):
+        kp, vp, pt, lens = cache.kernel_view([s])
+        kp = np.asarray(kp)
+        assert int(lens[0]) == n_tokens
+        got = kp[np.asarray(pt[0])].reshape(-1, hkv, hd)[:n_tokens]
+        np.testing.assert_allclose(got, np.stack(dense[s]), atol=1e-6)
+    if n_seqs * pages_per_seq > hbm_pages:
+        assert cache.stats.page_outs > 0      # spill path exercised
+    assert cache.residency() <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# rwkv chunked form == per-token recurrence, for arbitrary chunk splits
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 16]),
+       st.sampled_from([16, 32, 48]))
+def test_wkv_chunked_equals_scan(seed, chunk, s):
+    if s % chunk:
+        s = (s // chunk) * chunk or chunk
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    b, h, dk = 1, 2, 8
+    r = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dk))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, dk)))
+    u = jax.random.normal(ks[4], (h, dk))
+    s0 = jax.random.normal(ks[5], (b, h, dk, dk))
+    o1, s1 = wkv_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    o2, s2 = ref.wkv_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-4,
+                               rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=3e-4,
+                               rtol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism across resharding
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]))
+def test_pipeline_determinism(seed, n_shards):
+    from repro.data.pipeline import synthetic_stream
+    full = [synthetic_stream(seed, step, s, batch=4, seq_len=8, vocab=97)
+            for step in range(3) for s in range(n_shards)]
+    again = [synthetic_stream(seed, step, s, batch=4, seq_len=8, vocab=97)
+             for step in range(3) for s in range(n_shards)]
+    for a, b in zip(full, again):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
