@@ -2,10 +2,12 @@
 the paper's case study (Fig 8b) at demo scale.
 
 Serves a small GQA decoder with batched requests through the **tiered
-paged KV cache** (HBM window + "flash" tier + prefetch) and the Pallas
-``paged_attention`` kernel, then reports the D-Cache-style telemetry
-(page-ins/outs, prefetch hits) plus the analytical pool model's verdict
-for the full-size systems.
+paged KV cache** (host-side PageTableManager + device PageStore with
+stacked per-layer pages) and the Pallas ``paged_attention`` kernel —
+each generated token is ONE jitted decode step for the whole batch and
+every layer.  Reports the D-Cache-style telemetry (page-ins/outs,
+prefetch hits) plus the analytical pool model's verdict for the
+full-size systems.
 
   PYTHONPATH=src python examples/serve_pool.py
 """
@@ -35,7 +37,7 @@ def main():
 
     # deliberately small HBM window -> the flash tier gets exercised
     server = PagedServer(model, params, page_size=8,
-                         hbm_pages_per_layer=12, dtype=jnp.float32)
+                         hbm_pages=12, dtype=jnp.float32)
     rng = np.random.default_rng(0)
     n_req, prompt_len, gen = 3, 24, 16
     t0 = time.time()

@@ -3,7 +3,8 @@ from repro.core.container import (APP_REGISTRY, MiniDocker,  # noqa: F401
                                   make_blob, ImageManifest, register_app)
 from repro.core.ether_on import (DockerSSDEndpoint, EtherONDriver,  # noqa: F401
                                  EthernetFrame, UPCALL_SLOTS)
-from repro.core.kv_tier import PagedKVCache  # noqa: F401
+from repro.core.kv_tier import (PagedKVCache, PageStore,  # noqa: F401
+                                PageTableManager)
 from repro.core.lambda_fs import (LambdaFS, LockHeld, PRIVATE_NS,  # noqa: F401
                                   SHARABLE_NS)
 from repro.core.storage_pool import (DockerSSDNode, NodeSpec,  # noqa: F401

@@ -8,6 +8,22 @@ host tier ("flash"), with asynchronous prefetch so page-in overlaps
 compute.  ``repro.kernels.paged_attention`` consumes the HBM window
 directly via the page table.
 
+The cache is split along the host/device boundary:
+
+  * :class:`PageStore` — device-resident storage.  One *stacked* pair of
+    arrays ``[n_layers, hbm_pages, page, n_kv_heads, head_dim]`` holds
+    every layer's pages, so a physical page id addresses the KV of all
+    layers at once and one transfer moves a whole stacked page.  The
+    jitted serving step consumes/produces these arrays directly.
+  * :class:`PageTableManager` — host-side policy.  Owns the logical
+    (seq_id, page_idx) -> physical mapping, LRU eviction into the host
+    tier, pinning, prefetch, per-tier stats, and sequence lifetime
+    (:meth:`PageTableManager.free_sequence`).  Runs *between* jitted
+    steps; never inside them.
+
+:class:`PagedKVCache` remains as a thin single-layer facade over the
+pair for code that wants the classic per-layer append/view API.
+
 The accounting (hits/misses/bytes moved) feeds the analytical model's
 D-Cache-vs-H-Cache comparison; the page-table management mirrors λFS
 block allocation.
@@ -35,25 +51,73 @@ class KVTierStats:
     prefetch_hits: int = 0
 
 
-class PagedKVCache:
-    """Two-tier paged KV store for one layer group.
+class PageStore:
+    """Device-resident stacked KV pages.
 
-    HBM window: ``hbm_pages`` physical pages of shape
-    [page, n_kv_heads, head_dim] (x2 for k and v).  Host tier: unbounded
-    numpy storage.  Logical pages are (seq_id, page_idx).
+    ``k_pages``/``v_pages``: [n_layers, hbm_pages, page, n_kv_heads,
+    head_dim].  Layer ``li`` of physical page ``p`` is
+    ``k_pages[li, p]`` — the per-layer slice a ``lax.scan`` over layers
+    feeds to the Pallas paged_attention kernel.  All mutation from the
+    serving hot path happens *inside* jit (batched scatters); the
+    manager only moves whole stacked pages across the HBM/host boundary.
     """
 
-    def __init__(self, *, page_size: int, hbm_pages: int, n_kv_heads: int,
-                 head_dim: int, dtype=jnp.bfloat16):
+    def __init__(self, *, n_layers: int, page_size: int, hbm_pages: int,
+                 n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.n_layers = n_layers
         self.page = page_size
         self.hbm_pages = hbm_pages
         self.hkv = n_kv_heads
         self.hd = head_dim
         self.dtype = dtype
-        shape = (hbm_pages, page_size, n_kv_heads, head_dim)
+        shape = (n_layers, hbm_pages, page_size, n_kv_heads, head_dim)
         self.k_pages = jnp.zeros(shape, dtype)
         self.v_pages = jnp.zeros(shape, dtype)
-        self._free: List[int] = list(range(hbm_pages))
+
+    def page_bytes(self) -> int:
+        """Bytes of one stacked page (k+v, all layers)."""
+        return int(self.n_layers * self.page * self.hkv * self.hd *
+                   jnp.dtype(self.dtype).itemsize) * 2
+
+    # -- host/device transfers (management path, between jitted steps) ------
+
+    def read_page(self, phys: int) -> Tuple[np.ndarray, np.ndarray]:
+        """HBM -> host: one stacked page [n_layers, page, hkv, hd] x2."""
+        return (np.asarray(self.k_pages[:, phys]),
+                np.asarray(self.v_pages[:, phys]))
+
+    def write_page(self, phys: int, k: np.ndarray, v: np.ndarray):
+        """Host -> HBM: restore one stacked page."""
+        self.k_pages = self.k_pages.at[:, phys].set(
+            jnp.asarray(k, self.dtype))
+        self.v_pages = self.v_pages.at[:, phys].set(
+            jnp.asarray(v, self.dtype))
+
+    def adopt(self, k_pages: jnp.ndarray, v_pages: jnp.ndarray):
+        """Install the (possibly donated-and-returned) arrays a jitted
+        serving step produced."""
+        self.k_pages = k_pages
+        self.v_pages = v_pages
+
+    def layer(self, li: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-layer view [hbm_pages, page, hkv, hd] (kernel convention)."""
+        return self.k_pages[li], self.v_pages[li]
+
+
+class PageTableManager:
+    """Host-side page-table policy for a :class:`PageStore`.
+
+    Logical pages are (seq_id, page_idx).  The manager decides *where*
+    KV lives (HBM window vs host tier) and hands the jitted step a dense
+    ``page_table`` of physical ids; it never touches KV values except to
+    move whole stacked pages on eviction/page-in.
+    """
+
+    def __init__(self, store: PageStore):
+        self.store = store
+        self.page = store.page
+        self.hbm_pages = store.hbm_pages
+        self._free: List[int] = list(range(store.hbm_pages))
         # logical -> physical, LRU-ordered
         self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
         self._host: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
@@ -62,7 +126,7 @@ class PagedKVCache:
         self._pinned: set = set()
         self.stats = KVTierStats()
 
-    # -- sequence management -------------------------------------------------
+    # -- sequence lifetime ---------------------------------------------------
 
     def add_sequence(self, seq_id: int):
         self._lengths[seq_id] = 0
@@ -70,14 +134,51 @@ class PagedKVCache:
     def length(self, seq_id: int) -> int:
         return self._lengths[seq_id]
 
-    def _page_bytes(self) -> int:
-        return int(self.page * self.hkv * self.hd *
-                   jnp.dtype(self.dtype).itemsize) * 2
+    def set_length(self, seq_id: int, n: int):
+        self._lengths[seq_id] = n
 
-    # -- page lifecycle ---------------------------------------------------------
+    def free_sequence(self, seq_id: int) -> int:
+        """Release every page a sequence holds, in both tiers.  Returns
+        the number of pages freed; the physical slots are immediately
+        reusable by a waiting request."""
+        freed = 0
+        for lkey in [k for k in list(self._resident) if k[0] == seq_id]:
+            self._free.append(self._resident.pop(lkey))
+            self._pinned.discard(lkey)
+            self._prefetched.discard(lkey)
+            freed += 1
+        for lkey in [k for k in list(self._host) if k[0] == seq_id]:
+            self._host.pop(lkey)
+            self._prefetched.discard(lkey)
+            freed += 1
+        self._lengths.pop(seq_id, None)
+        return freed
+
+    # -- capacity accounting (admission control) -----------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages a sequence of ``n_tokens`` occupies."""
+        return -(-max(n_tokens, 1) // self.page)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def resident_pages(self) -> int:
+        return len(self._resident)
+
+    @property
+    def host_pages(self) -> int:
+        return len(self._host)
+
+    def residency(self) -> float:
+        return len(self._resident) / self.hbm_pages
+
+    # -- page lifecycle ------------------------------------------------------
 
     def _evict_one(self):
-        # LRU among unpinned pages (pinned = part of an in-flight view)
+        # LRU among unpinned pages (pinned = part of an in-flight step)
         victim = None
         for lkey in self._resident:                          # LRU order
             if lkey not in self._pinned:
@@ -88,12 +189,10 @@ class PagedKVCache:
                 "HBM window too small for the pinned working set "
                 f"({len(self._pinned)} pages pinned, {self.hbm_pages} total)")
         phys = self._resident.pop(victim)
-        k = np.asarray(self.k_pages[phys])
-        v = np.asarray(self.v_pages[phys])
-        self._host[victim] = (k, v)
+        self._host[victim] = self.store.read_page(phys)
         self._free.append(phys)
         self.stats.page_outs += 1
-        self.stats.bytes_out += self._page_bytes()
+        self.stats.bytes_out += self.store.page_bytes()
 
     def _alloc(self, lkey) -> int:
         if not self._free:
@@ -106,36 +205,56 @@ class PagedKVCache:
         """Bring a host-tier page into HBM."""
         phys = self._alloc(lkey)
         k, v = self._host.pop(lkey)
-        self.k_pages = self.k_pages.at[phys].set(jnp.asarray(k, self.dtype))
-        self.v_pages = self.v_pages.at[phys].set(jnp.asarray(v, self.dtype))
+        self.store.write_page(phys, k, v)
         self.stats.page_ins += 1
-        self.stats.bytes_in += self._page_bytes()
+        self.stats.bytes_in += self.store.page_bytes()
         return phys
 
-    def ensure_resident(self, seq_id: int, *, pin: bool = False) -> List[int]:
-        """Make every page of a sequence resident; returns physical ids in
-        logical order.  With ``pin=True`` the pages are protected from
-        eviction until :meth:`unpin_all` (used while assembling a batched
-        kernel view so later page-ins cannot invalidate earlier entries)."""
-        n_pages = -(-max(self._lengths[seq_id], 1) // self.page)
-        out = []
-        for pi in range(n_pages):
-            lkey = (seq_id, pi)
-            if lkey in self._resident:
-                self._resident.move_to_end(lkey)
+    def ensure_page(self, seq_id: int, page_idx: int, *, pin: bool = False,
+                    count: bool = True) -> int:
+        """Make one logical page resident; returns its physical id.
+        ``count=False`` skips the hit/miss accounting (write-path touches
+        — the facade's per-token appends — are not cache lookups; only
+        view assembly and explicit residency checks are)."""
+        lkey = (seq_id, page_idx)
+        if lkey in self._resident:
+            self._resident.move_to_end(lkey)
+            if count:
                 if lkey in self._prefetched:
                     self.stats.prefetch_hits += 1
                     self._prefetched.discard(lkey)
                 self.stats.hits += 1
-            elif lkey in self._host:
+        elif lkey in self._host:
+            if count:
                 self.stats.misses += 1
-                self._page_in(lkey)
-            else:  # brand-new page
-                self._alloc(lkey)
-            if pin:
-                self._pinned.add(lkey)
-            out.append(self._resident[(seq_id, pi)])
-        return out
+            self._page_in(lkey)
+        else:  # brand-new page
+            self._alloc(lkey)
+        if pin:
+            self._pinned.add(lkey)
+        return self._resident[lkey]
+
+    def ensure_resident(self, seq_id: int, *, pin: bool = False,
+                        n_tokens: Optional[int] = None) -> List[int]:
+        """Make every page covering ``n_tokens`` (default: the current
+        length) resident; returns physical ids in logical order.  With
+        ``pin=True`` the pages are protected from eviction until
+        :meth:`unpin_all` (used while assembling a batched step so later
+        page-ins cannot invalidate earlier entries)."""
+        if n_tokens is None:
+            n_tokens = self._lengths[seq_id]
+        return [self.ensure_page(seq_id, pi, pin=pin)
+                for pi in range(self.pages_needed(n_tokens))]
+
+    def prepare_append(self, seq_id: int) -> List[int]:
+        """Pin + return the page-table row for appending one token: every
+        page covering positions [0, length] resident, in logical order.
+        Commit the append with :meth:`commit_append` after the step."""
+        return self.ensure_resident(seq_id, pin=True,
+                                    n_tokens=self._lengths[seq_id] + 1)
+
+    def commit_append(self, seq_id: int, n: int = 1):
+        self._lengths[seq_id] += n
 
     def unpin_all(self):
         self._pinned.clear()
@@ -143,56 +262,98 @@ class PagedKVCache:
     def prefetch(self, seq_id: int):
         """Async prefetch model: pages needed by the *next* step are pulled
         in now so the transfer overlaps compute (double buffering)."""
-        n_pages = -(-(self._lengths[seq_id] + 1) // self.page)
+        n_pages = self.pages_needed(self._lengths[seq_id] + 1)
         for pi in range(n_pages):
             lkey = (seq_id, pi)
             if lkey in self._host:
                 self._page_in(lkey)
                 self._prefetched.add(lkey)
 
-    # -- writes -------------------------------------------------------------------
+
+class PagedKVCache:
+    """Single-layer-group facade over PageTableManager + PageStore.
+
+    Keeps the classic per-layer API (``append_token`` one position at a
+    time, ``kernel_view`` snapshots) for tests and tools; the serving
+    hot path uses the manager/store pair directly with stacked layers
+    and batched in-jit scatters.
+    """
+
+    def __init__(self, *, page_size: int, hbm_pages: int, n_kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        # single layer group by construction — multi-layer callers use the
+        # manager/store pair directly (see PagedServer)
+        self.store = PageStore(n_layers=1, page_size=page_size,
+                               hbm_pages=hbm_pages, n_kv_heads=n_kv_heads,
+                               head_dim=head_dim, dtype=dtype)
+        self.table = PageTableManager(self.store)
+        self.page = page_size
+        self.hbm_pages = hbm_pages
+        self.dtype = dtype
+
+    @property
+    def stats(self) -> KVTierStats:
+        return self.table.stats
+
+    # -- sequence management -------------------------------------------------
+
+    def add_sequence(self, seq_id: int):
+        self.table.add_sequence(seq_id)
+
+    def length(self, seq_id: int) -> int:
+        return self.table.length(seq_id)
+
+    def free_sequence(self, seq_id: int) -> int:
+        return self.table.free_sequence(seq_id)
+
+    # -- writes --------------------------------------------------------------
 
     def append_token(self, seq_id: int, k_tok: jnp.ndarray,
                      v_tok: jnp.ndarray):
         """k_tok/v_tok: [n_kv_heads, head_dim] for the new position."""
-        pos = self._lengths[seq_id]
-        pi, off = divmod(pos, self.page)
-        lkey = (seq_id, pi)
-        if lkey not in self._resident:
-            if lkey in self._host:
-                self._page_in(lkey)
-            else:
-                self._alloc(lkey)
-        phys = self._resident[lkey]
-        self._resident.move_to_end(lkey)
-        self.k_pages = self.k_pages.at[phys, off].set(
-            k_tok.astype(self.dtype))
-        self.v_pages = self.v_pages.at[phys, off].set(
-            v_tok.astype(self.dtype))
-        self._lengths[seq_id] = pos + 1
+        pos = self.table.length(seq_id)
+        off = pos % self.page
+        phys = self.table.ensure_page(seq_id, pos // self.page, count=False)
+        st = self.store
+        st.k_pages = st.k_pages.at[0, phys, off].set(
+            k_tok.astype(st.dtype))
+        st.v_pages = st.v_pages.at[0, phys, off].set(
+            v_tok.astype(st.dtype))
+        self.table.commit_append(seq_id)
 
-    # -- read view for the kernel ---------------------------------------------------
+    # -- read view for the kernel --------------------------------------------
+
+    def ensure_resident(self, seq_id: int, *, pin: bool = False) -> List[int]:
+        return self.table.ensure_resident(seq_id, pin=pin)
+
+    def prefetch(self, seq_id: int):
+        self.table.prefetch(seq_id)
+
+    def unpin_all(self):
+        self.table.unpin_all()
 
     def kernel_view(self, seq_ids: List[int]):
         """Returns (k_pages, v_pages, page_table, lengths) ready for
         ``repro.kernels.ops.paged_attention``."""
         tables = []
-        max_pages = max(-(-max(self._lengths[s], 1) // self.page)
+        max_pages = max(self.table.pages_needed(self.table.length(s))
                         for s in seq_ids)
         try:
             for s in seq_ids:
-                phys = self.ensure_resident(s, pin=True)
+                phys = self.table.ensure_resident(s, pin=True)
                 phys = phys + [0] * (max_pages - len(phys))
                 tables.append(phys)
         finally:
-            self.unpin_all()
+            self.table.unpin_all()
         page_table = jnp.asarray(tables, jnp.int32)
-        lengths = jnp.asarray([self._lengths[s] for s in seq_ids], jnp.int32)
+        lengths = jnp.asarray([self.table.length(s) for s in seq_ids],
+                              jnp.int32)
         # k_pages/v_pages are immutable jnp snapshots: the returned view
         # stays valid even if later appends/evictions rewrite the window.
-        return self.k_pages, self.v_pages, page_table, lengths
+        k_pages, v_pages = self.store.layer(0)
+        return k_pages, v_pages, page_table, lengths
 
-    # -- occupancy ---------------------------------------------------------------
+    # -- occupancy -----------------------------------------------------------
 
     def residency(self) -> float:
-        return len(self._resident) / self.hbm_pages
+        return self.table.residency()

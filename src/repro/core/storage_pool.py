@@ -87,19 +87,13 @@ class StoragePool:
         self.driver = EtherONDriver(host_ip)
         self.nodes: Dict[str, DockerSSDNode] = {}
         self.arrays: List[List[str]] = []
+        self.array_size = array_size
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
         self.placements: Dict[str, Placement] = {}
         self.events: List[Tuple[str, str]] = []
         for i in range(n_nodes):
-            ip = f"10.0.{1 + i // array_size}.{2 + i % array_size}"
-            node = DockerSSDNode(ip, spec)
-            node.fs.attach_ether(self.driver)
-            self.nodes[ip] = node
-            self.driver.attach(node.endpoint)
-            if i % array_size == 0:
-                self.arrays.append([])
-            self.arrays[-1].append(ip)
+            self._add_node(i, spec)
 
     # -- membership -----------------------------------------------------------
 
@@ -197,11 +191,22 @@ class StoragePool:
 
     # -- elastic membership --------------------------------------------------------
 
+    def _add_node(self, i: int, spec: NodeSpec):
+        """Provision node ``i``: wired into the Ether-oN fabric, λFS lock
+        syncs attached, and slotted into its array (array topology follows
+        the pool's configured ``array_size``)."""
+        ip = f"10.0.{1 + i // self.array_size}.{2 + i % self.array_size}"
+        node = DockerSSDNode(ip, spec)
+        node.fs.attach_ether(self.driver)
+        self.nodes[ip] = node
+        self.driver.attach(node.endpoint)
+        if i % self.array_size == 0:
+            self.arrays.append([])
+        self.arrays[-1].append(ip)
+        return node
+
     def scale_to(self, n: int, spec: NodeSpec = NodeSpec()):
         cur = len(self.nodes)
         for i in range(cur, n):
-            ip = f"10.0.{1 + i // 16}.{2 + i % 16}"
-            node = DockerSSDNode(ip, spec)
-            self.nodes[ip] = node
-            self.driver.attach(node.endpoint)
+            self._add_node(i, spec)
         self.events.append(("scale", str(n)))

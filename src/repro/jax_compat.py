@@ -1,0 +1,33 @@
+"""Cross-version jax API shims.
+
+The repo targets current jax, but the kernels and the sharded runtime
+must also lower on the LTS-ish versions CI pins (see also
+``kernels/pltpu_compat.py`` for the Pallas side):
+
+  * ``jax.shard_map`` lived in ``jax.experimental.shard_map`` before it
+    was promoted;
+  * its replication-check kwarg was renamed ``check_rep`` ->
+    ``check_vma``.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_unchecked(fn, *, mesh, in_specs, out_specs):
+    """``shard_map`` that autodiffs on every supported jax version.
+
+    New jax: the varying-manual-axes check rejects our collectives-only
+    schedules, so pass ``check_vma=False``.  Old jax (pre-rename): keep
+    ``check_rep=True`` — its transpose rule mis-specs scalar cotangents
+    when the rep check is off, and our bodies psum their outputs over
+    every mesh axis anyway, so the static rep check passes."""
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=True)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams
+
 
 def _embed_kernel(idx_ref, w_ref, table_ref, o_ref, *, n_lookups: int,
                   weighted: bool):
@@ -56,7 +58,7 @@ def embed_agg(table, indices, weights=None, *, interpret: bool = False):
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="embed_agg",

@@ -11,6 +11,15 @@ Grid: (batch, kv_heads, pages_per_seq); the page axis is sequential so
 the per-(b,h) accumulators persist in VMEM scratch.  Pages whose start
 offset is beyond the sequence length are skipped entirely (pl.when), so
 work scales with actual context length, not table capacity.
+
+Calling convention: the batched serving path holds *stacked* pages
+``[n_layers, hbm_pages, page, Hkv, D]`` (core.kv_tier.PageStore) and
+calls this kernel once per layer from inside a jitted ``lax.scan`` over
+layers — each scan step feeds the layer's ``[hbm_pages, page, Hkv, D]``
+slice plus the (shared) page-table row block.  The kernel itself is
+layer-agnostic; ``paged_attention`` below is safe to trace inside an
+enclosing jit (runtime/serve.py fuses append-scatter + attention + FFN
+into one step).
 """
 from __future__ import annotations
 
@@ -21,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -149,7 +160,7 @@ def paged_attention_q8(q, k_pages, v_pages, k_scale, v_scale, page_table,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_attention_q8",
@@ -194,7 +205,7 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_attention",

@@ -4,20 +4,27 @@
 importing this module never touches jax device state.  The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; smoke tests and benchmarks see the real (single) device.
+
+``auto_axis_kwargs`` smooths a jax API gap: ``AxisType`` /
+``axis_types=`` only exist in newer releases; on older jax every mesh
+axis is implicitly Auto, which is what we ask for anyway.
 """
 from __future__ import annotations
 
 import jax
 
 
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+def auto_axis_kwargs(axes) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:          # older jax: all axes are Auto already
+        return {}
+    return {"axis_types": (axis_type.Auto,) * len(axes)}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(axes))
 
 
 def make_elastic_mesh(n_devices: int, *, model_parallel: int = 16,
@@ -28,9 +35,9 @@ def make_elastic_mesh(n_devices: int, *, model_parallel: int = 16,
         model_parallel //= 2
     data = n_devices // model_parallel
     return jax.make_mesh((data, model_parallel), axis_names,
-                         axis_types=_auto(axis_names))
+                         **auto_axis_kwargs(axis_names))
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (requires host-device flag)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(axes))

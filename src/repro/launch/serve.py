@@ -47,7 +47,7 @@ def main(argv=None):
         if cfg.block_type != "transformer":
             raise SystemExit("--paged demo path supports transformer archs")
         server = PagedServer(model, params, page_size=args.page_size,
-                             hbm_pages_per_layer=args.hbm_pages)
+                             hbm_pages=args.hbm_pages)
         for i in range(args.requests):
             server.add_request(i, prompts[i])
         out = server.decode(args.gen)

@@ -27,10 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.jax_compat import shard_map_unchecked
 
 
 def make_pipeline_loss(model, mesh, *, n_microbatches: int,
@@ -92,7 +89,10 @@ def make_pipeline_loss(model, mesh, *, n_microbatches: int,
                 lse = jax.nn.logsumexp(logits, axis=-1)
                 gold = jnp.take_along_axis(
                     logits, lab_mb[..., None].clip(0), axis=-1)[..., 0]
-                return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+                # (1,)-shaped, not scalar: old-jax shard_map partial
+                # eval mis-specs scalar device-varying residuals
+                return (jnp.sum((lse - gold) * mask)[None],
+                        jnp.sum(mask)[None])
 
             # GPipe: n_microbatches + n_stages - 1 ticks.  At each tick a
             # stage processes one microbatch-slot and passes it downstream.
@@ -105,8 +105,8 @@ def make_pipeline_loss(model, mesh, *, n_microbatches: int,
             toks = tok_local.reshape(n_microbatches, mb, seq)
             labs = lab_local.reshape(n_microbatches, mb, seq)
             buf = jnp.zeros((mb, seq, cfg.d_model), jnp.float32)
-            nll = jnp.zeros(())
-            cnt = jnp.zeros(())
+            nll = jnp.zeros((1,))
+            cnt = jnp.zeros((1,))
             n_ticks = n_microbatches + n_stages - 1
             perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
@@ -142,11 +142,11 @@ def make_pipeline_loss(model, mesh, *, n_microbatches: int,
             if data_axes:
                 nll = lax.psum(nll, data_axes)
                 cnt = lax.psum(cnt, data_axes)
-            return nll / jnp.maximum(cnt, 1.0)
+            return (nll / jnp.maximum(cnt, 1.0))[0]
 
-        fn = _shard_map(staged, mesh=mesh,
-                        in_specs=(pspecs, bspec, bspec),
-                        out_specs=P(), check_vma=False)
+        fn = shard_map_unchecked(staged, mesh=mesh,
+                                 in_specs=(pspecs, bspec, bspec),
+                                 out_specs=P())
         return fn(params, tokens, labels)
 
     return loss_fn

@@ -8,10 +8,15 @@ continuous-batching loop on top of the paper's tiered KV mechanism:
     pin its projected working set alongside the active batch
     (otherwise it waits; the flash tier holds preempted sequences);
   * iteration-level scheduling — every step decodes the current active
-    set; finished sequences (EOS or max_tokens) free their pages
-    immediately and a waiting request takes the slot;
+    set through one jitted ``decode_step``; finished sequences (EOS or
+    max_tokens) free their pages immediately via the public
+    ``free_sequence`` API and a waiting request takes the slot;
   * tail telemetry — per-request latency and the tier counters, the
     serving-side analogue of mini-docker's container monitoring.
+
+The scheduler talks only to PagedServer's public surface (capacity
+accounting, ``free_sequence``, the batched step) — page-table internals
+stay owned by core.kv_tier.PageTableManager.
 """
 from __future__ import annotations
 
@@ -59,13 +64,11 @@ class ContinuousBatcher:
         self.waiting.append(req)
 
     def _pages_needed(self, req: Request) -> int:
-        page = self.server.caches[0].page
-        return -(-(len(req.prompt) + req.max_tokens) // page)
+        return self.server.pages_needed(len(req.prompt) + req.max_tokens)
 
     def _window_has_room(self, req: Request) -> bool:
-        cache = self.server.caches[0]
         pinned_now = sum(self._pages_needed(r) for r in self.active.values())
-        return pinned_now + self._pages_needed(req) <= cache.hbm_pages
+        return pinned_now + self._pages_needed(req) <= self.server.hbm_pages
 
     def _admit(self):
         while (self.waiting and len(self.active) < self.max_active and
@@ -99,19 +102,9 @@ class ContinuousBatcher:
             req = self.active.pop(rid)
             req.t_done = time.monotonic()
             self.finished.append(req)
-            # free the sequence's pages in every layer's cache
-            for cache in self.server.caches:
-                self._free_sequence(cache, rid)
-            self.server._seqs.remove(rid)
-            self.server._pending.pop(rid, None)
-
-    @staticmethod
-    def _free_sequence(cache, seq_id: int):
-        for lkey in [k for k in list(cache._resident) if k[0] == seq_id]:
-            cache._free.append(cache._resident.pop(lkey))
-        for lkey in [k for k in list(cache._host) if k[0] == seq_id]:
-            cache._host.pop(lkey)
-        cache._lengths.pop(seq_id, None)
+            # every tier's pages come back in one call; the physical
+            # slots are reusable by the next waiting request immediately
+            self.server.free_sequence(rid)
 
     def run_to_completion(self, max_iters: int = 10_000) -> dict:
         it = 0

@@ -7,23 +7,32 @@ Two paths:
     axis = the storage pool; see runtime/sharding.py).  Used by
     ``launch/serve.py`` and the dry-run.
   * ``PagedServer`` — the paper's tiered mechanism made concrete on one
-    device: per-layer **PagedKVCache** (HBM window + host "flash" tier,
-    prefetch) consumed by the Pallas ``paged_attention`` kernel.  The
-    layer loop runs in Python so each layer reads its own page table —
-    this is the ISP-container serving loop of the case study.
+    device: a host-side **PageTableManager** (policy: LRU tiering,
+    pinning, prefetch, admission accounting) over a device-resident
+    **PageStore** with *stacked* per-layer pages, consumed by the Pallas
+    ``paged_attention`` kernel.  One jitted ``decode_step`` advances
+    every layer and every active sequence per token: a single batched
+    scatter appends the new K/V for all layers/sequences, then a
+    ``lax.scan`` over layers runs the paged-attention kernel against
+    each layer's page slice.  Prefill is one jitted shot that writes
+    whole prompt pages.  Host-side page management (eviction, page-in,
+    table assembly) runs *between* jitted steps — the ISP-container
+    split of the case study: policy at the host, data-path on the
+    device.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.kv_tier import PagedKVCache
+from repro.core.kv_tier import PageStore, PageTableManager
 from repro.kernels import ops
+from repro.kernels.paged_attention import paged_attention as _paged_inner
 from repro.models import layers as L
 from repro.runtime import sharding as shd
 
@@ -47,107 +56,376 @@ def make_serving_fns(model, mesh=None):
     return prefill, decode_j
 
 
-class PagedServer:
-    """Tiered-KV serving for a TransformerLM on one device (demo scale).
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (shape bucketing to bound retraces)."""
+    return 1 << max(0, n - 1).bit_length()
 
-    Each layer owns a PagedKVCache; decode attention goes through the
-    Pallas paged_attention kernel against the HBM window, with next-step
-    prefetch after every token (compute/page-in overlap model).
+
+class PagedServer:
+    """Tiered-KV serving for a TransformerLM on one device.
+
+    All layers share one page table: a physical page id addresses the
+    stacked KV ``[n_layers, page, Hkv, D]`` of that extent, so host<->HBM
+    tiering moves whole stacked pages and the jitted step needs exactly
+    one table per batch.  Batch size and table width are bucketed to
+    powers of two, so the decode step compiles O(log) times, not per
+    shape.
     """
 
     def __init__(self, model, params, *, page_size: int = 16,
-                 hbm_pages_per_layer: int = 64, dtype=jnp.float32):
+                 hbm_pages: Optional[int] = None, dtype=jnp.float32,
+                 hbm_pages_per_layer: Optional[int] = None):
+        if hbm_pages is None:
+            hbm_pages = (hbm_pages_per_layer
+                         if hbm_pages_per_layer is not None else 64)
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.dtype = dtype
-        cfg = self.cfg
-        self.caches = [
-            PagedKVCache(page_size=page_size,
-                         hbm_pages=hbm_pages_per_layer,
-                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
-                         dtype=dtype)
-            for _ in range(cfg.n_layers)]
+        self.page = page_size
+        self.hbm_pages = hbm_pages
+        self.store = self._new_store()
+        self.table = PageTableManager(self.store)
         self._seqs: List[int] = []
         self._pending: Dict[int, int] = {}
+        self._interpret = jax.default_backend() != "tpu"
+        # donating the page arrays lets XLA update the store in place;
+        # CPU jit ignores donation (with a warning), so only opt in on
+        # accelerators.
+        donate = (1, 2) if not self._interpret else ()
+        self._decode_jit = jax.jit(self.decode_step, donate_argnums=donate)
+        self._prefill_jit = jax.jit(self.prefill_step, donate_argnums=donate)
 
-    # -- request handling -------------------------------------------------------
-
-    def add_request(self, seq_id: int, prompt: np.ndarray):
-        """Prefill a prompt into the paged caches, token by token
-        (teacher-forcing the pages; fine at demo scale)."""
-        for cache in self.caches:
-            cache.add_sequence(seq_id)
-        self._seqs.append(seq_id)
-        last = None
-        for tok in prompt:
-            last = self._step({seq_id: int(tok)})[seq_id]
-        self._pending[seq_id] = int(jnp.argmax(last))
-        return last
-
-    def decode(self, n_tokens: int, greedy: bool = True,
-               seqs: Optional[List[int]] = None) -> Dict[int, list]:
-        """Batched decode across live sequences (or a subset — the HBM
-        window only needs to hold the *active* batch's working set; idle
-        sequences spill to the flash tier)."""
-        active = self._seqs if seqs is None else seqs
-        out = {s: [] for s in active}
-        # continue from the tokens pending after prefill
-        cur = {s: self._pending.get(s, 0) for s in active}
-        for _ in range(n_tokens):
-            logits = self._step(cur)
-            for s in active:
-                nxt = int(jnp.argmax(logits[s]))
-                out[s].append(nxt)
-                cur[s] = nxt
-        self._pending.update(cur)
-        return out
-
-    # -- one batched token step through the layer loop ----------------------------
-
-    def _step(self, tokens: Dict[int, int]) -> Dict[int, jnp.ndarray]:
+    def _new_store(self) -> PageStore:
+        """The store the config prescribes (used at init and when a failed
+        donated step voids the window)."""
         cfg = self.cfg
-        seqs = list(tokens.keys())
-        params = self.params
-        tok = jnp.asarray([tokens[s] for s in seqs], jnp.int32)
-        h = L.embed_tokens(params["embed"], tok[:, None], self.dtype)
-        lengths_before = {s: self.caches[0].length(s) for s in seqs}
-        for li in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[li], params["layers"])
-            cache = self.caches[li]
-            a = L.apply_norm(lp["attn_norm"], h, cfg.norm)
-            q, k, v = L._qkv(lp["attn"], a, cfg)
-            pos = jnp.asarray([[lengths_before[s]] for s in seqs], jnp.int32)
-            if cfg.rope:
-                q = L.apply_rope(q, pos, cfg.rope_theta)
-                k = L.apply_rope(k, pos, cfg.rope_theta)
-            # append the new kv into the paged tier
-            for bi, s in enumerate(seqs):
-                cache.append_token(s, k[bi, 0], v[bi, 0])
-            k_pages, v_pages, page_table, lengths = cache.kernel_view(seqs)
-            o = ops.paged_attention(q[:, 0].astype(self.dtype), k_pages,
-                                    v_pages, page_table, lengths)
-            h = h + (o.reshape(len(seqs), 1, -1) @
-                     lp["attn"]["wo"].astype(h.dtype))
-            m = L.apply_norm(lp["mlp_norm"], h, cfg.norm)
-            if cfg.is_moe:
-                mo, _ = L.apply_moe(lp["mlp"], m, cfg, no_drop=True)
-            else:
-                mo = L.apply_mlp(lp["mlp"], m, cfg.act)
-            h = h + mo
-            cache.prefetch(seqs[0])         # overlap next step's page-ins
+        return PageStore(n_layers=cfg.n_layers, page_size=self.page,
+                         hbm_pages=self.hbm_pages,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                         dtype=self.dtype)
+
+    # -- public capacity API (admission control lives on these) --------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return self.table.pages_needed(n_tokens)
+
+    def sequence_ids(self) -> List[int]:
+        return list(self._seqs)
+
+    def pending_tokens(self) -> Dict[int, int]:
+        """Next-token (greedy) continuation for each live sequence — the
+        argmax produced by its last prefill/decode step."""
+        return dict(self._pending)
+
+    def free_sequence(self, seq_id: int) -> int:
+        """Retire a sequence: all its HBM + host-tier pages are released
+        and immediately reusable.  Returns the number of pages freed."""
+        freed = self.table.free_sequence(seq_id)
+        if seq_id in self._seqs:
+            self._seqs.remove(seq_id)
+        self._pending.pop(seq_id, None)
+        return freed
+
+    def _recover_store(self):
+        """Failure cleanup for donated jitted calls.  On accelerators the
+        step's inputs are donated, so a call that fails *during execution*
+        has already consumed the store arrays; the resident page data is
+        unrecoverable.  Drop every sequence and reopen an empty window so
+        the server stays usable (callers resubmit) instead of poisoning
+        all later steps with deleted buffers."""
+        if not getattr(self.store.k_pages, "is_deleted", lambda: False)():
+            return
+        stats = self.table.stats
+        self.store = self._new_store()
+        self.table = PageTableManager(self.store)
+        self.table.stats = stats           # telemetry continuity
+        self._seqs.clear()
+        self._pending.clear()
+
+    # -- shared transformer-block halves (used by the jitted decode /
+    #    prefill bodies and the eager reference; only the attention
+    #    middle differs between them) ----------------------------------------
+
+    def _attn_inputs(self, lp, h, positions):
+        """Pre-norm -> q/k/v projections -> RoPE at ``positions``."""
+        cfg = self.cfg
+        a = L.apply_norm(lp["attn_norm"], h, cfg.norm)
+        q, k, v = L._qkv(lp["attn"], a, cfg)
+        if cfg.rope:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    def _attn_out_ffn(self, lp, h, o_flat):
+        """Attention output-projection residual + FFN residual.
+        o_flat: [B, S, H*D]."""
+        cfg = self.cfg
+        h = h + o_flat @ lp["attn"]["wo"].astype(h.dtype)
+        m = L.apply_norm(lp["mlp_norm"], h, cfg.norm)
+        if cfg.is_moe:
+            mo, _ = L.apply_moe(lp["mlp"], m, cfg, no_drop=True)
+        else:
+            mo = L.apply_mlp(lp["mlp"], m, cfg.act)
+        return h + mo
+
+    # -- jitted device programs ----------------------------------------------
+
+    def decode_step(self, params, k_pages, v_pages, page_table, lengths,
+                    tokens):
+        """One fused decode step for the whole active batch.
+
+        k_pages/v_pages: [L, P, page, Hkv, D] stacked store; page_table:
+        [B, pps] int32 physical ids; lengths: [B] int32 committed length
+        per sequence (0 marks a padding slot); tokens: [B] int32.
+
+        Appends each sequence's new K/V into its current page for every
+        layer (one batched scatter per layer inside the scan — no
+        per-sequence host loop) and runs the Pallas paged_attention
+        kernel per layer via ``lax.scan``.  Returns (logits [B, V] f32,
+        k_pages, v_pages).
+        """
+        cfg = self.cfg
+        b = tokens.shape[0]
+        n_phys = k_pages.shape[1]
+        valid = lengths > 0                      # padding slots carry 0
+        pos = lengths[:, None]                   # new token's position
+        pidx = lengths // self.page
+        offs = lengths % self.page
+        phys = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+        # out-of-bounds sentinel => scatter drops padding slots
+        phys = jnp.where(valid, phys, n_phys)
+        new_lengths = lengths + valid.astype(jnp.int32)
+
+        h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
+
+        def body(hh, xs):
+            lp, kp, vp = xs
+            q, k, v = self._attn_inputs(lp, hh, pos)
+            # batched append: all sequences' new K/V in one scatter
+            kp = kp.at[phys, offs].set(k[:, 0].astype(kp.dtype),
+                                       mode="drop")
+            vp = vp.at[phys, offs].set(v[:, 0].astype(vp.dtype),
+                                       mode="drop")
+            o = _paged_inner(q[:, 0].astype(self.dtype), kp, vp,
+                             page_table, new_lengths,
+                             interpret=self._interpret)
+            return self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)), (kp, vp)
+
+        h, (k_pages, v_pages) = lax.scan(
+            body, h, (params["layers"], k_pages, v_pages))
         h = L.apply_norm(params["final_norm"], h, cfg.norm)
         logits = L.unembed(params["embed"], params.get("lm_head"), h,
                            cfg.tie_embeddings)[:, 0]
+        return logits, k_pages, v_pages
+
+    def prefill_step(self, params, k_pages, v_pages, tokens, phys, length):
+        """One-shot prefill: run the whole (page-padded) prompt through
+        the layer stack and write full prompt pages into the store.
+
+        tokens: [1, S_pad] int32 with S_pad a page multiple; phys:
+        [S_pad // page] int32 physical destinations; length: scalar int32
+        true prompt length.  Returns (last-real-token logits [V] f32,
+        k_pages, v_pages).
+        """
+        cfg = self.cfg
+        s_pad = tokens.shape[1]
+        n_pages = s_pad // self.page
+        positions = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+        h = L.embed_tokens(params["embed"], tokens, self.dtype)
+
+        def body(hh, xs):
+            lp, kp, vp = xs
+            q, k, v = self._attn_inputs(lp, hh, positions)
+            o = L.chunked_attention(q, k, v, causal=True,
+                                    positions_q=positions,
+                                    positions_k=positions)
+            # whole prompt pages in one scatter (positions past `length`
+            # are garbage the kernel masks by sequence length; padding
+            # pages carry an out-of-bounds id and are dropped)
+            kpg = k[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+            vpg = v[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+            kp = kp.at[phys].set(kpg.astype(kp.dtype), mode="drop")
+            vp = vp.at[phys].set(vpg.astype(vp.dtype), mode="drop")
+            return self._attn_out_ffn(lp, hh, o.reshape(1, s_pad, -1)), \
+                (kp, vp)
+
+        h, (k_pages, v_pages) = lax.scan(
+            body, h, (params["layers"], k_pages, v_pages))
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        last = lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        logits = L.unembed(params["embed"], params.get("lm_head"), last,
+                           cfg.tie_embeddings)[0, 0]
+        return logits, k_pages, v_pages
+
+    # -- request handling -----------------------------------------------------
+
+    def add_request(self, seq_id: int, prompt: np.ndarray):
+        """Admit a sequence: one jitted prefill writes the whole prompt's
+        pages (no token-by-token teacher forcing).  Returns the last
+        prompt position's logits [V].
+
+        Like the kernel view it feeds, the active working set must fit
+        the HBM window (admission control's ``pages_needed`` contract);
+        a prompt needing more pages than the window raises the same
+        pinned-working-set error the per-token path raised.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        s = int(prompt.shape[0])
+        assert s >= 1, "empty prompt"
+        self.table.add_sequence(seq_id)
+        self._seqs.append(seq_id)
+        try:
+            try:
+                phys = self.table.ensure_resident(seq_id, pin=True,
+                                                  n_tokens=s)
+            finally:
+                self.table.unpin_all()
+            # bucket the padded prompt to a power-of-two page count;
+            # padding pages get an out-of-bounds destination (dropped by
+            # the scatter)
+            n_pages_pad = _pow2(len(phys))
+            phys = list(phys) + [self.hbm_pages] * (n_pages_pad - len(phys))
+            s_pad = n_pages_pad * self.page
+            tokens = np.zeros((1, s_pad), np.int32)
+            tokens[0, :s] = prompt
+            logits, k_pages, v_pages = self._prefill_jit(
+                self.params, self.store.k_pages, self.store.v_pages,
+                jnp.asarray(tokens), jnp.asarray(phys, jnp.int32),
+                jnp.asarray(s, jnp.int32))
+        except Exception:
+            # rejected admissions must not leak window pages or leave a
+            # zero-length ghost in the live set; a failure inside the
+            # donated jit call additionally voids the store
+            self.free_sequence(seq_id)
+            self._recover_store()
+            raise
+        self.store.adopt(k_pages, v_pages)
+        self.table.set_length(seq_id, s)
+        self._pending[seq_id] = int(jnp.argmax(logits))
+        return logits
+
+    # -- one committed batched step -------------------------------------------
+
+    def _plan_step(self, seqs: List[int]):
+        """Host-side page management for one decode step: make every
+        active page resident + pinned, then build the padded device
+        inputs.  Shapes are bucketed to powers of two."""
+        try:
+            rows = [self.table.prepare_append(s) for s in seqs]
+        except Exception:
+            self.table.unpin_all()
+            raise
+        lengths = [self.table.length(s) for s in seqs]
+        pps = _pow2(max(len(r) for r in rows))
+        b2 = _pow2(len(seqs))
+        table = np.zeros((b2, pps), np.int32)
+        for i, r in enumerate(rows):
+            table[i, :len(r)] = r
+        lens = np.zeros((b2,), np.int32)
+        lens[:len(seqs)] = lengths
+        return jnp.asarray(table), jnp.asarray(lens)
+
+    def step_batch(self, tokens: Dict[int, int]):
+        """Feed one token per sequence through a single jitted step and
+        commit the appends.  Returns (seq_ids, logits [B, V]) — one
+        device array, so callers sample with one transfer."""
+        seqs = list(tokens)
+        page_table, lengths = self._plan_step(seqs)
+        try:
+            toks = np.zeros((lengths.shape[0],), np.int32)
+            toks[:len(seqs)] = [tokens[s] for s in seqs]
+            logits, k_pages, v_pages = self._decode_jit(
+                self.params, self.store.k_pages, self.store.v_pages,
+                page_table, lengths, jnp.asarray(toks))
+            self.store.adopt(k_pages, v_pages)
+            for s in seqs:
+                self.table.commit_append(s)
+        except Exception:
+            self._recover_store()
+            raise
+        finally:
+            self.table.unpin_all()
+        return seqs, logits[:len(seqs)]
+
+    def step(self, tokens: Dict[int, int]) -> Dict[int, jnp.ndarray]:
+        """Dict-shaped wrapper of :meth:`step_batch`:
+        returns {seq_id: logits [V]}."""
+        seqs, logits = self.step_batch(tokens)
         return {s: logits[i] for i, s in enumerate(seqs)}
 
-    # -- telemetry -----------------------------------------------------------------
+    def step_reference(self, tokens: Dict[int, int]) -> jnp.ndarray:
+        """Unjitted reference of one decode step on the *seed* schedule:
+        Python loop over layers, per-layer param slicing, one eager
+        scalar append per sequence, per-layer page-table rebuild.  Does
+        NOT commit — used for equivalence tests and as the benchmark
+        baseline.  Returns logits [B, V] in ``tokens`` order."""
+        cfg = self.cfg
+        seqs = list(tokens)
+        try:
+            rows = [self.table.prepare_append(s) for s in seqs]
+            lengths = [self.table.length(s) for s in seqs]
+            pos = jnp.asarray([[l] for l in lengths], jnp.int32)
+            b = len(seqs)
+            toks = jnp.asarray([tokens[s] for s in seqs], jnp.int32)
+            new_lengths = jnp.asarray([l + 1 for l in lengths], jnp.int32)
+            h = L.embed_tokens(self.params["embed"], toks[:, None],
+                               self.dtype)
+            for li in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[li], self.params["layers"])
+                kp, vp = self.store.layer(li)
+                q, k, v = self._attn_inputs(lp, h, pos)
+                # seed schedule: one scalar append per sequence
+                for bi, (l, row) in enumerate(zip(lengths, rows)):
+                    kp = kp.at[row[l // self.page], l % self.page].set(
+                        k[bi, 0].astype(kp.dtype))
+                    vp = vp.at[row[l // self.page], l % self.page].set(
+                        v[bi, 0].astype(vp.dtype))
+                # seed schedule: page table rebuilt per layer
+                max_pages = max(len(r) for r in rows)
+                page_table = jnp.asarray(
+                    [r + [0] * (max_pages - len(r)) for r in rows],
+                    jnp.int32)
+                o = ops.paged_attention(q[:, 0].astype(self.dtype), kp, vp,
+                                        page_table, new_lengths)
+                h = self._attn_out_ffn(lp, h, o.reshape(b, 1, -1))
+            h = L.apply_norm(self.params["final_norm"], h, cfg.norm)
+            logits = L.unembed(self.params["embed"],
+                               self.params.get("lm_head"), h,
+                               cfg.tie_embeddings)[:, 0]
+        finally:
+            self.table.unpin_all()
+        return logits
+
+    # -- decode loop ----------------------------------------------------------
+
+    def decode(self, n_tokens: int, greedy: bool = True,
+               seqs: Optional[List[int]] = None) -> Dict[int, list]:
+        """Batched greedy decode across live sequences (or a subset — the
+        HBM window only needs to hold the *active* batch's working set;
+        idle sequences spill to the flash tier)."""
+        active = self._seqs if seqs is None else seqs
+        out = {s: [] for s in active}
+        # page-in overlap model: pull any spilled pages of the activating
+        # batch before the token loop starts
+        for s in active:
+            self.table.prefetch(s)
+        # continue from the tokens pending after prefill
+        cur = {s: self._pending.get(s, 0) for s in active}
+        for _ in range(n_tokens):
+            seqs, logits = self.step_batch(cur)
+            # one batched argmax + one device->host transfer per token,
+            # not one per sequence
+            nxt_arr = np.asarray(jnp.argmax(logits, axis=-1))
+            cur = {s: int(nxt_arr[i]) for i, s in enumerate(seqs)}
+            for s in active:
+                out[s].append(cur[s])
+        self._pending.update(cur)
+        return out
+
+    # -- telemetry -----------------------------------------------------------
 
     def tier_stats(self) -> Dict[str, int]:
-        agg = {}
-        for c in self.caches:
-            for k, v in vars(c.stats).items():
-                agg[k] = agg.get(k, 0) + v
-        agg["residency"] = float(np.mean([c.residency()
-                                          for c in self.caches]))
+        agg = dict(vars(self.table.stats))
+        agg["residency"] = self.table.residency()
         return agg

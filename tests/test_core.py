@@ -262,9 +262,18 @@ def test_pool_straggler_detection():
 
 
 def test_pool_elastic_scale():
-    pool = StoragePool(2)
+    pool = StoragePool(2, array_size=4)
     pool.scale_to(5)
     assert len(pool.alive_nodes()) == 5
+    # newly added nodes must be first-class members: λFS lock syncs ride
+    # the pool driver and the array topology respects array_size
+    for node in pool.nodes.values():
+        assert node.fs._ether is pool.driver
+    assert sum(len(a) for a in pool.arrays) == 5
+    assert [len(a) for a in pool.arrays] == [4, 1]
+    # placement across old + new nodes works (lock syncs don't break)
+    pl = pool.place_distributed("job", "img", tp=5)
+    assert len(pl.node_ips) == 5
 
 
 def test_pool_pipeline_stages():

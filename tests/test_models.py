@@ -10,6 +10,9 @@ import pytest
 from repro.configs.base import ARCH_IDS, SHAPES, ShapeConfig, cells, get_arch
 from repro.models.api import get_model
 
+# heaviest suite in the repo: every arch x (train step, prefill/decode)
+pytestmark = pytest.mark.slow
+
 SMOKE = ShapeConfig("smoke", 64, 2, "train")
 
 

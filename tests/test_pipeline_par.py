@@ -5,6 +5,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# subprocess with 8 forced host devices: heavy
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -22,13 +27,14 @@ def _run(code: str, devices: int = 8) -> str:
 def test_pipeline_loss_and_grads_match_reference():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import auto_axis_kwargs
         from repro.configs.base import get_arch
         from repro.models.api import get_model
         from repro.runtime.pipeline_par import make_pipeline_loss
 
         cfg = get_arch("granite_3_2b").reduced()   # 2 layers -> 2 stages
         mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                             **auto_axis_kwargs(("pod", "data")))
         model = get_model(cfg, compute_dtype=jnp.float32, remat="none")
         params = model.init(jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0,

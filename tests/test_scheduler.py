@@ -1,6 +1,7 @@
 """Continuous batching over the tiered PagedServer: outputs must match
-isolated (one-request-at-a-time) serving, pages must be reclaimed, and
-admission must respect the HBM window."""
+isolated (one-request-at-a-time) serving, pages must be reclaimed via
+the public free_sequence API, and admission must respect the HBM
+window."""
 import dataclasses
 
 import jax
@@ -23,7 +24,7 @@ def _tiny():
 
 def _isolated_reference(model, params, prompt, gen):
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=64, dtype=jnp.float32)
+                         hbm_pages=64, dtype=jnp.float32)
     last = server.add_request(0, prompt)
     out = [int(jnp.argmax(last))]
     out += server.decode(gen - 1, seqs=[0])[0]
@@ -40,7 +41,7 @@ def test_continuous_batching_matches_isolated():
             for p, g in zip(prompts, gens)]
 
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=10, dtype=jnp.float32)
+                         hbm_pages=10, dtype=jnp.float32)
     sched = ContinuousBatcher(server, max_active=2)
     for i, (p, g) in enumerate(zip(prompts, gens)):
         sched.submit(Request(rid=i, prompt=p, max_tokens=g))
@@ -55,24 +56,25 @@ def test_pages_reclaimed_after_completion():
     cfg, model, params = _tiny()
     rng = np.random.default_rng(1)
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=8, dtype=jnp.float32)
+                         hbm_pages=8, dtype=jnp.float32)
     sched = ContinuousBatcher(server, max_active=1)
     for i in range(3):
         sched.submit(Request(rid=i, prompt=rng.integers(
             0, cfg.vocab_size, 5, dtype=np.int32), max_tokens=3))
     stats = sched.run_to_completion()
     assert stats["requests"] == 3
-    # all pages are free again
-    for cache in server.caches:
-        assert len(cache._free) == cache.hbm_pages
-        assert not cache._resident and not cache._host
+    # all pages are free again, in both tiers
+    assert server.table.free_pages == server.hbm_pages
+    assert server.table.resident_pages == 0
+    assert server.table.host_pages == 0
+    assert server.sequence_ids() == []
 
 
 def test_admission_respects_window():
     cfg, model, params = _tiny()
     rng = np.random.default_rng(2)
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=4, dtype=jnp.float32)
+                         hbm_pages=4, dtype=jnp.float32)
     sched = ContinuousBatcher(server, max_active=4)
     # each request needs 3 pages; window holds one at a time
     for i in range(2):
@@ -82,3 +84,24 @@ def test_admission_respects_window():
     assert len(sched.active) <= 1          # second request had to wait
     stats = sched.run_to_completion()
     assert stats["requests"] == 2
+
+
+def test_retired_slot_reused_by_waiting_request():
+    """A retired rid frees its pages immediately and the next waiting
+    request takes the physical slots within the same scheduler loop."""
+    cfg, model, params = _tiny()
+    rng = np.random.default_rng(3)
+    # window fits exactly one request's working set (3 pages of 4 toks)
+    server = PagedServer(model, params, page_size=4,
+                         hbm_pages=3, dtype=jnp.float32)
+    sched = ContinuousBatcher(server, max_active=2)
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 6, dtype=np.int32), max_tokens=4))
+    sched.step()
+    assert list(sched.active) == [0]       # rid 1 waits on the window
+    stats = sched.run_to_completion()
+    assert stats["requests"] == 2
+    finished_order = [r.rid for r in sched.finished]
+    assert finished_order == [0, 1]        # slot handed over after retire
+    assert server.table.free_pages == server.hbm_pages

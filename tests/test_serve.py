@@ -1,6 +1,6 @@
-"""Serving path tests: PagedServer (tiered KV + Pallas paged_attention)
-must produce the same logits as the dense decode path, including under
-HBM-window eviction pressure."""
+"""Serving path tests: PagedServer (tiered KV + Pallas paged_attention,
+one jitted decode step per token) must produce the same logits as the
+dense decode path, including under HBM-window eviction pressure."""
 import dataclasses
 
 import jax
@@ -50,7 +50,7 @@ def test_paged_server_matches_dense(hbm_pages):
     ref_tokens = _dense_reference(model, params, prompts, gen)
 
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=hbm_pages, dtype=jnp.float32)
+                         hbm_pages=hbm_pages, dtype=jnp.float32)
     lasts = [server.add_request(i, prompts[i]) for i in range(B)]
     first = np.asarray([int(jnp.argmax(l)) for l in lasts])
     np.testing.assert_array_equal(first, ref_tokens[:, 0])
@@ -71,7 +71,7 @@ def test_paged_server_eviction_correct():
 
     # 4 pages < 2 seqs x 3 pages: serving B evicts A's pages
     server = PagedServer(model, params, page_size=4,
-                         hbm_pages_per_layer=4, dtype=jnp.float32)
+                         hbm_pages=4, dtype=jnp.float32)
     first = []
     for i in range(B):
         first.append(int(jnp.argmax(server.add_request(i, prompts[i]))))
@@ -83,6 +83,120 @@ def test_paged_server_eviction_correct():
     stats = server.tier_stats()
     assert stats["page_outs"] > 0
     assert stats["page_ins"] > 0
+
+
+def test_decode_step_matches_reference_loop():
+    """The single jitted decode_step must reproduce the per-layer Python
+    loop (seed schedule) to within 1e-4 on raw logits."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(3)
+    B, S = 3, 9
+    prompts = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+    server = PagedServer(model, params, page_size=4,
+                         hbm_pages=32, dtype=jnp.float32)
+    for i in range(B):
+        server.add_request(i, prompts[i])
+    for _ in range(3):                   # several steps, growing context
+        toks = {i: server._pending[i] for i in range(B)}
+        ref = np.asarray(server.step_reference(toks))   # no commit
+        got = server.step(toks)                         # commits
+        got = np.stack([np.asarray(got[i]) for i in range(B)])
+        np.testing.assert_allclose(got, ref, atol=1e-4)
+        server._pending = {i: int(np.argmax(got[i])) for i in range(B)}
+
+
+def test_prefill_then_decode_equals_prefill_as_decode():
+    """One-shot page-writing prefill must be equivalent to teacher-forcing
+    the prompt token-by-token through the jitted decode step."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(7)
+    S, gen = 9, 4
+    prompt = rng.integers(0, cfg.vocab_size, S, dtype=np.int32)
+
+    a = PagedServer(model, params, page_size=4, hbm_pages=16,
+                    dtype=jnp.float32)
+    last_a = a.add_request(0, prompt)               # one-shot prefill
+    out_a = [int(jnp.argmax(last_a))] + a.decode(gen, seqs=[0])[0]
+
+    b = PagedServer(model, params, page_size=4, hbm_pages=16,
+                    dtype=jnp.float32)
+    last_b = b.add_request(0, prompt[:1])           # 1-token prefill...
+    for t in prompt[1:]:                            # ...then teacher-force
+        last_b = b.step({0: int(t)})[0]
+    np.testing.assert_allclose(np.asarray(last_a), np.asarray(last_b),
+                               atol=1e-4)
+    b._pending[0] = int(jnp.argmax(last_b))
+    out_b = [int(jnp.argmax(last_b))] + b.decode(gen, seqs=[0])[0]
+    assert out_a == out_b
+
+
+def test_batch_shape_bucketing_reuses_compilation():
+    """Decode shapes are bucketed to powers of two: batches of 3 and 4
+    share one compiled step, so continuous batching does not retrace per
+    batch-size fluctuation."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(1)
+    server = PagedServer(model, params, page_size=4, hbm_pages=32,
+                         dtype=jnp.float32)
+    if not hasattr(server._decode_jit, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this jax")
+    for i in range(4):
+        server.add_request(i, rng.integers(0, cfg.vocab_size, 5,
+                                           dtype=np.int32))
+    server.decode(1, seqs=[0, 1, 2])
+    sig0 = server._decode_jit._cache_size()
+    server.decode(1, seqs=[0, 1, 2, 3])    # same pow2 bucket (4)
+    assert server._decode_jit._cache_size() == sig0
+    server.decode(1, seqs=[0])             # bucket 1 -> one new trace
+    assert server._decode_jit._cache_size() == sig0 + 1
+
+
+def test_free_sequence_reclaims_both_tiers():
+    """free_sequence must return every page in HBM *and* the host tier."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(2)
+    server = PagedServer(model, params, page_size=4, hbm_pages=4,
+                         dtype=jnp.float32)
+    p0 = rng.integers(0, cfg.vocab_size, 10, dtype=np.int32)  # 3 pages
+    p1 = rng.integers(0, cfg.vocab_size, 10, dtype=np.int32)
+    server.add_request(0, p0)
+    server.add_request(1, p1)                 # evicts part of seq 0
+    assert server.table.host_pages > 0        # seq 0 spilled
+    freed = server.free_sequence(0)
+    assert freed == 3                         # HBM + host pages combined
+    assert all(k[0] != 0 for k in server.table._resident)
+    assert all(k[0] != 0 for k in server.table._host)
+    # remaining sequence still decodes fine
+    server.decode(2, seqs=[1])
+
+
+def test_failed_donated_step_recovers_store():
+    """On accelerators the jitted step donates the store arrays; if the
+    call fails mid-execution the old buffers are gone.  The server must
+    reopen an empty window (sequences dropped, later requests fine)
+    instead of poisoning every later step with deleted arrays."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(5)
+    server = PagedServer(model, params, page_size=4, hbm_pages=16,
+                         dtype=jnp.float32)
+    server.add_request(0, rng.integers(0, cfg.vocab_size, 6, dtype=np.int32))
+
+    def failing_jit(*a, **k):
+        # emulate a donated call dying mid-execution: inputs consumed
+        server.store.k_pages.delete()
+        server.store.v_pages.delete()
+        raise RuntimeError("RESOURCE_EXHAUSTED")
+
+    orig = server._decode_jit
+    server._decode_jit = failing_jit
+    with pytest.raises(RuntimeError):
+        server.step({0: 1})
+    server._decode_jit = orig
+    assert server.sequence_ids() == []            # cache declared lost
+    assert server.table.free_pages == server.hbm_pages
+    # the server stays serviceable
+    server.add_request(1, rng.integers(0, cfg.vocab_size, 6, dtype=np.int32))
+    assert len(server.decode(2, seqs=[1])[1]) == 2
 
 
 def test_make_serving_fns_runs():

@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# multi-device subprocess tests: minutes of wall clock
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -27,6 +30,7 @@ def _run(code: str, devices: int = 8) -> str:
 def test_sharded_train_step_matches_single_device():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import auto_axis_kwargs
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs.base import get_arch
         from repro.models.api import get_model
@@ -50,7 +54,7 @@ def test_sharded_train_step_matches_single_device():
 
         # sharded on a (2, 4) data x model mesh
         mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                             **auto_axis_kwargs(("data", "model")))
         pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                               shd.param_specs(mesh, params))
         oshard = type(opt)(step=NamedSharding(mesh, P()),
@@ -73,6 +77,7 @@ def test_sharded_decode_matches_single_device():
     numerically identical to unsharded decode."""
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import auto_axis_kwargs
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs.base import get_arch
         from repro.models.api import get_model
@@ -94,7 +99,7 @@ def test_sharded_decode_matches_single_device():
         lg_ref, _ = jax.jit(model.decode_step)(params, cache, toks[:, S//2])
 
         mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                             **auto_axis_kwargs(("data", "model")))
         pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                               shd.param_specs(mesh, params))
         cshard = shd.to_shardings(
@@ -122,7 +127,8 @@ def test_small_mesh_dryrun_cell():
         lm.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
             (2, 2, 2) if multi_pod else (2, 4),
             ("pod", "data", "model") if multi_pod else ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi_pod else 2))
+            **__import__("repro.launch.mesh", fromlist=["auto_axis_kwargs"]).auto_axis_kwargs(
+                ("x",) * (3 if multi_pod else 2)))
         dr.make_production_mesh = lm.make_production_mesh
         import repro.configs.base as cb
         import dataclasses
@@ -145,6 +151,7 @@ def test_elastic_mesh_checkpoint_reshard(tmp_path):
     """Save under one mesh, restore under a degraded mesh."""
     stdout = _run(f"""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import auto_axis_kwargs
         from jax.sharding import NamedSharding
         from repro.checkpoint import CheckpointManager
         from repro.configs.base import get_arch
@@ -176,6 +183,7 @@ def test_moe_shardmap_equals_dense_on_mesh():
     """shard_map MoE (EXPERIMENTS.md §Perf iter 3) == dense dispatch."""
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import auto_axis_kwargs
         from jax.sharding import NamedSharding
         from repro.configs.base import get_arch
         from repro.models.api import get_model
@@ -183,7 +191,7 @@ def test_moe_shardmap_equals_dense_on_mesh():
 
         cfg = get_arch("phi3_5_moe_42b_a6_6b").reduced()   # 4 experts
         mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                             **auto_axis_kwargs(("data", "model")))
         m_d = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
         m_s = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True,
                         moe_impl="shardmap")
