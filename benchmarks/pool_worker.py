@@ -1,0 +1,119 @@
+"""Subprocess worker for ``benchmarks/run.py pool``.
+
+One pool size per process: the simulated node count is an XLA device
+count, which must be fixed before jax is imported, so the parent
+benchmark launches one worker per cell.  Prints a JSON record on
+stdout: tokens/s of the batched decode, the greedy outputs and the
+prefill logits (the parent checks every pool size against the 1-node
+``PagedServer`` reference to 1e-4), tier telemetry and the Ether-oN
+control-plane terms.
+
+  python benchmarks/pool_worker.py --nodes 4 [--mode pool|single] \
+      [--requests 6 --prompt-len 24 --gen 16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, required=True)
+    ap.add_argument("--mode", choices=["pool", "single"], default="pool")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    args = ap.parse_args()
+
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_"
+                               f"device_count={args.nodes}").strip()
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_arch
+    from repro.core import analytical as A
+    from repro.core.storage_pool import StoragePool
+    from repro.models.api import get_model
+
+    # the demo config of examples/serve_pool.py / BENCH_serve.json
+    cfg = dataclasses.replace(
+        get_arch("granite-3-2b"),
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+        vocab_size=512)
+    model = get_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
+                            dtype=np.int32) for _ in range(args.requests)]
+
+    rec = {"nodes": args.nodes, "mode": args.mode}
+    if args.mode == "single":
+        from repro.runtime.serve import PagedServer
+        server = PagedServer(model, params, page_size=args.page_size,
+                             hbm_pages=8 * args.requests,
+                             dtype=jnp.float32)
+        pool = None
+    else:
+        from repro.runtime.pool import PoolServer
+        server = PoolServer(
+            model, params, n_nodes=args.nodes, page_size=args.page_size,
+            hbm_pages_per_node=-(-8 * args.requests // args.nodes),
+            dtype=jnp.float32)
+        pool = StoragePool(args.nodes)
+        pool.attach_server(server)
+
+    # admission through the frontend (pool mode: placement rides an
+    # Ether-oN control frame to the chosen node before the shard admits)
+    logits = []
+    for i, p in enumerate(prompts):
+        if pool is not None:
+            node = pool.place_sequence(i, args.prompt_len + args.gen)
+            last = server.add_request(i, p, node=node)
+        else:
+            last = server.add_request(i, p)
+        logits.append(np.asarray(last, np.float64).tolist())
+
+    server.decode(args.gen)          # warm every shape bucket + compile
+    for s in list(server.sequence_ids()):
+        server.free_sequence(s)
+    for i, p in enumerate(prompts):  # re-admit for the timed run
+        if pool is not None:
+            node = pool.place_sequence(i, args.prompt_len + args.gen)
+            server.add_request(i, p, node=node)
+        else:
+            server.add_request(i, p)
+
+    t0 = time.perf_counter()
+    out = server.decode(args.gen)
+    dt = time.perf_counter() - t0
+
+    toks = args.requests * args.gen
+    rec["tokens_per_s"] = toks / dt
+    rec["decode_s"] = dt
+    rec["outputs"] = {int(k): [int(t) for t in v] for k, v in out.items()}
+    rec["prefill_logits"] = logits
+    rec["tier"] = {k: v for k, v in server.tier_stats().items()}
+    if pool is not None:
+        rec["node_tier"] = server.node_tier_stats()
+        rec["control_plane"] = A.control_plane_terms(
+            pool.driver.stats, toks)
+    print(json.dumps(rec))
+
+
+if __name__ == "__main__":
+    main()

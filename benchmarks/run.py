@@ -298,6 +298,74 @@ def serve_decode(out_path="BENCH_serve.json"):
 
 
 # ---------------------------------------------------------------------------
+# pool serving — distributed decode across 1/2/4/8 simulated DockerSSDs
+# ---------------------------------------------------------------------------
+
+
+def pool_serving(out_path="BENCH_pool.json", quick=False):
+    """Pool-serving scaling benchmark: the same workload through the
+    1-node ``PagedServer`` and the mesh-sharded ``PoolServer`` on
+    1/2/4/8 simulated nodes (forced host devices — each pool size is a
+    subprocess because the device count binds at jax import).  Asserts
+    the pool path matches the single-node reference to 1e-4 on prefill
+    logits and exactly on greedy outputs, then writes ``BENCH_pool.json``
+    with per-pool-size tokens/s.  CPU simulation numbers measure the
+    mechanism (one jitted step per token, LSE-merged partials), not TPU
+    perf."""
+    import subprocess
+    import sys as _sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    worker = os.path.join(repo, "benchmarks", "pool_worker.py")
+    sizes = [1, 2] if quick else [1, 2, 4, 8]
+    # the one source of truth for the workload: passed to every worker
+    # and recorded in the artifact
+    wl = {"requests": 6, "prompt_len": 24, "gen": 16, "page_size": 8}
+
+    def run(mode, nodes):
+        out = subprocess.run(
+            [_sys.executable, worker, "--nodes", str(nodes),
+             "--mode", mode]
+            + [f"--{k.replace('_', '-')}={v}" for k, v in wl.items()],
+            capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.splitlines()[-1])
+
+    ref = run("single", 1)
+    ref_logits = np.asarray(ref["prefill_logits"])
+    result = {
+        "config": dict(wl, sizes=sizes, match_tol=1e-4),
+        "single_node_tokens_per_s": ref["tokens_per_s"],
+        "pool": {},
+    }
+    for n in sizes:
+        rec = run("pool", n)
+        diff = float(np.max(np.abs(
+            np.asarray(rec["prefill_logits"]) - ref_logits)))
+        assert diff < 1e-4, f"pool({n}) diverged from 1-node: {diff}"
+        assert rec["outputs"] == ref["outputs"], \
+            f"pool({n}) greedy outputs diverged"
+        result["pool"][str(n)] = {
+            "tokens_per_s": rec["tokens_per_s"],
+            "scaling_vs_single": rec["tokens_per_s"] / ref["tokens_per_s"],
+            "max_abs_logit_diff": diff,
+            "control_plane": rec["control_plane"],
+            "node_tier": rec["node_tier"],
+        }
+        _csv(f"pool_serving_{n}", rec["decode_s"] / wl["gen"] * 1e6,
+             f"tok_s={rec['tokens_per_s']:.1f},diff={diff:.2e}")
+        print(f"  {n} node(s): {rec['tokens_per_s']:.1f} tok/s "
+              f"({rec['tokens_per_s'] / ref['tokens_per_s']:.2f}x vs "
+              f"1-node PagedServer) | max |dlogit| {diff:.2e} | "
+              f"{rec['control_plane']['us_per_token']:.2f} us/token "
+              f"control plane")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  outputs match the single-node reference on every pool size "
+          f"(-> {out_path})")
+
+
+# ---------------------------------------------------------------------------
 # roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -338,16 +406,27 @@ BENCHES = {
     "table2": table2_workloads,
     "kernels": kernel_micro,
     "serve": serve_decode,
+    "pool": pool_serving,
     "roofline": roofline_table,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(BENCHES)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("benches", nargs="*", choices=[[]] + list(BENCHES),
+                    help="benchmarks to run (default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="pool: 1/2 nodes instead of 1/2/4/8")
+    args = ap.parse_args()
+    which = args.benches or list(BENCHES)
     print("name,us_per_call,derived")
     for name in which:
         print(f"== {name} " + "=" * (66 - len(name)))
-        BENCHES[name]()
+        if name == "pool":
+            BENCHES[name](quick=args.quick)
+        else:
+            BENCHES[name]()
 
 
 if __name__ == "__main__":

@@ -1,19 +1,32 @@
 """Distributed LLM inference on the computing-enabled storage pool —
-the paper's case study (Fig 8b) at demo scale.
+the paper's case study (Fig 8b) at demo scale, on the *pool* path.
 
-Serves a small GQA decoder with batched requests through the **tiered
-paged KV cache** (host-side PageTableManager + device PageStore with
-stacked per-layer pages) and the Pallas ``paged_attention`` kernel —
-each generated token is ONE jitted decode step for the whole batch and
-every layer.  Reports the D-Cache-style telemetry (page-ins/outs,
-prefetch hits) plus the analytical pool model's verdict for the
-full-size systems.
+One request flows through the whole stack: the ``StoragePool`` frontend
+admits it (an Ether-oN control frame carries the placement to the
+chosen DockerSSD), the ``PoolRouter`` does least-loaded placement and
+per-node admission control, and every generated token is ONE jitted
+``shard_map``-ped decode step spanning all nodes — each ``model``-axis
+shard of the PageStore is one node's HBM window, per-node paged
+attention partials are merged with log-sum-exp collectives.  Mid-run a
+node is killed: the heartbeat machinery drops its sequences and the
+router re-prefills them on the survivors, reproducing the exact greedy
+outputs of an uninterrupted run.
 
   PYTHONPATH=src python examples/serve_pool.py
 """
 import dataclasses
+import os
+import re
 import sys
 import time
+
+N_NODES = 4
+# pool nodes are simulated as host devices; the count must be fixed
+# before jax is imported
+flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+               os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = \
+    f"{flags} --xla_force_host_platform_device_count={N_NODES}".strip()
 
 sys.path.insert(0, "src")
 
@@ -23,7 +36,10 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.core import analytical as A
+from repro.core.storage_pool import StoragePool
 from repro.models.api import get_model
+from repro.runtime.pool import PoolServer
+from repro.runtime.scheduler import PoolRouter, Request
 from repro.runtime.serve import PagedServer
 
 
@@ -34,30 +50,60 @@ def main():
         vocab_size=512)
     model = get_model(cfg, compute_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
-
-    # deliberately small HBM window -> the flash tier gets exercised
-    server = PagedServer(model, params, page_size=8,
-                         hbm_pages=12, dtype=jnp.float32)
     rng = np.random.default_rng(0)
-    n_req, prompt_len, gen = 3, 24, 16
-    t0 = time.time()
-    for i in range(n_req):
-        prompt = rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
-        server.add_request(i, prompt)
-    # the HBM window holds two active requests; the third spills to the
-    # flash tier and pages back in when its turn comes (D-Cache tiering)
-    out = server.decode(gen, seqs=[0, 1])
-    out.update(server.decode(gen, seqs=[2]))
-    dt = time.time() - t0
-    toks = n_req * (prompt_len + gen)
+    n_req, prompt_len, gen = 6, 24, 12
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+               for _ in range(n_req)]
+
+    # single-node reference (the PR-1 path) for the equivalence check
+    ref = PagedServer(model, params, page_size=8, hbm_pages=64,
+                      dtype=jnp.float32)
+    ref_out = {}
+    for i, p in enumerate(prompts):
+        ref_out[i] = [int(jnp.argmax(ref.add_request(i, p)))]
+    for i, toks in ref.decode(gen - 1).items():
+        ref_out[i] += toks
+
+    # the pool: frontend -> Ether-oN control plane -> placement ->
+    # mesh-sharded decode
+    server = PoolServer(model, params, n_nodes=N_NODES, page_size=8,
+                        hbm_pages_per_node=16, dtype=jnp.float32)
+    pool = StoragePool(N_NODES, heartbeat_timeout=0.0)
+    pool.attach_server(server)
+    router = PoolRouter(server, pool, max_active=n_req)
+    t0 = time.monotonic()
+    for i, p in enumerate(prompts):
+        router.submit(Request(rid=i, prompt=p, max_tokens=gen))
+    # a few steps in, one DockerSSD dies mid-decode
+    router.step()
+    router.step()
+    victim = server.node_of(0)
+    dead_ip = pool.serving_ips()[victim]
+    pool.nodes[dead_ip].fail()
+    print(f"killed node {victim} ({dead_ip}) mid-decode")
+    stats = router.run_to_completion()
+    dt = time.monotonic() - t0
+
+    by_id = {r.rid: r.output for r in router.finished}
+    assert all(by_id[i][:len(ref_out[i])] == ref_out[i]
+               for i in range(n_req)), "pool outputs diverged from 1-node"
+    toks = sum(len(o) for o in by_id.values())
     print(f"served {n_req} requests x ({prompt_len} prompt + {gen} gen) "
-          f"= {toks} tokens in {dt:.1f}s")
-    stats = server.tier_stats()
-    print(f"tiered-KV telemetry: page_ins={stats['page_ins']} "
-          f"page_outs={stats['page_outs']} hits={stats['hits']} "
-          f"prefetch_hits={stats['prefetch_hits']} "
-          f"residency={stats['residency']:.2f}")
-    print("sample generations:", {k: v[:6] for k, v in out.items()})
+          f"over {N_NODES} nodes in {dt:.1f}s — outputs identical to the "
+          f"single-node path, {router.requeues} requeued after the failure")
+
+    agg = server.tier_stats()
+    print(f"aggregate tiered-KV telemetry: page_ins={agg['page_ins']} "
+          f"page_outs={agg['page_outs']} hits={agg['hits']} "
+          f"residency={agg['residency']:.2f}")
+    for s, ns in enumerate(server.node_tier_stats()):
+        mark = " (died)" if s not in server.alive_nodes() else ""
+        print(f"  node {s}{mark}: hits={ns['hits']} "
+              f"page_ins={ns['page_ins']} page_outs={ns['page_outs']}")
+    ct = A.control_plane_terms(pool.driver.stats, toks)
+    print(f"Ether-oN control plane: {ct['control_frames']:.0f} frames "
+          f"({ct['frames_per_1k_tokens']:.1f}/1K tokens), "
+          f"{ct['us_per_token']:.2f} us/token — off the decode hot path")
 
     # what this buys at full scale (paper Fig 12b, our analytical model):
     res = A.evaluate_pool()

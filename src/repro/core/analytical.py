@@ -295,6 +295,34 @@ def headline_ratios(results) -> Dict[str, float]:
 
 
 # ---------------------------------------------------------------------------
+# serving control-plane traffic (pool frontend over Ether-oN)
+# ---------------------------------------------------------------------------
+
+
+def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
+    """Traffic terms for the pool-serving control plane.
+
+    ``ether_stats`` is the frontend driver's ``EtherONStats`` after a
+    serving run: admission/placement/free messages ride 0xE0/0xE1 frames
+    (cost-accounted per operation, like Fig 3's docker-cli path), while
+    the token-rate tensor traffic rides jax collectives and never shows
+    up here.  The per-token figures quantify the paper's claim that the
+    control plane is off the serving hot path — a few frames per
+    *sequence*, amortized to noise per generated token."""
+    toks = max(int(n_tokens), 1)
+    wire = ether_stats.bytes_tx + ether_stats.bytes_rx
+    return {
+        "control_frames": float(ether_stats.control_frames),
+        "frames_per_1k_tokens":
+            1e3 * ether_stats.control_frames / toks,
+        "wire_bytes": float(wire),
+        "wire_bytes_per_token": wire / toks,
+        "us_total": float(ether_stats.time_us),
+        "us_per_token": ether_stats.time_us / toks,
+    }
+
+
+# ---------------------------------------------------------------------------
 # sensitivity sweeps (Fig 13)
 # ---------------------------------------------------------------------------
 

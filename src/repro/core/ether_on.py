@@ -85,6 +85,7 @@ class EtherONStats:
         self.bytes_rx = 0
         self.reposts = 0
         self.lock_syncs = 0
+        self.control_frames = 0
         self.time_us = 0.0
 
 
@@ -147,6 +148,23 @@ class EtherONDriver:
                                c.doorbell + c.dma_per_page * len(pages) +
                                c.completion_msi)
         self._devices[frame.dst_ip]._receive_from_host(cmd)
+
+    # -- serving control plane -------------------------------------------------
+
+    def send_control(self, dst_ip: str, verb: str, seq_id: int,
+                     extra: str = ""):
+        """Pool-serving control message (``SERVE place|free|... <seq>``).
+
+        Admission, placement and free notifications ride the same
+        0xE0/0xE1 tunnel as every other frame — and pay the same
+        per-operation costs — so the analytical model's traffic terms
+        (``core.analytical.control_plane_terms``) see the serving
+        control plane exactly as Fig 3 sees the docker-cli one.  Bulk
+        tensor traffic never comes through here; it rides the jax mesh
+        collectives (DESIGN.md §Pool serving)."""
+        payload = f"SERVE {verb} {seq_id} {extra}".rstrip().encode()
+        self.stats.control_frames += 1
+        self.transmit(EthernetFrame(self.host_ip, dst_ip, payload))
 
     # -- SSD -> host (upcall path) ---------------------------------------------
 

@@ -93,6 +93,14 @@ class PageStore:
         self.v_pages = self.v_pages.at[:, phys].set(
             jnp.asarray(v, self.dtype))
 
+    def place(self, sharding):
+        """Lay the stacked pages out across a device mesh (pool serving:
+        the pages axis sharded over ``model`` = one slice per DockerSSD
+        node).  All later adopts inherit the layout from the jitted
+        step's out_shardings."""
+        self.k_pages = jax.device_put(self.k_pages, sharding)
+        self.v_pages = jax.device_put(self.v_pages, sharding)
+
     def adopt(self, k_pages: jnp.ndarray, v_pages: jnp.ndarray):
         """Install the (possibly donated-and-returned) arrays a jitted
         serving step produced."""
@@ -111,13 +119,37 @@ class PageTableManager:
     KV lives (HBM window vs host tier) and hands the jitted step a dense
     ``page_table`` of physical ids; it never touches KV values except to
     move whole stacked pages on eviction/page-in.
+
+    **Pool sharding** (``n_shards > 1``): the physical window is split
+    into equal contiguous ranges — shard ``s`` (one DockerSSD node of
+    the storage pool) owns physical ids ``[s*pps, (s+1)*pps)`` plus its
+    own host ("flash") tier.  ``shard_of(seq_id, page_idx)`` is the
+    placement policy: the default stripes a sequence's logical pages
+    round-robin across shards (the D-Cache sequence-sharded extent);
+    ``runtime.pool.PoolServer`` substitutes per-sequence placement.
+    Allocation, LRU eviction and page-in never cross a shard boundary —
+    each node tiers against its own window — and every counter is kept
+    twice: globally (``stats``) and per shard (``shard_stats``), so the
+    pool's aggregate telemetry is exactly the sum of its nodes'.
     """
 
-    def __init__(self, store: PageStore):
+    def __init__(self, store: PageStore, *, n_shards: int = 1,
+                 shard_of=None):
         self.store = store
         self.page = store.page
         self.hbm_pages = store.hbm_pages
-        self._free: List[int] = list(range(store.hbm_pages))
+        if store.hbm_pages % n_shards:
+            raise ValueError(f"hbm_pages={store.hbm_pages} not divisible "
+                             f"by n_shards={n_shards}")
+        self.n_shards = n_shards
+        self.pages_per_shard = store.hbm_pages // n_shards
+        self.shard_of = shard_of or (lambda seq, pi: pi % n_shards)
+        # per-shard free lists: shard s owns [s*pps, (s+1)*pps)
+        self._free: List[List[int]] = [
+            list(range(s * self.pages_per_shard,
+                       (s + 1) * self.pages_per_shard))
+            for s in range(n_shards)]
+        self._dead_shards: set = set()
         # logical -> physical, LRU-ordered
         self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
         self._host: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
@@ -125,6 +157,18 @@ class PageTableManager:
         self._prefetched: set = set()
         self._pinned: set = set()
         self.stats = KVTierStats()
+        self.shard_stats: List[KVTierStats] = [KVTierStats()
+                                               for _ in range(n_shards)]
+
+    # -- shard helpers -------------------------------------------------------
+
+    def shard_of_phys(self, phys: int) -> int:
+        return phys // self.pages_per_shard
+
+    def _bump(self, shard: int, field: str, n: int = 1):
+        setattr(self.stats, field, getattr(self.stats, field) + n)
+        ss = self.shard_stats[shard]
+        setattr(ss, field, getattr(ss, field) + n)
 
     # -- sequence lifetime ---------------------------------------------------
 
@@ -143,7 +187,8 @@ class PageTableManager:
         reusable by a waiting request."""
         freed = 0
         for lkey in [k for k in list(self._resident) if k[0] == seq_id]:
-            self._free.append(self._resident.pop(lkey))
+            phys = self._resident.pop(lkey)
+            self._free[self.shard_of_phys(phys)].append(phys)
             self._pinned.discard(lkey)
             self._prefetched.discard(lkey)
             freed += 1
@@ -162,7 +207,10 @@ class PageTableManager:
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
+
+    def shard_free_pages(self, shard: int) -> int:
+        return len(self._free[shard])
 
     @property
     def resident_pages(self) -> int:
@@ -175,29 +223,51 @@ class PageTableManager:
     def residency(self) -> float:
         return len(self._resident) / self.hbm_pages
 
+    def sequences_on_shard(self, shard: int) -> set:
+        """Every sequence with a page (either tier) homed on ``shard``."""
+        seqs = {k[0] for k, phys in self._resident.items()
+                if self.shard_of_phys(phys) == shard}
+        seqs |= {k[0] for k in self._host
+                 if self.shard_of(k[0], k[1]) == shard}
+        return seqs
+
+    def disable_shard(self, shard: int):
+        """Take a shard's window out of service (node failure): nothing
+        can be allocated there again.  The caller is responsible for
+        freeing the sequences that lost pages (``sequences_on_shard``)."""
+        self._dead_shards.add(shard)
+        self._free[shard] = []
+
     # -- page lifecycle ------------------------------------------------------
 
-    def _evict_one(self):
-        # LRU among unpinned pages (pinned = part of an in-flight step)
+    def _evict_one(self, shard: int):
+        # LRU among the shard's unpinned pages (pinned = in-flight step);
+        # tiering never crosses a node boundary — each DockerSSD spills
+        # to its own flash
         victim = None
-        for lkey in self._resident:                          # LRU order
-            if lkey not in self._pinned:
+        for lkey, phys in self._resident.items():            # LRU order
+            if lkey not in self._pinned and \
+                    self.shard_of_phys(phys) == shard:
                 victim = lkey
                 break
         if victim is None:
             raise RuntimeError(
                 "HBM window too small for the pinned working set "
-                f"({len(self._pinned)} pages pinned, {self.hbm_pages} total)")
+                f"(shard {shard}: {len(self._pinned)} pages pinned, "
+                f"{self.pages_per_shard} per shard)")
         phys = self._resident.pop(victim)
         self._host[victim] = self.store.read_page(phys)
-        self._free.append(phys)
-        self.stats.page_outs += 1
-        self.stats.bytes_out += self.store.page_bytes()
+        self._free[shard].append(phys)
+        self._bump(shard, "page_outs")
+        self._bump(shard, "bytes_out", self.store.page_bytes())
 
     def _alloc(self, lkey) -> int:
-        if not self._free:
-            self._evict_one()
-        phys = self._free.pop()
+        shard = self.shard_of(lkey[0], lkey[1])
+        if shard in self._dead_shards:
+            raise RuntimeError(f"page shard {shard} is dead (node failed)")
+        if not self._free[shard]:
+            self._evict_one(shard)
+        phys = self._free[shard].pop()
         self._resident[lkey] = phys
         return phys
 
@@ -206,8 +276,9 @@ class PageTableManager:
         phys = self._alloc(lkey)
         k, v = self._host.pop(lkey)
         self.store.write_page(phys, k, v)
-        self.stats.page_ins += 1
-        self.stats.bytes_in += self.store.page_bytes()
+        shard = self.shard_of_phys(phys)
+        self._bump(shard, "page_ins")
+        self._bump(shard, "bytes_in", self.store.page_bytes())
         return phys
 
     def ensure_page(self, seq_id: int, page_idx: int, *, pin: bool = False,
@@ -220,13 +291,14 @@ class PageTableManager:
         if lkey in self._resident:
             self._resident.move_to_end(lkey)
             if count:
+                shard = self.shard_of_phys(self._resident[lkey])
                 if lkey in self._prefetched:
-                    self.stats.prefetch_hits += 1
+                    self._bump(shard, "prefetch_hits")
                     self._prefetched.discard(lkey)
-                self.stats.hits += 1
+                self._bump(shard, "hits")
         elif lkey in self._host:
             if count:
-                self.stats.misses += 1
+                self._bump(self.shard_of(seq_id, page_idx), "misses")
             self._page_in(lkey)
         else:  # brand-new page
             self._alloc(lkey)

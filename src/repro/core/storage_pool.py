@@ -33,8 +33,12 @@ class NodeSpec:
 class DockerSSDNode:
     """One disaggregated computational SSD."""
 
-    def __init__(self, ip: str, spec: NodeSpec = NodeSpec()):
+    def __init__(self, ip: str, spec: Optional[NodeSpec] = None):
         self.ip = ip
+        # default must be constructed per node: a shared NodeSpec instance
+        # would alias every node's spec, so mutating one (e.g. a degraded
+        # channel count) would silently change the whole pool
+        spec = spec if spec is not None else NodeSpec()
         self.spec = spec
         self.fs = LambdaFS(capacity_bytes=int(spec.flash_gb * 1e9))
         self.endpoint = DockerSSDEndpoint(ip)
@@ -44,11 +48,19 @@ class DockerSSDNode:
         self.alive = True
         self.last_heartbeat = 0.0
         self.latency_ema_ms = 1.0
+        self.serving_log: List[Tuple[str, int]] = []
         self.endpoint.set_handler(self._on_frame)
 
     def _on_frame(self, frame):
-        """HTTP-over-Ether-oN: docker-cli requests land here."""
+        """HTTP-over-Ether-oN: docker-cli requests land here; serving
+        control messages (``SERVE <verb> <seq>``) are logged by the
+        node's serving agent and acknowledged over the upcall path."""
         req = frame.payload.decode(errors="replace")
+        if req.startswith("SERVE "):
+            parts = req.split()
+            verb, seq_id = parts[1], int(parts[2])
+            self.serving_log.append((verb, seq_id))
+            return f"ACK {verb} {seq_id}".encode()
         if req.startswith(("GET ", "POST ")):
             return self.docker.handle_http(req)
         return None
@@ -81,7 +93,7 @@ class StoragePool:
     """Array/cluster of DockerSSDs with a docker-compose-like scheduler."""
 
     def __init__(self, n_nodes: int, host_ip: str = "10.0.0.1",
-                 spec: NodeSpec = NodeSpec(), array_size: int = 16,
+                 spec: Optional[NodeSpec] = None, array_size: int = 16,
                  heartbeat_timeout: float = 3.0,
                  straggler_factor: float = 3.0):
         self.driver = EtherONDriver(host_ip)
@@ -92,6 +104,10 @@ class StoragePool:
         self.straggler_factor = straggler_factor
         self.placements: Dict[str, Placement] = {}
         self.events: List[Tuple[str, str]] = []
+        # pool-serving frontend state (attach_server)
+        self._server = None
+        self._serve_job: Optional[str] = None
+        self._requeue: List[int] = []
         for i in range(n_nodes):
             self._add_node(i, spec)
 
@@ -109,6 +125,9 @@ class StoragePool:
                     now - node.last_heartbeat > self.heartbeat_timeout:
                 dead.append(ip)
         for ip in dead:
+            # serving failover first: the shard index must be read from
+            # the serving placement before _reschedule_off rewires it
+            self._serve_failover(ip)
             self._reschedule_off(ip)
         return dead
 
@@ -166,6 +185,92 @@ class StoragePool:
             node.latency_ema_ms = 0.8 * node.latency_ema_ms + 0.2 * dt
         return out
 
+    # -- pool-serving frontend -------------------------------------------------
+    #
+    # One request flows: frontend (here) -> Ether-oN control frame to the
+    # chosen DockerSSD -> PoolServer admission on that node's shard ->
+    # the mesh-sharded jitted decode.  Only control messages ride frames;
+    # token-rate tensor traffic rides the jax collectives inside the
+    # jitted step (DESIGN.md §Pool serving).
+
+    def attach_server(self, server, job: str = "llm-serve") -> Placement:
+        """Bind a ``runtime.pool.PoolServer`` to this pool: the serving
+        placement's i-th node backs mesh shard i.  Needs ``server.
+        n_nodes`` free healthy nodes (one distributed job, tp=pool)."""
+        pl = self.place_distributed(job, "llm-serve", tp=server.n_nodes)
+        self._server = server
+        self._serve_job = job
+        # stable shard-indexed ip map: container rescheduling may rewire
+        # the *placement* after a failure, but mesh shard i keeps its
+        # identity (a lost window is not revived by a restarted container
+        # — elastic re-shard is a later PR)
+        self._serve_ips = list(pl.node_ips)
+        return pl
+
+    def serving_ips(self) -> List[str]:
+        return list(self._serve_ips)
+
+    def place_sequence(self, seq_id: int, n_tokens: int,
+                       node: Optional[int] = None) -> int:
+        """Admit a sequence: choose a node (least-loaded by free window
+        pages unless the router already picked one), announce the
+        placement to that node over Ether-oN, and return the shard index
+        for ``PoolServer.add_request``."""
+        srv = self._server
+        if node is None:
+            node = srv.least_loaded_node()
+        self.driver.send_control(
+            self._serve_ips[node], "place", seq_id,
+            extra=str(srv.pages_needed(n_tokens)))
+        self._drain_acks()
+        return node
+
+    def retire_sequence(self, seq_id: int) -> int:
+        """Free a finished sequence: notify the owning node (every node,
+        for a striped extent) over Ether-oN, then release its pages in
+        both tiers through the server's public API."""
+        srv = self._server
+        owner = srv.node_of(seq_id)
+        shards = [owner] if owner is not None else srv.alive_nodes()
+        for s in shards:
+            if s in srv.alive_nodes():      # no frames to dead nodes
+                self.driver.send_control(self._serve_ips[s], "free", seq_id)
+        self._drain_acks()
+        return srv.free_sequence(seq_id)
+
+    def serving_tier_stats(self) -> Dict[str, object]:
+        """Aggregate serving telemetry: the pool totals plus the
+        per-node breakdown (the aggregate is the field-wise sum of the
+        nodes — each DockerSSD owns its window and flash tier)."""
+        return {"pool": self._server.tier_stats(),
+                "nodes": self._server.node_tier_stats()}
+
+    def take_requeued(self) -> List[int]:
+        """Sequence ids dropped by node failures since the last call —
+        the router re-prefills them on the surviving nodes."""
+        out, self._requeue = self._requeue, []
+        return out
+
+    def _serve_failover(self, dead_ip: str):
+        """Heartbeat-driven serving failover: when a serving node dies,
+        its shard's window and tier are lost — drop the sequences homed
+        there and queue them for router re-admission."""
+        if self._server is None or dead_ip not in self._serve_ips:
+            return
+        shard = self._serve_ips.index(dead_ip)
+        if shard in self._server._dead:
+            return                      # already handled (idempotent)
+        victims = self._server.fail_node(shard)
+        self._requeue.extend(victims)
+        self.events.append(("serve-requeue",
+                            f"{dead_ip}:{','.join(map(str, victims))}"))
+
+    def _drain_acks(self):
+        """Pull control-frame ACKs off the upcall inbox (their cost is
+        already accounted by the driver)."""
+        while self.driver.poll() is not None:
+            pass
+
     def _occupied(self):
         occ = set()
         for pl in self.placements.values():
@@ -191,12 +296,14 @@ class StoragePool:
 
     # -- elastic membership --------------------------------------------------------
 
-    def _add_node(self, i: int, spec: NodeSpec):
+    def _add_node(self, i: int, spec: Optional[NodeSpec]):
         """Provision node ``i``: wired into the Ether-oN fabric, λFS lock
         syncs attached, and slotted into its array (array topology follows
-        the pool's configured ``array_size``)."""
+        the pool's configured ``array_size``).  Each node gets its own
+        NodeSpec copy — per-node state never aliases across the pool."""
         ip = f"10.0.{1 + i // self.array_size}.{2 + i % self.array_size}"
-        node = DockerSSDNode(ip, spec)
+        node = DockerSSDNode(
+            ip, dataclasses.replace(spec) if spec is not None else None)
         node.fs.attach_ether(self.driver)
         self.nodes[ip] = node
         self.driver.attach(node.endpoint)
@@ -205,7 +312,7 @@ class StoragePool:
         self.arrays[-1].append(ip)
         return node
 
-    def scale_to(self, n: int, spec: NodeSpec = NodeSpec()):
+    def scale_to(self, n: int, spec: Optional[NodeSpec] = None):
         cur = len(self.nodes)
         for i in range(cur, n):
             self._add_node(i, spec)

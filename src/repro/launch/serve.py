@@ -1,11 +1,25 @@
 """Serving launcher — batched-request decode with the D-Cache runtime.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-      --reduced --requests 4 --prompt-len 16 --gen 32 [--paged]
+      --reduced --requests 4 --prompt-len 16 --gen 32 [--paged | --pool]
 
-``--paged`` uses the tiered PagedKVCache + Pallas paged_attention path
-(the paper's mechanism made concrete); default uses the dense jitted
-decode (what the dry-run lowers at production scale).
+Three paths:
+
+  * default — dense jitted decode (what the dry-run lowers at
+    production scale).
+  * ``--paged`` — the tiered PagedKVCache + Pallas paged_attention path
+    on one device (the paper's mechanism made concrete).
+  * ``--pool`` — distributed pool serving: a ``PoolServer`` shard-maps
+    the tiered decode over ``--nodes`` devices (one DockerSSD node per
+    ``model``-axis shard), fronted by a ``StoragePool`` whose
+    admission/placement/free control messages ride Ether-oN frames and
+    a ``PoolRouter`` doing least-loaded placement, per-node admission
+    and failover requeue.  To simulate N nodes on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+    launching (default ``--nodes 0`` uses every visible device).
+
+Timing uses ``time.monotonic()`` so reported throughput/latency cannot
+be skewed (or go negative) by wall-clock adjustment mid-run.
 """
 from __future__ import annotations
 
@@ -29,8 +43,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--pool", action="store_true",
+                    help="distributed pool serving (PoolServer across "
+                         "--nodes devices; see module docstring)")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="pool size; 0 = all visible devices")
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--hbm-pages", type=int, default=32)
+    ap.add_argument("--hbm-pages", type=int, default=32,
+                    help="HBM window pages (per node with --pool)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -42,8 +62,32 @@ def main(argv=None):
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.requests, args.prompt_len), dtype=np.int32)
 
-    t0 = time.time()
-    if args.paged:
+    t0 = time.monotonic()
+    if args.pool:
+        if cfg.block_type != "transformer":
+            raise SystemExit("--pool demo path supports transformer archs")
+        from repro.core import analytical as A
+        from repro.core.storage_pool import StoragePool
+        from repro.runtime.pool import PoolServer
+        from repro.runtime.scheduler import PoolRouter, Request
+        n = args.nodes or len(jax.devices())
+        server = PoolServer(model, params, n_nodes=n,
+                            page_size=args.page_size,
+                            hbm_pages_per_node=args.hbm_pages)
+        pool = StoragePool(n)
+        pool.attach_server(server)
+        router = PoolRouter(server, pool, max_active=args.requests)
+        for i in range(args.requests):
+            router.submit(Request(rid=i, prompt=prompts[i],
+                                  max_tokens=args.gen))
+        stats = router.run_to_completion()
+        toks = sum(len(r.output) for r in router.finished)
+        print(f"pool of {n} nodes | per-node tier stats: "
+              f"{server.node_tier_stats()}")
+        print("aggregate tier stats:", stats["tier"])
+        print("control plane:", A.control_plane_terms(pool.driver.stats,
+                                                      toks))
+    elif args.paged:
         if cfg.block_type != "transformer":
             raise SystemExit("--paged demo path supports transformer archs")
         server = PagedServer(model, params, page_size=args.page_size,
@@ -70,7 +114,7 @@ def main(argv=None):
             logits, cache = decode(params, cache, cur)
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
             toks += args.requests
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"served {args.requests} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks / dt:.1f} tok/s)")
 

@@ -1,0 +1,340 @@
+"""Pool-sharded serving — the distributed decode path over DockerSSDs.
+
+``PoolServer`` turns the single-device :class:`~repro.runtime.serve.
+PagedServer` into one distributed system spanning the storage pool
+(the paper's preferred offloading mode, Fig 8b): the jitted decode /
+prefill steps are ``shard_map``-ped over a device mesh whose ``model``
+axis is the pool — **shard i's slice of the PageStore pages axis is
+DockerSSD node i's HBM window** (``runtime/sharding.pool_store_spec``).
+One jitted step per token serves every sequence in the pool, wherever
+its pages live.
+
+Placement policies (``PageTableManager.shard_of``):
+
+  * ``"placed"`` — each sequence's extent lives wholly on one node,
+    chosen least-loaded by the pool frontend (StoragePool routes the
+    admission over Ether-oN control frames).  Node failure only costs
+    that node's sequences; the router re-prefills them elsewhere.
+  * ``"striped"`` — a sequence's logical pages stripe round-robin
+    across all nodes (the D-Cache sequence-sharded extent of
+    DESIGN.md / runtime/sharding.cache_spec_shardings).  Maximum
+    bandwidth for one long context; a node failure costs the pool.
+
+Both run through the same device program, because the decode body is
+ownership-driven: every node computes q/k/v for the new tokens (each
+DockerSSD stores the full model in its flash), the owner of the tail
+page appends via a masked scatter, every node runs paged attention over
+*its own* pages only, and the per-node online-softmax partials
+``(acc, m, l)`` are merged exactly with one ``pmax`` + two ``psum``
+log-sum-exp collectives.  Control traffic (admission / placement /
+free) rides Ether-oN frames; only these collectives ride the jax mesh —
+the split DESIGN.md §Pool serving documents.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.kv_tier import PageStore, PageTableManager
+from repro.jax_compat import shard_map_unchecked
+from repro.models import layers as L
+from repro.runtime import sharding as shd
+from repro.runtime.serve import PagedServer
+
+NEG_INF = -1e30
+POOL_AXIS = "model"
+
+
+def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
+                            lengths):
+    """Shard-local paged decode attention returning softmax partials.
+
+    The per-node half of distributed paged attention: score only the
+    pages this node owns, fold them with an online softmax, and hand
+    back the un-normalized state so the caller can merge nodes exactly
+    (``combine_partials``).  On TPU each node would run the Pallas
+    ``paged_attention`` kernel for this piece; the partial form is the
+    distributed contract either way.
+
+    q: [B, H, D]; k_pages/v_pages: *local* [P_node, page, Hkv, D];
+    local_table: [B, pps] local physical ids (garbage where not owned);
+    col_owned: [B, pps] bool — does this node own that logical page;
+    lengths: [B] post-append sequence lengths.
+    Returns (acc [B, H, D] f32, m [B, H] f32, l [B, H] f32).
+    """
+    b, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    pps = local_table.shape[1]
+    g = h // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    safe = jnp.where(col_owned, local_table, 0)
+    k = k_pages[safe].astype(jnp.float32)        # [B, pps, page, Hkv, D]
+    v = v_pages[safe].astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bptkd->bkgpt", qg, k) * sm_scale
+    pos = (jnp.arange(pps, dtype=jnp.int32)[:, None] * page +
+           jnp.arange(page, dtype=jnp.int32)[None, :])     # [pps, page]
+    mask = (pos[None] < lengths[:, None, None]) & col_owned[:, :, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    sf = s.reshape(b, hkv, g, pps * page)
+    mf = mask.reshape(b, 1, 1, pps * page)
+    m = jnp.max(sf, axis=-1)                               # [b, hkv, g]
+    # all-masked rows have m == NEG_INF; exp(NEG_INF - NEG_INF) == 1, so
+    # the mask (not the score) must zero those probabilities
+    p = jnp.where(mf, jnp.exp(sf - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p,
+                     v.reshape(b, pps * page, hkv, d))
+    return acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
+
+
+def combine_partials(acc, m, l, axis_name: str):
+    """Exact cross-node merge of online-softmax partials: rebase every
+    node's accumulator to the global max and sum.  Nodes owning nothing
+    contribute (0, NEG_INF, 0) and vanish; a fully-masked (padding) slot
+    ends with l == 0 and yields 0, matching the Pallas kernel's
+    ``acc / max(l, 1e-30)`` convention."""
+    m_glob = lax.pmax(m, axis_name)
+    scale = jnp.exp(m - m_glob)
+    l_glob = lax.psum(l * scale, axis_name)
+    acc_glob = lax.psum(acc * scale[..., None], axis_name)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+class PoolServer(PagedServer):
+    """Mesh-sharded tiered-KV serving across the storage pool.
+
+    Same public surface as :class:`PagedServer` (the router and the
+    StoragePool frontend talk to it identically) plus the pool surface:
+    per-node capacity (``node_free_pages``), placement
+    (``least_loaded_node``, ``add_request(..., node=)``), failure
+    (``fail_node``) and per-node telemetry (``node_tier_stats``).
+
+    The page-table manager allocates per shard (each node tiers against
+    its own window and flash), the store's pages axis is laid out over
+    the mesh, and the jitted steps are built by shard_mapping the
+    ownership-aware bodies below with ``pool_step_specs``.
+    """
+
+    def __init__(self, model, params, *, n_nodes: Optional[int] = None,
+                 mesh: Optional[Mesh] = None, page_size: int = 16,
+                 hbm_pages_per_node: int = 32, dtype=jnp.float32,
+                 policy: str = "placed"):
+        if policy not in ("placed", "striped"):
+            raise ValueError(f"unknown placement policy {policy!r}")
+        if mesh is None:
+            devs = jax.devices()
+            n = n_nodes if n_nodes is not None else len(devs)
+            if n > len(devs):
+                raise ValueError(
+                    f"{n} pool nodes need {n} devices but only "
+                    f"{len(devs)} are visible; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={n} before "
+                    f"importing jax to simulate the pool on CPU")
+            mesh = Mesh(np.asarray(devs[:n]), (POOL_AXIS,))
+        if POOL_AXIS not in mesh.axis_names:
+            raise ValueError(f"pool mesh needs a {POOL_AXIS!r} axis")
+        self.mesh = mesh
+        self.n_nodes = int(mesh.shape[POOL_AXIS])
+        self.pages_per_node = hbm_pages_per_node
+        self.policy = policy
+        self._placement: Dict[int, int] = {}
+        self._dead: set = set()
+        super().__init__(model, params, page_size=page_size,
+                         hbm_pages=self.n_nodes * hbm_pages_per_node,
+                         dtype=dtype)
+        in_specs, out_specs = shd.pool_step_specs()
+        self._sharded_decode = shard_map_unchecked(
+            self._decode_body, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs)
+        self._sharded_prefill = shard_map_unchecked(
+            self._prefill_body, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs)
+
+    # -- store / table factories ---------------------------------------------
+
+    def _new_store(self) -> PageStore:
+        store = super()._new_store()
+        store.place(NamedSharding(self.mesh, shd.pool_store_spec()))
+        return store
+
+    def _new_table(self) -> PageTableManager:
+        table = PageTableManager(self.store, n_shards=self.n_nodes,
+                                 shard_of=self._shard_of)
+        for s in self._dead:
+            table.disable_shard(s)
+        return table
+
+    def _shard_of(self, seq_id: int, page_idx: int) -> int:
+        if self.policy == "placed":
+            return self._placement[seq_id]
+        return page_idx % self.n_nodes
+
+    # -- pool placement surface ----------------------------------------------
+
+    def alive_nodes(self) -> List[int]:
+        return [s for s in range(self.n_nodes) if s not in self._dead]
+
+    def node_free_pages(self) -> List[int]:
+        return [self.table.shard_free_pages(s) for s in range(self.n_nodes)]
+
+    def least_loaded_node(self) -> int:
+        alive = self.alive_nodes()
+        if not alive:
+            raise RuntimeError("no alive pool nodes")
+        return max(alive, key=lambda s: (self.table.shard_free_pages(s), -s))
+
+    def add_request(self, seq_id: int, prompt, *, node: Optional[int] = None):
+        """Admit a sequence onto the pool.  ``node`` pins the placement
+        (the StoragePool frontend routes it there); default is the
+        least-loaded alive node.  Striped policy ignores ``node`` — the
+        extent spans every node by construction."""
+        if self.policy == "placed":
+            target = self.least_loaded_node() if node is None else int(node)
+            if target in self._dead:
+                raise RuntimeError(f"node {target} is dead")
+            self._placement[seq_id] = target
+        try:
+            return super().add_request(seq_id, prompt)
+        except Exception:
+            self._placement.pop(seq_id, None)
+            raise
+
+    def free_sequence(self, seq_id: int) -> int:
+        freed = super().free_sequence(seq_id)
+        self._placement.pop(seq_id, None)
+        return freed
+
+    def node_of(self, seq_id: int) -> Optional[int]:
+        return self._placement.get(seq_id)
+
+    def fail_node(self, node: int) -> List[int]:
+        """Simulated DockerSSD failure: the node's HBM window and flash
+        tier are gone.  Every sequence with pages homed there is dropped
+        (its ids are returned so the router can re-prefill them on the
+        survivors) and the shard is taken out of allocation."""
+        victims = sorted(self.table.sequences_on_shard(node))
+        self._dead.add(node)
+        for s in victims:
+            self.free_sequence(s)
+        self.table.disable_shard(node)
+        return victims
+
+    # -- per-node telemetry ---------------------------------------------------
+
+    def node_tier_stats(self) -> List[Dict[str, int]]:
+        """One stats dict per node — the aggregate ``tier_stats`` is the
+        field-wise sum of these (each node owns its window and tier)."""
+        return [dict(vars(ss)) for ss in self.table.shard_stats]
+
+    # -- device programs (shard-local bodies) ---------------------------------
+
+    def decode_step(self, params, k_pages, v_pages, page_table, lengths,
+                    tokens):
+        return self._sharded_decode(params, k_pages, v_pages, page_table,
+                                    lengths, tokens)
+
+    def prefill_step(self, params, k_pages, v_pages, tokens, phys, length):
+        return self._sharded_prefill(params, k_pages, v_pages, tokens,
+                                     phys, length)
+
+    def _decode_body(self, params, k_pages, v_pages, page_table, lengths,
+                     tokens):
+        """Per-node slice of one pool decode step.
+
+        Identical schedule to ``PagedServer.decode_step`` except that
+        physical page ids are global: each node maps them into its own
+        window (append and attention are masked to owned pages) and the
+        attention partials are merged across the pool axis.
+        """
+        cfg = self.cfg
+        b = tokens.shape[0]
+        n_local = k_pages.shape[1]
+        base = lax.axis_index(POOL_AXIS) * n_local
+        valid = lengths > 0                      # padding slots carry 0
+        pos = lengths[:, None]                   # new token's position
+        pidx = lengths // self.page
+        offs = lengths % self.page
+        phys = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+        local_new = phys - base
+        owned_new = valid & (local_new >= 0) & (local_new < n_local)
+        # out-of-window sentinel => the scatter drops non-owned appends
+        local_new = jnp.where(owned_new, local_new, n_local)
+        new_lengths = lengths + valid.astype(jnp.int32)
+        # ownership of every logical page in the batch's table (padding
+        # columns beyond a row's extent are already masked by pos<length)
+        local_table = page_table - base
+        col_owned = (local_table >= 0) & (local_table < n_local)
+
+        h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
+
+        def body(hh, xs):
+            lp, kp, vp = xs
+            q, k, v = self._attn_inputs(lp, hh, pos)
+            kp = kp.at[local_new, offs].set(k[:, 0].astype(kp.dtype),
+                                            mode="drop")
+            vp = vp.at[local_new, offs].set(v[:, 0].astype(vp.dtype),
+                                            mode="drop")
+            acc, m, l = paged_attention_partial(
+                q[:, 0].astype(self.dtype), kp, vp, local_table, col_owned,
+                new_lengths)
+            o = combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
+            return self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)), (kp, vp)
+
+        h, (k_pages, v_pages) = lax.scan(
+            body, h, (params["layers"], k_pages, v_pages))
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           cfg.tie_embeddings)[:, 0]
+        return logits, k_pages, v_pages
+
+    def _prefill_body(self, params, k_pages, v_pages, tokens, phys, length):
+        """Per-node slice of the one-shot prefill: the layer stack runs
+        replicated (attention over the in-flight prompt needs no pages),
+        each node keeps only the prompt pages it owns."""
+        cfg = self.cfg
+        s_pad = tokens.shape[1]
+        n_pages = s_pad // self.page
+        n_local = k_pages.shape[1]
+        base = lax.axis_index(POOL_AXIS) * n_local
+        local = phys - base
+        owned = (local >= 0) & (local < n_local)
+        # the global padding sentinel (hbm_pages) stays out of range for
+        # every node after rebasing; non-owned pages join it via the mask
+        local = jnp.where(owned, local, n_local)
+        positions = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+        h = L.embed_tokens(params["embed"], tokens, self.dtype)
+
+        def body(hh, xs):
+            lp, kp, vp = xs
+            q, k, v = self._attn_inputs(lp, hh, positions)
+            o = L.chunked_attention(q, k, v, causal=True,
+                                    positions_q=positions,
+                                    positions_k=positions)
+            kpg = k[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+            vpg = v[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+            kp = kp.at[local].set(kpg.astype(kp.dtype), mode="drop")
+            vp = vp.at[local].set(vpg.astype(vp.dtype), mode="drop")
+            return self._attn_out_ffn(lp, hh, o.reshape(1, s_pad, -1)), \
+                (kp, vp)
+
+        h, (k_pages, v_pages) = lax.scan(
+            body, h, (params["layers"], k_pages, v_pages))
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        last = lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        logits = L.unembed(params["embed"], params.get("lm_head"), last,
+                           cfg.tie_embeddings)[0, 0]
+        return logits, k_pages, v_pages
+
+    def step_reference(self, tokens):
+        raise NotImplementedError(
+            "the pool path is validated against a 1-node PagedServer "
+            "running the same workload (tests/test_pool.py, "
+            "benchmarks/run.py pool)")

@@ -17,6 +17,12 @@ continuous-batching loop on top of the paper's tiered KV mechanism:
 The scheduler talks only to PagedServer's public surface (capacity
 accounting, ``free_sequence``, the batched step) — page-table internals
 stay owned by core.kv_tier.PageTableManager.
+
+:class:`PoolRouter` generalizes the same loop to the storage pool
+(``runtime.pool.PoolServer``): least-loaded placement across DockerSSD
+nodes (optionally routed through the ``StoragePool`` frontend so the
+decision rides Ether-oN control frames), per-node admission control,
+and heartbeat-driven failover requeue.
 """
 from __future__ import annotations
 
@@ -34,7 +40,9 @@ class Request:
     prompt: np.ndarray
     max_tokens: int
     eos_id: Optional[int] = None
-    # telemetry
+    # telemetry — all stamps are time.monotonic(): latency/TTFT deltas
+    # must survive wall-clock adjustment (NTP slew would make
+    # time.time()-based tails negative)
     t_arrive: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -70,12 +78,34 @@ class ContinuousBatcher:
         pinned_now = sum(self._pages_needed(r) for r in self.active.values())
         return pinned_now + self._pages_needed(req) <= self.server.hbm_pages
 
+    def _prompt_of(self, req: Request) -> np.ndarray:
+        """The tokens a (re-)prefill must write: the prompt plus any
+        output already generated.  Fresh requests have no output, so
+        this is the plain prompt; a failover-requeued request resumes by
+        teacher-forcing its own history (greedy decode makes the
+        continuation identical to the uninterrupted run)."""
+        if not req.output:
+            return req.prompt
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.output, np.int32)])
+
+    def _prefill(self, req: Request):
+        """Admission hook — PoolRouter overrides to route the placement
+        through the pool frontend."""
+        return self.server.add_request(req.rid, self._prompt_of(req))
+
+    def _release(self, rid: int):
+        """Retirement hook — PoolRouter overrides to notify the owning
+        node over Ether-oN before the pages come back."""
+        self.server.free_sequence(rid)
+
     def _admit(self):
         while (self.waiting and len(self.active) < self.max_active and
                self._window_has_room(self.waiting[0])):
             req = self.waiting.popleft()
-            last = self.server.add_request(req.rid, req.prompt)
-            req.t_first = time.monotonic()
+            last = self._prefill(req)
+            if not req.output:          # requeues keep their first-token stamp
+                req.t_first = time.monotonic()
             req.output.append(int(np.argmax(np.asarray(last))))
             self.active[req.rid] = req
 
@@ -104,7 +134,7 @@ class ContinuousBatcher:
             self.finished.append(req)
             # every tier's pages come back in one call; the physical
             # slots are reusable by the next waiting request immediately
-            self.server.free_sequence(rid)
+            self._release(rid)
 
     def run_to_completion(self, max_iters: int = 10_000) -> dict:
         it = 0
@@ -121,3 +151,120 @@ class ContinuousBatcher:
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
             "tier": self.server.tier_stats(),
         }
+
+
+class PoolRouter(ContinuousBatcher):
+    """Pool-aware continuous batcher for a ``runtime.pool.PoolServer``.
+
+    The same iteration loop as :class:`ContinuousBatcher`, generalized
+    to a pool of DockerSSD nodes:
+
+      * **placement** — an admitted request goes to the least-loaded
+        node with room for its projected working set; when a
+        :class:`~repro.core.storage_pool.StoragePool` frontend is bound,
+        the placement is routed through it (the decision rides an
+        Ether-oN control frame to the chosen node before the shard
+        admits the pages);
+      * **per-node admission control** — a request is admitted only
+        when one node's window (placed policy) or every node's share of
+        the striped extent fits alongside that node's active load;
+      * **failover requeue** (placed policy) — each step polls the
+        pool's heartbeats; sequences homed on a node that died are
+        dropped by the server and re-enter the queue at the front,
+        where the next admission re-prefills prompt+history on a
+        surviving node (greedy decode makes the completed output
+        identical to an uninterrupted run).  A *striped* extent spans
+        every node, so a node failure is unrecoverable within the job:
+        the router raises immediately instead of requeueing work that
+        could never re-admit (restart the pool job — DESIGN.md §Pool
+        serving).
+    """
+
+    def __init__(self, server, pool=None, *, max_active: int = 8):
+        super().__init__(server, max_active=max_active)
+        self.pool = pool
+        self.requeues = 0
+        self._target_node: Optional[int] = None
+
+    # -- per-node admission ---------------------------------------------------
+
+    @staticmethod
+    def _striped_share(n_pages: int, node: int, n_nodes: int) -> int:
+        """Pages of an ``n_pages`` striped extent that land on ``node``."""
+        return len(range(node, n_pages, n_nodes))
+
+    def _node_load(self) -> Dict[int, int]:
+        """Projected pinned pages per alive node from the active set."""
+        srv = self.server
+        load = {s: 0 for s in srv.alive_nodes()}
+        for r in self.active.values():
+            need = self._pages_needed(r)
+            if srv.policy == "placed":
+                s = srv.node_of(r.rid)
+                if s in load:
+                    load[s] += need
+            else:
+                for s in load:
+                    load[s] += self._striped_share(need, s, srv.n_nodes)
+        return load
+
+    def _window_has_room(self, req: Request) -> bool:
+        srv = self.server
+        cap = srv.pages_per_node
+        need = self._pages_needed(req)
+        load = self._node_load()
+        if not load:
+            return False
+        if srv.policy == "placed":
+            fits = [s for s in load if load[s] + need <= cap]
+            # remember the least-loaded fitting node for _prefill
+            self._target_node = min(fits, key=lambda s: (load[s], s)) \
+                if fits else None
+            return bool(fits)
+        self._check_striped_alive()
+        return all(load[s] + self._striped_share(need, s, srv.n_nodes) <= cap
+                   for s in load)
+
+    def _check_striped_alive(self):
+        if self.server._dead:
+            raise RuntimeError(
+                f"striped pool lost node(s) {sorted(self.server._dead)}: "
+                "a striped extent spans every node, so the job cannot "
+                "continue degraded — restart the pool (DESIGN.md §Pool "
+                "serving)")
+
+    def _prefill(self, req: Request):
+        srv = self.server
+        prompt = self._prompt_of(req)
+        if srv.policy != "placed":
+            return srv.add_request(req.rid, prompt)
+        node = self._target_node
+        if self.pool is not None:
+            node = self.pool.place_sequence(
+                req.rid, len(req.prompt) + req.max_tokens, node=node)
+        return srv.add_request(req.rid, prompt, node=node)
+
+    def _release(self, rid: int):
+        if self.pool is not None:
+            self.pool.retire_sequence(rid)
+        else:
+            self.server.free_sequence(rid)
+
+    # -- failover -------------------------------------------------------------
+
+    def _failover(self):
+        if self.pool is None:
+            return
+        self.pool.check_heartbeats()
+        victims = self.pool.take_requeued()
+        if victims and self.server.policy != "placed":
+            self._check_striped_alive()         # unrecoverable: fail fast
+        for rid in reversed(victims):           # keep original order at front
+            req = self.active.pop(rid, None)
+            if req is not None:
+                self.requeues += 1
+                self.waiting.appendleft(req)
+
+    def step(self) -> int:
+        self._failover()
+        return super().step()

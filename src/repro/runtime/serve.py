@@ -85,7 +85,7 @@ class PagedServer:
         self.page = page_size
         self.hbm_pages = hbm_pages
         self.store = self._new_store()
-        self.table = PageTableManager(self.store)
+        self.table = self._new_table()
         self._seqs: List[int] = []
         self._pending: Dict[int, int] = {}
         self._interpret = jax.default_backend() != "tpu"
@@ -104,6 +104,11 @@ class PagedServer:
                          hbm_pages=self.hbm_pages,
                          n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
                          dtype=self.dtype)
+
+    def _new_table(self) -> PageTableManager:
+        """Table-manager factory (PoolServer overrides with a sharded
+        manager bound to its placement policy)."""
+        return PageTableManager(self.store)
 
     # -- public capacity API (admission control lives on these) --------------
 
@@ -136,10 +141,11 @@ class PagedServer:
         all later steps with deleted buffers."""
         if not getattr(self.store.k_pages, "is_deleted", lambda: False)():
             return
-        stats = self.table.stats
+        stats, shard_stats = self.table.stats, self.table.shard_stats
         self.store = self._new_store()
-        self.table = PageTableManager(self.store)
+        self.table = self._new_table()
         self.table.stats = stats           # telemetry continuity
+        self.table.shard_stats = shard_stats
         self._seqs.clear()
         self._pending.clear()
 

@@ -220,6 +220,34 @@ def decode_token_spec(mesh: Mesh, batch: int) -> P:
     return P(_ax(mesh, batch, "data"))
 
 
+# ---------------------------------------------------------------------------
+# pool serving specs (PoolServer: one DockerSSD node per ``model`` shard)
+# ---------------------------------------------------------------------------
+
+
+def pool_store_spec() -> P:
+    """Spec for the stacked PageStore arrays
+    ``[n_layers, hbm_pages, page, Hkv, D]``: the *pages* axis is sharded
+    over ``model`` — shard i's contiguous physical range is node i's HBM
+    window, the D-Cache placement at page granularity.  Layers, page
+    interior, heads stay local to the node."""
+    return P(None, "model", None, None, None)
+
+
+def pool_step_specs():
+    """(in_specs, out_specs) for the shard_mapped pool decode step
+    ``(params, k_pages, v_pages, page_table, lengths, tokens) ->
+    (logits, k_pages, v_pages)``.  Params and the control tensors are
+    replicated — every node runs the full layer stack (each DockerSSD
+    stores the whole model in its flash; the pool parallelism is over
+    the KV extent, per DESIGN.md), only the page windows are split.
+    The prefill step ``(params, k_pages, v_pages, tokens, phys, length)``
+    has the same signature shape, so one spec pair serves both."""
+    store = pool_store_spec()
+    return ((P(), store, store, P(), P(), P()),
+            (P(), store, store))
+
+
 def to_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
