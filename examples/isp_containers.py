@@ -1,28 +1,38 @@
-"""ISP-container lifecycle on a disaggregated storage pool — the paper's
-Figure 5 flow, end to end:
+"""ISP-container analytics on a disaggregated storage pool — the paper's
+Figure 5 flow, end to end, with the container workload as a *jitted
+analytics program* (scan -> filter -> reduce over flash-resident
+extents):
 
-  1. build a Docker-style blob (manifest + layers) for the DLRM 'embed'
-     workload (the paper's rm1/rm2 ISP kernel),
-  2. `docker pull` it onto every DockerSSD over Ether-oN,
-  3. host drops input data into the *sharable* namespace,
-  4. `docker run` executes the ISP-container near the flash (embedding
-     lookups via the Pallas embed_agg kernel), with inode locks
-     protecting host/container concurrency,
-  5. logs stream back over the NVMe upcall path; a node failure gets
-     rescheduled by the pool.
+  1. build the generic ``isp-analytics`` Docker blob and `docker pull`
+     it onto every DockerSSD over Ether-oN,
+  2. host drops raw table data into the *sharable* namespace; each node
+     ingests it into its ExtentStore pages through λFS,
+  3. an AnalyticsJob submitted through the docker-cli front door
+     executes a jitted Pallas scan/filter/reduce near the flash and
+     returns only the aggregate,
+  4. the OffloadPlanner decides Host vs D-VirtFW per job from the
+     calibrated isp_perf costs, batches device jobs per node, and the
+     results match the host-reads-everything path bit for bit,
+  5. the classic DLRM 'embed' container (Pallas embed_agg) still runs
+     on the same pool, and logs stream back over the NVMe upcall path.
 
   PYTHONPATH=src python examples/isp_containers.py
 """
+import json
 import sys
+import urllib.parse
 
 sys.path.insert(0, "src")
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (EthernetFrame, SHARABLE_NS, StoragePool,
+from repro.core import (AnalyticsJob, EthernetFrame, SHARABLE_NS,
+                        StoragePool, analytics_blob, from_jsonable,
                         make_blob, ImageManifest, register_app)
+from repro.core.analytical import data_plane_terms
 from repro.kernels import ops
+from repro.runtime.offload import OffloadPlanner
 
 
 @register_app("dlrm-embed")
@@ -46,55 +56,103 @@ def dlrm_embed(ctx, table_path="/data/table.npy", idx_path="/data/idx.npy"):
 
 
 def main():
-    pool = StoragePool(n_nodes=8)
-    print(f"pool: {len(pool.nodes)} DockerSSDs in "
-          f"{len(pool.arrays)} arrays; IPs "
+    pool = StoragePool(4, extent_cfg={"n_pages": 16, "page_rows": 64,
+                                      "n_cols": 32})
+    print(f"pool: {len(pool.nodes)} DockerSSDs; IPs "
           f"{pool.alive_nodes()[:3]}...")
 
-    # 1-2. blob build + docker pull everywhere
+    # 1. the generic analytics image, pulled everywhere over Ether-oN
+    pool.broadcast_pull("isp-analytics", analytics_blob())
+    print("pulled 'isp-analytics' onto all nodes")
+
+    # 2. host places raw tables in the sharable NS; nodes ingest them
+    #    into flash extent pages through λFS (counted syscalls)
+    rng = np.random.default_rng(0)
+    tables = {}
+    for i, ip in enumerate(pool.alive_nodes()[:2]):
+        node = pool.nodes[ip]
+        data = rng.normal(size=(500, 32)).astype(np.float32)
+        node.fs.write("/data/tbl.bin", data.tobytes(), SHARABLE_NS,
+                      actor="host")
+        shape = node.ingest_extent(f"tbl{i}", "/data/tbl.bin", 32)
+        tables[f"tbl{i}"] = (ip, data)
+        print(f"  {ip}: ingested extent tbl{i} {shape}")
+
+    # 3. analytics through the docker-cli front door, over Ether-oN
+    ip, data = tables["tbl0"]
+    job = AnalyticsJob(extent="tbl0", filter_col=3, filter_op="ge",
+                      threshold=0.0, reduce="count")
+    node = pool.nodes[ip]
+    cid = json.loads(node.docker.handle_http(
+        "POST /containers/create?image=isp-analytics"))["Id"]
+    q = urllib.parse.quote(json.dumps([job.to_dict()]))
+    resp = from_jsonable(json.loads(node.docker.handle_http(
+        f"POST /containers/{cid}/start?job={q}")))
+    block = resp["result"][0]
+    ref = np.asarray(ops.scan_filter_reduce_host(
+        jnp.asarray(data), 0.0, page_rows=64, filter_col=3,
+        filter_op="ge"))
+    assert np.array_equal(block, ref), "front door != host reference"
+    print(f"front door: count(col3 >= 0) = {block[0, 0]:.0f} of "
+          f"{data.shape[0]} rows (bit-identical to the host fold)")
+
+    # 4. planner: decide, batch per node, execute across the pool
+    planner = OffloadPlanner(pool)
+    jobs = [AnalyticsJob(extent=name, filter_col=1, filter_op="lt",
+                         threshold=0.5, reduce="sum", reduce_col=2,
+                         job_id=i)
+            for i, name in enumerate(tables)]
+    recs = planner.execute(jobs)
+    for rec in recs:
+        est = rec["est"]
+        print(f"  job {rec['job'].job_id} on {est.node_ip}: -> "
+              f"{rec['where']} (modeled host {est.host_s*1e3:.2f} ms vs "
+              f"d-virtfw {est.dvirtfw_s*1e3:.2f} ms), "
+              f"sum[col2|col1<0.5] = {rec['result']:.3f}")
+        _, d = tables[rec["job"].extent]
+        ref = np.asarray(ops.scan_filter_reduce_host(
+            jnp.asarray(d), 0.5, page_rows=64, filter_col=1,
+            filter_op="lt"))
+        assert np.array_equal(rec["block"], ref)
+    terms = data_plane_terms(pool.driver.stats,
+                             bytes_scanned=sum(d.nbytes for _, d in
+                                               tables.values()),
+                             n_jobs=len(jobs))
+    print(f"data plane: {terms['job_frames']:.0f} job frames, "
+          f"{terms['wire_bytes']:.0f} wire bytes "
+          f"({terms['us_per_job']:.1f} us/job accounted)")
+
+    # 5. the classic DLRM embed container still runs on the same pool
     blob = make_blob(ImageManifest("dlrm-embed", "dlrm-embed",
                                    ["rootfs-layer0"]),
                      {"rootfs-layer0": b"binaries+runtime"})
     pool.broadcast_pull("dlrm-embed", blob)
-    print(f"pulled 'dlrm-embed' ({len(blob)}B blob) onto all nodes")
+    ip = pool.alive_nodes()[2]
+    node = pool.nodes[ip]
+    table = rng.normal(size=(512, 64)).astype(np.float32)
+    idx = rng.integers(0, 512, (32, 16), dtype=np.int32)
+    node.fs.write("/data/table.npy", table.tobytes(), SHARABLE_NS,
+                  actor="host")
+    node.fs.write("/data/idx.npy", idx.tobytes(), SHARABLE_NS,
+                  actor="host")
+    cid, pooled = node.docker.cmd_run("dlrm-embed")
+    print(f"dlrm-embed on {ip}: pooled shape {pooled.shape}")
 
-    # 3. host places input data in the sharable namespace of 4 nodes
-    rng = np.random.default_rng(0)
-    job_nodes = pool.alive_nodes()[:4]
-    for ip in job_nodes:
-        node = pool.nodes[ip]
-        table = rng.normal(size=(512, 64)).astype(np.float32)
-        idx = rng.integers(0, 512, (32, 16), dtype=np.int32)
-        node.fs.write("/data/table.npy", table.tobytes(), SHARABLE_NS,
-                      actor="host")
-        node.fs.write("/data/idx.npy", idx.tobytes(), SHARABLE_NS,
-                      actor="host")
-
-    # 4. distributed placement + run (mode 2 of the paper: one job
-    #    spanning the pool)
-    pool.place_distributed("embed-job", "dlrm-embed", dp=4)
-    results = pool.run_on(
-        "embed-job",
-        lambda node, rank: node.docker.cmd_run("dlrm-embed")[1])
-    print(f"ran on {len(results)} nodes; pooled shapes "
-          f"{[r.shape for r in results]}")
-
-    # 5. logs via docker-cli over Ether-oN
-    ip = job_nodes[0]
+    # logs via docker-cli over Ether-oN, then a node failure reschedule
     pool.driver.transmit(EthernetFrame("10.0.0.1", ip,
-                                       b"GET /containers/1/logs"))
+                                       f"GET /containers/{cid}/logs".encode()))
     frame = pool.driver.poll()
     print(f"logs over Ether-oN from {ip}:")
     for line in frame.payload.decode().strip().splitlines():
         print("   |", line)
-
-    # failure: kill a node mid-fleet, watch the pool reschedule
+    pool.place_independent("embed-job", "dlrm-embed", n=2)
     victim = pool.placements["embed-job"].node_ips[0]
     pool.nodes[victim].fail()
     pool.check_heartbeats(now=1e9)
     print(f"killed {victim}; pool events: {pool.events[-1]}")
     print(f"Ether-oN stats: {pool.driver.stats.tx_commands} tx cmds, "
           f"{pool.driver.stats.rx_completions} upcalls, "
+          f"{pool.driver.stats.job_frames} job frames, "
           f"{pool.driver.stats.lock_syncs} inode-lock syncs")
 
 

@@ -1,8 +1,13 @@
 """DockerSSD core layer: the paper's contribution as composable modules."""
-from repro.core.container import (APP_REGISTRY, MiniDocker,  # noqa: F401
-                                  make_blob, ImageManifest, register_app)
+from repro.core.container import (APP_REGISTRY, ContainerError,  # noqa: F401
+                                  ContainerOOM, MiniDocker, from_jsonable,
+                                  make_blob, ImageManifest, register_app,
+                                  to_jsonable)
 from repro.core.ether_on import (DockerSSDEndpoint, EtherONDriver,  # noqa: F401
                                  EthernetFrame, UPCALL_SLOTS)
+from repro.core.extent_store import (ANALYTICS_IMAGE, AnalyticsJob,  # noqa: F401
+                                     Extent, ExtentStore, ExtentStoreError,
+                                     analytics_blob)
 from repro.core.kv_tier import (PagedKVCache, PageStore,  # noqa: F401
                                 PageTableManager)
 from repro.core.lambda_fs import (LambdaFS, LockHeld, PRIVATE_NS,  # noqa: F401

@@ -322,6 +322,30 @@ def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
     }
 
 
+def data_plane_terms(ether_stats, bytes_scanned: int,
+                     n_jobs: int) -> Dict[str, float]:
+    """Traffic terms for the analytics data plane (ISP job offload).
+
+    ``ether_stats`` is the driver's ``EtherONStats`` after an offload
+    run: JOB submissions and RESULTS aggregates ride 0xE0/0xE1 frames,
+    cost-accounted per operation exactly like Fig 3's docker-cli path.
+    ``bytes_scanned`` is what the host baseline would have moved;
+    ``reduction_ratio`` quantifies the paper's first headline claim —
+    ship the operator to the data and only the aggregate crosses the
+    wire."""
+    jobs = max(int(n_jobs), 1)
+    wire = ether_stats.bytes_tx + ether_stats.bytes_rx
+    return {
+        "job_frames": float(ether_stats.job_frames),
+        "result_bytes": float(ether_stats.result_bytes),
+        "wire_bytes": float(wire),
+        "wire_bytes_per_job": wire / jobs,
+        "us_total": float(ether_stats.time_us),
+        "us_per_job": ether_stats.time_us / jobs,
+        "reduction_ratio": bytes_scanned / max(wire, 1),
+    }
+
+
 # ---------------------------------------------------------------------------
 # sensitivity sweeps (Fig 13)
 # ---------------------------------------------------------------------------

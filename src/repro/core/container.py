@@ -19,8 +19,11 @@ import dataclasses
 import io
 import json
 import time
+import urllib.parse
 import zlib
 from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
 
 from repro.core.lambda_fs import PRIVATE_NS, SHARABLE_NS, LambdaFS
 
@@ -40,6 +43,56 @@ def register_app(name: str):
 
 class ContainerError(Exception):
     pass
+
+
+class ContainerOOM(ContainerError, MemoryError):
+    """A running app allocated past its cgroup-style ``mem_budget``.
+
+    Subclasses both ContainerError (the container API contract: budget
+    violations are container failures, the container transitions to
+    ``dead``) and MemoryError (the POSIX-shaped signal an OOM-killed
+    workload sees)."""
+
+
+def to_jsonable(obj):
+    """JSON-encode app results losslessly: ndarrays become tagged hex
+    blobs (bit-exact across the wire — floats never round-trip through
+    decimal), containers recurse, scalars pass through."""
+    if isinstance(obj, np.ndarray):
+        return {"__ndarray__": obj.tobytes().hex(),
+                "shape": list(obj.shape), "dtype": str(obj.dtype)}
+    if isinstance(obj, (np.integer, np.floating)):
+        return obj.item()
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(x) for x in obj]
+    if isinstance(obj, dict):
+        return {k: to_jsonable(v) for k, v in obj.items()}
+    return obj
+
+
+def from_jsonable(obj):
+    if isinstance(obj, dict):
+        if "__ndarray__" in obj:
+            return np.frombuffer(
+                bytes.fromhex(obj["__ndarray__"]), obj["dtype"]
+            ).reshape(obj["shape"]).copy()
+        return {k: from_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [from_jsonable(x) for x in obj]
+    return obj
+
+
+def parse_query(query: str) -> Dict[str, str]:
+    """docker-cli query-string parsing, ``parse_qsl`` style: valueless
+    keys (``?detach``) map to ``""`` and values keep embedded ``=``
+    (``?job=a=b``) instead of crashing ``dict(kv.split("="))``."""
+    args: Dict[str, str] = {}
+    for kv in query.split("&"):
+        if not kv:
+            continue
+        k, _, v = kv.partition("=")
+        args[urllib.parse.unquote_plus(k)] = urllib.parse.unquote_plus(v)
+    return args
 
 
 @dataclasses.dataclass
@@ -81,9 +134,10 @@ class ISPContainer:
 class MiniDocker:
     """Runs inside Virtual-FW; speaks docker-cli's HTTP dialect."""
 
-    def __init__(self, fw, fs: LambdaFS):
+    def __init__(self, fw, fs: LambdaFS, extents=None):
         self.fw = fw
         self.fs = fs
+        self.extents = extents          # core.extent_store.ExtentStore
         self._containers: Dict[str, ISPContainer] = {}
         self._next_id = 0
         fs.mkdir("/images/blobs", PRIVATE_NS)
@@ -92,32 +146,81 @@ class MiniDocker:
 
     # -- HTTP REST front door (docker-cli compatible shape) --------------------
 
-    def handle_http(self, request: str) -> bytes:
-        """e.g. 'POST /images/create?fromImage=embed' or
-        'GET /containers/3/logs'."""
+    def handle_http(self, request: str, body: bytes = b"") -> bytes:
+        """e.g. 'POST /images/create?fromImage=embed' (blob in ``body``),
+        'POST /containers/3/start?job=<json>' or 'GET /containers/3/logs'.
+
+        Malformed requests return a 400-shaped JSON error instead of
+        raising into the Ether-oN handler."""
         try:
             method, rest = request.split(" ", 1)
-            path = rest.split("?")[0]
-            args = dict(kv.split("=") for kv in rest.split("?")[1].split("&")
-                        ) if "?" in rest else {}
-            if path == "/images/create":
-                raise ContainerError("pull needs a blob; use cmd_pull")
-            parts = [p for p in path.split("/") if p]
-            if parts[0] == "containers":
-                if parts[-1] == "json":
-                    return json.dumps(self.cmd_ps()).encode()
-                cid = parts[1]
-                action = parts[2] if len(parts) > 2 else ""
-                fn = {"start": self.cmd_start, "stop": self.cmd_stop,
-                      "restart": self.cmd_restart, "kill": self.cmd_kill,
-                      "logs": self.cmd_logs}.get(action)
-                if fn is None:
-                    raise ContainerError(f"bad action {action}")
-                out = fn(cid)
-                return out if isinstance(out, bytes) else json.dumps(out).encode()
-            raise ContainerError(f"bad path {path}")
+            path, _, query = rest.partition("?")
+            args = parse_query(query)
+            return self._route(method, path, args, body)
         except ContainerError as e:
-            return json.dumps({"error": str(e)}).encode()
+            return json.dumps({"error": str(e), "status": 400}).encode()
+        except Exception as e:      # malformed request, bad args, app error
+            return json.dumps({"error": f"{type(e).__name__}: {e}",
+                               "status": 400}).encode()
+
+    def _route(self, method: str, path: str, args: Dict[str, str],
+               body: bytes) -> bytes:
+        def reply(obj) -> bytes:
+            return obj if isinstance(obj, bytes) \
+                else json.dumps(to_jsonable(obj)).encode()
+
+        parts = [p for p in path.split("/") if p]
+        if not parts:
+            raise ContainerError(f"bad path {path}")
+        if parts[0] == "images":
+            if parts[-1] == "json":
+                return reply(self.images())
+            if path == "/images/create":
+                name = args.get("fromImage", "")
+                if not name or not body:
+                    raise ContainerError(
+                        "pull needs ?fromImage=<name> and the blob as the "
+                        "request body")
+                return reply({"status": "pulled",
+                              "name": self.cmd_pull(name, body).name})
+            raise ContainerError(f"bad path {path}")
+        if parts[0] != "containers":
+            raise ContainerError(f"bad path {path}")
+        if parts[-1] == "json":
+            return reply(self.cmd_ps())
+        if path == "/containers/create":
+            return reply({"Id": self.cmd_create(
+                args["image"], mem_budget=int(args.get("mem", 1 << 30)))})
+        if path == "/containers/run":
+            cid, out = self.cmd_run(args["image"], **self._start_kwargs(args))
+            return reply({"Id": cid, "result": out})
+        cid = parts[1]
+        action = parts[2] if len(parts) > 2 else ""
+        if method == "DELETE" or action == "rm":
+            self.cmd_rm(cid)
+            return reply({"status": "removed"})
+        if action == "start":
+            return reply({"result": self.cmd_start(
+                cid, **self._start_kwargs(args))})
+        if action == "restart":
+            return reply({"result": self.cmd_restart(
+                cid, **self._start_kwargs(args))})
+        fn = {"stop": self.cmd_stop, "kill": self.cmd_kill,
+              "logs": self.cmd_logs}.get(action)
+        if fn is None:
+            raise ContainerError(f"bad action {action!r}")
+        return reply(fn(cid))
+
+    @staticmethod
+    def _start_kwargs(args: Dict[str, str]) -> Dict[str, Any]:
+        """Query args an app start accepts: ``job=<json>`` carries an
+        analytics program list (the docker-cli front door for the
+        in-storage analytics path)."""
+        kw: Dict[str, Any] = {}
+        if args.get("job"):
+            jobs = json.loads(args["job"])
+            kw["jobs"] = jobs if isinstance(jobs, list) else [jobs]
+        return kw
 
     # -- image management -------------------------------------------------------
 
@@ -181,6 +284,8 @@ class MiniDocker:
             self._log(cid, "exit code=0\n")
             return result
         except MemoryError as e:
+            # ContainerOOM lands here too (it is-a MemoryError): budget
+            # violations kill the container, docker-style exit 137
             c.state = "dead"
             c.exit_code = 137
             self._log(cid, f"OOM-killed: {e}\n")
@@ -219,7 +324,9 @@ class MiniDocker:
         if c.state == "running":
             raise ContainerError("cannot rm a running container")
         self._containers.pop(cid)
-        self.fs.unlink(f"/containers/{cid}/rootfs/log", PRIVATE_NS)
+        # whole container subtree: log, rootfs params (job.json), layer
+        # symlinks and the upper dir — nothing strands λFS space
+        self.fs.rmtree(f"/containers/{cid}", PRIVATE_NS)
 
     # -- monitoring ---------------------------------------------------------------
 
@@ -252,6 +359,7 @@ class ContainerContext:
         self.c = container
         self.fw = docker.fw
         self.fs = docker.fs
+        self.extents = docker.extents
 
     def log(self, msg: str):
         self._docker._log(self.c.cid, msg if msg.endswith("\n") else msg + "\n")
@@ -261,7 +369,7 @@ class ContainerContext:
 
     def alloc(self, nbytes: int):
         if self.c.mem_used + nbytes > self.c.mem_budget:
-            raise MemoryError(
+            raise ContainerOOM(
                 f"cgroup budget exceeded: {self.c.mem_used + nbytes} > "
                 f"{self.c.mem_budget}")
         self.c.mem_used += nbytes

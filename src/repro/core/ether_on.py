@@ -20,6 +20,7 @@ the pool's control plane; bulk tensor traffic rides jax collectives.
 from __future__ import annotations
 
 import dataclasses
+import json
 import zlib
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -86,6 +87,9 @@ class EtherONStats:
         self.reposts = 0
         self.lock_syncs = 0
         self.control_frames = 0
+        self.job_frames = 0          # analytics JOB submissions
+        self.result_bytes = 0        # reduced aggregates shipped back
+        self.extent_reads = 0        # host-reads-everything fetches
         self.time_us = 0.0
 
 
@@ -165,6 +169,67 @@ class EtherONDriver:
         payload = f"SERVE {verb} {seq_id} {extra}".rstrip().encode()
         self.stats.control_frames += 1
         self.transmit(EthernetFrame(self.host_ip, dst_ip, payload))
+
+    # -- analytics data plane ---------------------------------------------------
+    #
+    # Job and result frames ride the same 0xE0/0xE1 tunnel as docker-cli
+    # traffic and pay the same per-operation costs.  Responses larger
+    # than one MTU are length-framed (``<TAG> <nbytes>\n<body>``) and
+    # reassembled from consecutive upcall frames — the event loop is
+    # synchronous, so a response's chunks arrive back to back.
+
+    def submit_jobs(self, dst_ip: str, jobs: List[dict]) -> List[dict]:
+        """Ship a batch of analytics programs to one node; return the
+        decoded per-job results (tagged-hex ndarrays stay encoded — the
+        caller decodes with ``container.from_jsonable``)."""
+        payload = b"JOB " + json.dumps(jobs).encode()
+        self.stats.job_frames += 1
+        self.transmit(EthernetFrame(self.host_ip, dst_ip, payload))
+        body = self._collect_response(b"RESULTS ")
+        self.stats.result_bytes += len(body)
+        out = json.loads(body)
+        if isinstance(out, dict) and "error" in out:
+            raise EtherONError(f"node {dst_ip} rejected jobs: "
+                               f"{out['error']}")
+        return out
+
+    def fetch_extent(self, dst_ip: str, name: str):
+        """The host baseline: read a whole extent back over the tunnel
+        (every byte pays frame costs — the traffic ISP offload avoids)."""
+        import numpy as np
+        self.stats.extent_reads += 1
+        self.transmit(EthernetFrame(self.host_ip, dst_ip,
+                                    b"READ " + name.encode()))
+        body = self._collect_response(b"EXTENT ")
+        header, _, raw = body.partition(b"\n")
+        meta = json.loads(header)
+        if "error" in meta:
+            raise EtherONError(f"node {dst_ip}: {meta['error']}")
+        return np.frombuffer(raw, meta["dtype"]).reshape(
+            meta["rows"], meta["cols"]).copy()
+
+    def _collect_response(self, tag: bytes) -> bytes:
+        frame = self.poll()
+        skipped = 0
+        # stale chunks from abandoned responses (e.g. a logs read the
+        # client polled only once) must not poison the next request
+        while frame is not None and not frame.payload.startswith(tag):
+            skipped += 1
+            frame = self.poll()
+        if frame is None:
+            raise EtherONError(
+                f"no {tag!r} response on the upcall inbox "
+                f"(skipped {skipped} stale frames)")
+        header, _, rest = frame.payload.partition(b"\n")
+        n = int(header[len(tag):])
+        buf = bytearray(rest)
+        while len(buf) < n:
+            frame = self.poll()
+            if frame is None:
+                raise EtherONError(f"truncated {tag!r} response: "
+                                   f"{len(buf)}/{n} bytes")
+            buf += frame.payload
+        return bytes(buf[:n])
 
     # -- SSD -> host (upcall path) ---------------------------------------------
 

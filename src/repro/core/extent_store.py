@@ -1,0 +1,259 @@
+"""ExtentStore — device-resident analytics data, in stacked pages.
+
+The analytics sibling of ``core.kv_tier.PageStore``: one pool of
+stacked pages ``[n_pages, page_rows, n_cols]`` (float32) holds every
+extent's rows, an *extent* is a named run of physical pages plus a row
+count, and the jitted scan/filter/reduce kernel
+(``kernels.isp_scan``) consumes the pool directly through a per-extent
+page table — the flash the paper's ISP-containers process in place.
+
+A MiniDocker analytics app is no longer an opaque callable: it is an
+:class:`AnalyticsJob` — a declarative scan -> filter -> reduce program
+that serializes to JSON (so it rides Ether-oN job frames and λFS
+rootfs params) and executes as one jitted Pallas kernel over the
+node's extent pages.  The registered ``isp-analytics`` image is the
+single generic interpreter for these programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.container import (ContainerError, ImageManifest, make_blob,
+                                  register_app)
+from repro.kernels import ops
+from repro.kernels.isp_scan import FILTER_OPS, REDUCE_ROWS
+
+#: the generic analytics image every DockerSSD runs (entry = the program
+#: interpreter below)
+ANALYTICS_IMAGE = "isp-analytics"
+
+#: host-side projections of the kernel's aggregate block
+REDUCE_KINDS = ("count", "sum", "min", "max", "avg", "table")
+
+
+class ExtentStoreError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Extent:
+    name: str
+    page_ids: List[int]
+    n_rows: int
+    n_cols: int                     # logical columns (<= store n_cols)
+
+    @property
+    def nbytes(self) -> int:
+        """Logical bytes the host baseline must move to read this."""
+        return self.n_rows * self.n_cols * 4
+
+
+class ExtentStore:
+    """One DockerSSD's flash-resident analytics pages.
+
+    ``pages``: [n_pages, page_rows, n_cols] float32.  Extents are
+    page-granular allocations out of a free list (mirroring λFS block
+    allocation); the kernel addresses them through per-extent page
+    tables, so extents never need to be physically contiguous.
+    """
+
+    def __init__(self, *, n_pages: int = 64, page_rows: int = 128,
+                 n_cols: int = 128):
+        self.n_pages = n_pages
+        self.page_rows = page_rows
+        self.n_cols = n_cols
+        self.pages = jnp.zeros((n_pages, page_rows, n_cols), jnp.float32)
+        self.extents: Dict[str, Extent] = {}
+        self._free: List[int] = list(range(n_pages))
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def page_nbytes(self) -> int:
+        return self.page_rows * self.n_cols * 4
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    # -- extent life cycle ----------------------------------------------------
+
+    def put(self, name: str, arr: np.ndarray) -> Extent:
+        """Ingest host data as a new extent (pad rows to page granularity,
+        pad columns to the store width)."""
+        arr = np.asarray(arr, np.float32)
+        if arr.ndim != 2:
+            raise ExtentStoreError(f"extent data must be 2-D [rows, cols], "
+                                   f"got shape {arr.shape}")
+        rows, cols = arr.shape
+        if cols > self.n_cols:
+            raise ExtentStoreError(f"extent has {cols} cols; store width "
+                                   f"is {self.n_cols}")
+        if name in self.extents:
+            raise ExtentStoreError(f"extent {name!r} already exists")
+        need = -(-max(rows, 1) // self.page_rows)
+        if need > len(self._free):
+            raise ExtentStoreError(
+                f"ENOSPC: extent {name!r} needs {need} pages, "
+                f"{len(self._free)} free")
+        ids = [self._free.pop(0) for _ in range(need)]
+        padded = np.zeros((need * self.page_rows, self.n_cols), np.float32)
+        padded[:rows, :cols] = arr
+        blocks = padded.reshape(need, self.page_rows, self.n_cols)
+        self.pages = self.pages.at[jnp.asarray(ids, jnp.int32)].set(
+            jnp.asarray(blocks))
+        ext = Extent(name, ids, rows, cols)
+        self.extents[name] = ext
+        return ext
+
+    def get(self, name: str) -> np.ndarray:
+        """Read a whole extent back to the host (the baseline's full
+        transfer; the ISP path never calls this)."""
+        ext = self._extent(name)
+        flat = np.asarray(
+            self.pages[jnp.asarray(ext.page_ids, jnp.int32)]
+        ).reshape(-1, self.n_cols)
+        return flat[:ext.n_rows, :ext.n_cols]
+
+    def drop(self, name: str):
+        ext = self.extents.pop(name, None)
+        if ext is not None:
+            self._free.extend(ext.page_ids)
+
+    def page_table(self, name: str) -> jnp.ndarray:
+        return jnp.asarray(self._extent(name).page_ids, jnp.int32)
+
+    def _extent(self, name: str) -> Extent:
+        if name not in self.extents:
+            raise ExtentStoreError(f"no extent {name!r}")
+        return self.extents[name]
+
+
+# ---------------------------------------------------------------------------
+# the analytics program (what a MiniDocker app now *is*)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnalyticsJob:
+    """A declarative scan -> filter -> reduce program over one extent.
+
+    Serializes to JSON, so the same object rides the docker-cli front
+    door (``start?job=...``), Ether-oN job frames, and λFS rootfs
+    params.  ``reduce`` picks the host-visible projection of the
+    kernel's aggregate block; ``table`` returns the full block (what
+    the correctness contract compares bit-for-bit)."""
+    extent: str
+    filter_col: int = 0
+    filter_op: str = "all"          # one of kernels.isp_scan.FILTER_OPS
+    threshold: float = 0.0
+    reduce: str = "table"           # one of REDUCE_KINDS
+    reduce_col: int = 0
+    job_id: int = 0
+    # operator intensity hint: effective GB/s the operator scans at on
+    # the host (0 = the planner's default).  Low values mark a
+    # compute-bound operator — the per-request input that flips the
+    # offload decision to the host (Fig 11's losing regime).
+    scan_gbs: float = 0.0
+
+    def validate(self):
+        if self.filter_op not in FILTER_OPS:
+            raise ContainerError(f"bad filter_op {self.filter_op!r}; "
+                                 f"expected one of {FILTER_OPS}")
+        if self.reduce not in REDUCE_KINDS:
+            raise ContainerError(f"bad reduce {self.reduce!r}; "
+                                 f"expected one of {REDUCE_KINDS}")
+        return self
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "AnalyticsJob":
+        return AnalyticsJob(**d).validate()
+
+
+def project(block: np.ndarray, job: AnalyticsJob):
+    """Host-side projection of the kernel's [8, n_cols] aggregate."""
+    if job.reduce == "table":
+        return block
+    if job.reduce == "count":
+        return float(block[0, 0])
+    col = job.reduce_col
+    if job.reduce == "sum":
+        return float(block[1, col])
+    if job.reduce == "min":
+        return float(block[2, col])
+    if job.reduce == "max":
+        return float(block[3, col])
+    n = block[0, 0]
+    return float(block[1, col] / n) if n else float("nan")   # avg
+
+
+def analytics_blob() -> bytes:
+    """The docker blob every node pulls: the generic analytics image."""
+    return make_blob(
+        ImageManifest(ANALYTICS_IMAGE, ANALYTICS_IMAGE,
+                      ["kernel-layer", "runtime-layer"],
+                      config={"kernel": "scan_filter_reduce"}),
+        {"kernel-layer": b"pallas scan/filter/reduce",
+         "runtime-layer": b"job interpreter"})
+
+
+@register_app(ANALYTICS_IMAGE)
+def isp_analytics(ctx, jobs=None, job_pages=None):
+    """The containerized analytics interpreter.
+
+    Parameters arrive the D-VirtFW way: packaged in the container's
+    rootfs (λFS ``job.json``, read through function-call syscalls — no
+    Kernel-ctx) with the raw call args staged in the MPU-checked ISP
+    memory pool.  Each job executes as one jitted Pallas
+    ``scan_filter_reduce`` over the node's extent pages and returns the
+    reduced aggregate — the only bytes that travel back to the host.
+    """
+    if jobs is None:
+        # rootfs-packaged params: /containers/<cid>/rootfs/job.json
+        fd = ctx.syscall("openat", f"/containers/{ctx.c.cid}/rootfs/job.json")
+        raw = ctx.syscall("read", fd)
+        ctx.syscall("close", fd)
+        jobs = json.loads(raw)
+    jobs = [j if isinstance(j, AnalyticsJob) else AnalyticsJob.from_dict(j)
+            for j in jobs]
+    if job_pages is not None:
+        # call args staged in the ISP pool (user-mode readable; the FW
+        # pool would trap) — verify the MPU-checked buffer round-trips.
+        # Compare canonicalized: clients may send sparse dicts and let
+        # AnalyticsJob defaults fill the rest.
+        staged = [AnalyticsJob.from_dict(d).to_dict()
+                  for d in json.loads(ctx.fw.read_job(job_pages))]
+        if staged != [j.to_dict() for j in jobs]:
+            raise ContainerError("ISP-pool job buffer does not match "
+                                 "rootfs params")
+    store = ctx.extents
+    if store is None:
+        raise ContainerError("node has no ExtentStore attached")
+    results = []
+    for job in jobs:
+        if job.extent not in store.extents:
+            raise ContainerError(f"no extent {job.extent!r} on this node")
+        # cgroup accounting: one VMEM-resident page + the aggregate
+        work = store.page_nbytes + REDUCE_ROWS * store.n_cols * 4
+        ctx.alloc(work)
+        try:
+            block = ops.scan_filter_reduce(
+                store.pages, store.page_table(job.extent),
+                store.extents[job.extent].n_rows, job.threshold,
+                filter_col=job.filter_col, filter_op=job.filter_op)
+            results.append(np.asarray(jax.block_until_ready(block)))
+        finally:
+            ctx.free(work)
+        ctx.log(f"job {job.job_id}: scanned {job.extent} "
+                f"({store.extents[job.extent].n_rows} rows) "
+                f"filter={job.filter_op} -> {job.reduce}")
+    return results

@@ -245,6 +245,17 @@ class LambdaFS:
                 self.used -= len(node.data)
                 self._node_cache.pop(key, None)
 
+    def rmtree(self, path: str, ns: str = PRIVATE_NS):
+        """Remove a directory subtree (every inode at or under ``path``)
+        — container teardown must not strand rootfs files/symlinks."""
+        with self._lock:
+            prefix = self._key(ns, path)
+            for key in [k for k in self._inodes
+                        if k == prefix or k.startswith(prefix + "/")]:
+                node = self._inodes.pop(key)
+                self.used -= len(node.data)
+                self._node_cache.pop(key, None)
+
     def listdir(self, path: str, ns: str = PRIVATE_NS):
         with self._lock:
             prefix = path.rstrip("/") + "/"

@@ -12,12 +12,16 @@ container rescheduling, straggler re-replication, elastic membership.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.container import MiniDocker
+import numpy as np
+
+from repro.core.container import MiniDocker, to_jsonable
 from repro.core.ether_on import DockerSSDEndpoint, EtherONDriver
-from repro.core.lambda_fs import LambdaFS
+from repro.core.extent_store import ANALYTICS_IMAGE, ExtentStore
+from repro.core.lambda_fs import SHARABLE_NS, LambdaFS
 from repro.core.virtual_fw import VirtualFW
 
 
@@ -33,7 +37,8 @@ class NodeSpec:
 class DockerSSDNode:
     """One disaggregated computational SSD."""
 
-    def __init__(self, ip: str, spec: Optional[NodeSpec] = None):
+    def __init__(self, ip: str, spec: Optional[NodeSpec] = None,
+                 extent_cfg: Optional[Dict[str, int]] = None):
         self.ip = ip
         # default must be constructed per node: a shared NodeSpec instance
         # would alias every node's spec, so mutating one (e.g. a degraded
@@ -43,7 +48,9 @@ class DockerSSDNode:
         self.fs = LambdaFS(capacity_bytes=int(spec.flash_gb * 1e9))
         self.endpoint = DockerSSDEndpoint(ip)
         self.fw = VirtualFW(self.fs, self.endpoint)
-        self.docker = MiniDocker(self.fw, self.fs)
+        # flash-resident analytics pages, addressed by the scan kernel
+        self.extents = ExtentStore(**(extent_cfg or {}))
+        self.docker = MiniDocker(self.fw, self.fs, extents=self.extents)
         # λFS lock syncs ride the pool's Ether-oN driver
         self.alive = True
         self.last_heartbeat = 0.0
@@ -54,16 +61,81 @@ class DockerSSDNode:
     def _on_frame(self, frame):
         """HTTP-over-Ether-oN: docker-cli requests land here; serving
         control messages (``SERVE <verb> <seq>``) are logged by the
-        node's serving agent and acknowledged over the upcall path."""
-        req = frame.payload.decode(errors="replace")
+        node's serving agent and acknowledged over the upcall path;
+        ``JOB``/``READ`` frames are the analytics data plane."""
+        # requests with a body (e.g. an image blob for pull) carry it
+        # after a blank line, HTTP-style
+        head, _, body = frame.payload.partition(b"\n\n")
+        req = head.decode(errors="replace")
         if req.startswith("SERVE "):
             parts = req.split()
             verb, seq_id = parts[1], int(parts[2])
             self.serving_log.append((verb, seq_id))
             return f"ACK {verb} {seq_id}".encode()
-        if req.startswith(("GET ", "POST ")):
-            return self.docker.handle_http(req)
+        if req.startswith("JOB "):
+            return self._run_jobs(frame.payload[4:])
+        if req.startswith("READ "):
+            return self._read_extent(req[5:].strip())
+        if req.startswith(("GET ", "POST ", "DELETE ")):
+            return self.docker.handle_http(req, body)
         return None
+
+    # -- analytics data plane (device side) -------------------------------------
+
+    def _run_jobs(self, raw: bytes) -> bytes:
+        """One batched JOB frame -> one container run -> one RESULTS
+        response carrying only the reduced aggregates.
+
+        The D-VirtFW execution path end to end: call args staged in the
+        MPU-checked ISP memory pool, job params packaged into the
+        container's λFS rootfs via function-call syscalls (no
+        Kernel-ctx), then the jitted Pallas reduce over the node's
+        extent pages."""
+        job_pages = None
+        try:
+            # args into the ISP pool (page-granular, user-mode — Fig 6)
+            job_pages = self.fw.stage_job(raw)
+            cid = self.docker.cmd_create(ANALYTICS_IMAGE)
+            # rootfs-packaged params through the I/O handler's syscalls
+            fd = self.fw.syscall("openat",
+                                 f"/containers/{cid}/rootfs/job.json")
+            self.fw.syscall("write", fd, raw)
+            self.fw.syscall("close", fd)
+            results = self.docker.cmd_start(cid, job_pages=job_pages)
+            body = json.dumps(to_jsonable(results)).encode()
+            # batch retired: reclaim the container (a failed one stays
+            # around dead/exited for `docker logs` debugging)
+            self.docker.cmd_rm(cid)
+        except Exception as e:
+            body = json.dumps({"error": f"{type(e).__name__}: {e}"}).encode()
+        finally:
+            if job_pages is not None:
+                self.fw.free_job(job_pages)     # ISP pool is finite
+        return b"RESULTS %d\n" % len(body) + body
+
+    def _read_extent(self, name: str) -> bytes:
+        """Host-reads-everything: ship the whole extent back (the
+        baseline traffic the in-storage reduce eliminates)."""
+        if name not in self.extents.extents:
+            hdr = json.dumps({"error": f"no extent {name!r}"}).encode()
+            body = hdr + b"\n"
+        else:
+            arr = self.extents.get(name)
+            hdr = json.dumps({"rows": arr.shape[0], "cols": arr.shape[1],
+                              "dtype": str(arr.dtype)}).encode()
+            body = hdr + b"\n" + np.ascontiguousarray(arr).tobytes()
+        return b"EXTENT %d\n" % len(body) + body
+
+    def ingest_extent(self, name: str, path: str, n_cols: int,
+                      dtype=np.float32) -> Tuple[int, int]:
+        """Move a sharable-NS file the host placed into flash extent
+        pages, through the I/O handler (counted, costed syscalls)."""
+        fd = self.fw.syscall("openat", path, SHARABLE_NS)
+        raw = self.fw.syscall("read", fd)
+        self.fw.syscall("close", fd)
+        arr = np.frombuffer(raw, dtype).reshape(-1, n_cols)
+        self.extents.put(name, arr)
+        return arr.shape
 
     def heartbeat(self, now: float) -> bool:
         if self.alive:
@@ -95,13 +167,15 @@ class StoragePool:
     def __init__(self, n_nodes: int, host_ip: str = "10.0.0.1",
                  spec: Optional[NodeSpec] = None, array_size: int = 16,
                  heartbeat_timeout: float = 3.0,
-                 straggler_factor: float = 3.0):
+                 straggler_factor: float = 3.0,
+                 extent_cfg: Optional[Dict[str, int]] = None):
         self.driver = EtherONDriver(host_ip)
         self.nodes: Dict[str, DockerSSDNode] = {}
         self.arrays: List[List[str]] = []
         self.array_size = array_size
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
+        self.extent_cfg = extent_cfg
         self.placements: Dict[str, Placement] = {}
         self.events: List[Tuple[str, str]] = []
         # pool-serving frontend state (attach_server)
@@ -144,6 +218,14 @@ class StoragePool:
     def broadcast_pull(self, name: str, blob: bytes, ips=None):
         for ip in (ips or self.alive_nodes()):
             self.nodes[ip].docker.cmd_pull(name, blob)
+
+    def locate_extent(self, name: str) -> Optional[str]:
+        """IP of the alive node whose flash holds extent ``name`` (data
+        placement is the scheduling input of the offload planner)."""
+        for ip in self.alive_nodes():
+            if name in self.nodes[ip].extents.extents:
+                return ip
+        return None
 
     def place_distributed(self, job: str, image: str, *, dp: int = 1,
                           tp: int = 1, pp: int = 1) -> Placement:
@@ -303,7 +385,8 @@ class StoragePool:
         NodeSpec copy — per-node state never aliases across the pool."""
         ip = f"10.0.{1 + i // self.array_size}.{2 + i % self.array_size}"
         node = DockerSSDNode(
-            ip, dataclasses.replace(spec) if spec is not None else None)
+            ip, dataclasses.replace(spec) if spec is not None else None,
+            extent_cfg=self.extent_cfg)
         node.fs.attach_ether(self.driver)
         self.nodes[ip] = node
         self.driver.attach(node.endpoint)

@@ -156,6 +156,7 @@ class VirtualFW:
         self.emulated_us = 0.0
         self._fds: Dict[int, str] = {}
         self._next_fd = 3
+        self._next_isp_page = 0
         self._conns: Dict[int, TCPConn] = {}
         self._handler_of = {}
         for name in THREAD_SYSCALLS:
@@ -246,6 +247,37 @@ class VirtualFW:
         if self.endpoint is not None:
             self.endpoint.send_to_host(data, dst_ip)
         return len(data)
+
+    # -- ISP job buffers (call args in the ISP memory pool) --------------------
+
+    def stage_job(self, payload: bytes) -> List[int]:
+        """Copy call args into page-granular ISP-pool buffers.
+
+        The ISP pool is user-mode accessible (no copy or mode switch
+        between pools — the paper's point); the FW pool would trap in
+        the MPU model.  The pool is finite (``MemoryPools.isp_pages``):
+        callers must :meth:`free_job` when the job retires.  Returns the
+        page ids the containerized app reads back with
+        :meth:`read_job`."""
+        n = max(1, -(-len(payload) // PAGE))
+        if len(self.pools.isp_pool) + n > self.pools.isp_pages:
+            raise MemoryError(
+                f"ISP pool exhausted: {len(self.pools.isp_pool)} pages "
+                f"in use of {self.pools.isp_pages}, need {n} more")
+        pages = []
+        for off in range(0, max(len(payload), 1), PAGE):
+            pid = self._next_isp_page
+            self._next_isp_page += 1
+            self.pools.isp_write(pid, payload[off:off + PAGE])
+            pages.append(pid)
+        return pages
+
+    def read_job(self, pages: List[int]) -> bytes:
+        return b"".join(self.pools.isp_read(p) or b"" for p in pages)
+
+    def free_job(self, pages: List[int]):
+        for p in pages:
+            self.pools.isp_pool.pop(p, None)
 
     # -- footprint model (Fig 10) ---------------------------------------------
 

@@ -20,8 +20,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pltpu_compat import CompilerParams
 
 
-def _embed_kernel(idx_ref, w_ref, table_ref, o_ref, *, n_lookups: int,
-                  weighted: bool):
+def _embed_kernel(idx_ref, w_ref, table_ref, o_ref, *, weighted: bool):
     b = pl.program_id(0)
     li = pl.program_id(1)
 
@@ -35,16 +34,43 @@ def _embed_kernel(idx_ref, w_ref, table_ref, o_ref, *, n_lookups: int,
     o_ref[0, :] = o_ref[0, :] + row.astype(o_ref.dtype)
 
 
+def validate_embed_args(table, indices):
+    """Reject malformed lookups before they reach ``pallas_call``.
+
+    The BlockSpec index map would silently clamp an out-of-range vocab
+    id to the last table row — a wrong answer, not an error — so bounds
+    are checked here whenever the indices are concrete (eager callers;
+    tracers inside an enclosing jit skip the value check but still get
+    the dtype/shape checks).
+    """
+    if indices.ndim != 2:
+        raise ValueError(f"indices must be [B, L], got shape "
+                         f"{tuple(indices.shape)}")
+    if not jnp.issubdtype(indices.dtype, jnp.integer):
+        raise TypeError(f"indices must be an integer dtype (int32), got "
+                        f"{indices.dtype}")
+    v = table.shape[0]
+    if not isinstance(indices, jax.core.Tracer):
+        # one fused reduction -> one host transfer (not two syncs)
+        lo, hi = map(int, jax.device_get(
+            jnp.stack([jnp.min(indices), jnp.max(indices)])))
+        if lo < 0 or hi >= v:
+            raise ValueError(
+                f"embedding indices out of range: min={lo} max={hi} but "
+                f"vocab size is {v} (valid ids are [0, {v - 1}])")
+
+
 def embed_agg(table, indices, weights=None, *, interpret: bool = False):
     """table: [V, D]; indices: [B, L] int32; weights: optional [B, L] f32.
     Returns [B, D] sum-pooled embeddings."""
+    validate_embed_args(table, indices)
     v, d = table.shape
     b, l = indices.shape
     weighted = weights is not None
     if weights is None:
         weights = jnp.ones((b, l), jnp.float32)
 
-    kernel = functools.partial(_embed_kernel, n_lookups=l, weighted=weighted)
+    kernel = functools.partial(_embed_kernel, weighted=weighted)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, l),

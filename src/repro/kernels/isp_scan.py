@@ -1,0 +1,152 @@
+"""Paged scan/filter/reduce — Pallas TPU kernel (in-storage analytics).
+
+The paper's I/O-intensive ISP workloads (pattern find/line/word,
+rocksdb read, mariadb TPC-H filters) share one shape: stream the
+flash-resident data page by page, apply a row predicate, and fold the
+survivors into a tiny aggregate — only the aggregate crosses the wire.
+TPU adaptation: analytics extents live as stacked pages
+``[n_pages, page_rows, n_cols]`` in HBM ("flash",
+core.extent_store.ExtentStore); a per-extent page table arrives via
+scalar prefetch so each grid step DMAs exactly one page HBM->VMEM and
+folds it into VMEM accumulators — compute moves to the data, the data
+never moves to the host.
+
+Grid: (pages_per_extent,), sequential, so the count/sum/min/max
+accumulators persist in VMEM scratch across pages.  Pages whose start
+row is past the extent's row count are skipped entirely (``pl.when``),
+so a pow2-padded page table costs no compute.
+
+The aggregate layout (``REDUCE_ROWS`` x n_cols, float32):
+
+  row 0  count of rows passing the filter (broadcast across columns)
+  row 1  per-column sum over passing rows
+  row 2  per-column min over passing rows (+inf when none pass)
+  row 3  per-column max over passing rows (-inf when none pass)
+  4..7   zero padding (keeps the output tile-aligned on TPU)
+
+Accumulation is page-sequential in float32 — ``kernels.ref.
+scan_filter_reduce_ref`` folds pages in the identical order with the
+identical ops, so the host reference path is bit-identical to the
+in-storage path (the acceptance contract for offload correctness).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+#: filter predicates over the (static) filter column vs the threshold
+FILTER_OPS = ("all", "ge", "lt", "eq", "ne")
+#: rows of the aggregate output block (see layout above)
+REDUCE_ROWS = 8
+
+
+def _predicate(key, threshold, op: str):
+    if op == "all":
+        return jnp.ones_like(key, dtype=jnp.bool_)
+    if op == "ge":
+        return key >= threshold
+    if op == "lt":
+        return key < threshold
+    if op == "eq":
+        return key == threshold
+    if op == "ne":
+        return key != threshold
+    raise ValueError(f"filter_op must be one of {FILTER_OPS}, got {op!r}")
+
+
+def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
+                 cnt_ref, sum_ref, min_ref, max_ref, *, page_rows: int,
+                 n_pages: int, filter_col: int, filter_op: str):
+    pi = pl.program_id(0)
+    n_rows = nrows_ref[0]
+
+    @pl.when(pi == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        min_ref[...] = jnp.full_like(min_ref, POS_INF)
+        max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+
+    @pl.when(pi * page_rows < n_rows)
+    def _body():
+        block = pages_ref[0].astype(jnp.float32)          # [page_rows, C]
+        pos = pi * page_rows + jax.lax.broadcasted_iota(
+            jnp.int32, (page_rows, 1), 0)
+        key = block[:, filter_col:filter_col + 1]         # [page_rows, 1]
+        mask = ((pos < n_rows) &
+                _predicate(key, thresh_ref[0], filter_op))
+        cnt_ref[0, 0] += jnp.sum(mask.astype(jnp.float32))
+        sum_ref[0, :] += jnp.sum(jnp.where(mask, block, 0.0), axis=0)
+        min_ref[0, :] = jnp.minimum(
+            min_ref[0, :], jnp.min(jnp.where(mask, block, POS_INF), axis=0))
+        max_ref[0, :] = jnp.maximum(
+            max_ref[0, :], jnp.max(jnp.where(mask, block, NEG_INF), axis=0))
+
+    @pl.when(pi == n_pages - 1)
+    def _finish():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[0, :] = jnp.broadcast_to(cnt_ref[0, 0], o_ref[0, :].shape)
+        o_ref[1, :] = sum_ref[0, :]
+        o_ref[2, :] = min_ref[0, :]
+        o_ref[3, :] = max_ref[0, :]
+
+
+def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
+                       filter_col: int = 0, filter_op: str = "all",
+                       interpret: bool = False):
+    """Filtered aggregate over an extent's flash-resident pages.
+
+    pages: [n_phys, page_rows, n_cols] (the whole ExtentStore pool);
+    page_table: [pps] int32 physical page ids of this extent (pow2-pad
+    with any valid id — padded pages past ``n_rows`` are skipped);
+    n_rows: [1] int32 valid rows; threshold: [1] f32 filter operand.
+    ``filter_col``/``filter_op`` are static (see FILTER_OPS).
+    Returns [REDUCE_ROWS, n_cols] float32 (layout in the module doc).
+    """
+    if filter_op not in FILTER_OPS:
+        raise ValueError(f"filter_op must be one of {FILTER_OPS}, "
+                         f"got {filter_op!r}")
+    n_phys, page_rows, n_cols = pages.shape
+    if not 0 <= filter_col < n_cols:
+        raise ValueError(f"filter_col {filter_col} out of range "
+                         f"[0, {n_cols})")
+    pps = page_table.shape[0]
+
+    kernel = functools.partial(_scan_kernel, page_rows=page_rows,
+                               n_pages=pps, filter_col=filter_col,
+                               filter_op=filter_op)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(pps,),
+        in_specs=[
+            # physical page id comes from the prefetched page table
+            pl.BlockSpec((1, page_rows, n_cols),
+                         lambda pi, pt, nr, th: (pt[pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((REDUCE_ROWS, n_cols),
+                               lambda pi, pt, nr, th: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),          # count
+            pltpu.VMEM((1, n_cols), jnp.float32),     # sum
+            pltpu.VMEM((1, n_cols), jnp.float32),     # min
+            pltpu.VMEM((1, n_cols), jnp.float32),     # max
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((REDUCE_ROWS, n_cols), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="scan_filter_reduce",
+    )(page_table, n_rows, threshold, pages)

@@ -11,8 +11,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref  # noqa: F401  (re-exported oracle module)
-from repro.kernels.embed_agg import embed_agg as _embed_agg
+from repro.kernels.embed_agg import (embed_agg as _embed_agg,
+                                     validate_embed_args)
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.isp_scan import (scan_filter_reduce as _scan_reduce,
+                                    REDUCE_ROWS)  # noqa: F401
 from repro.kernels.paged_attention import (paged_attention as _paged,
                                             paged_attention_q8 as _paged_q8)
 from repro.kernels.rwkv_scan import rwkv_scan as _rwkv
@@ -51,10 +54,76 @@ def paged_attention_q8(q, k_pages, v_pages, k_scale, v_scale, page_table,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _embed_agg_jit(table, indices, weights, interpret: bool):
+    return _embed_agg(table, indices, weights, interpret=interpret)
+
+
 def embed_agg(table, indices, weights=None, interpret: bool | None = None):
+    """Validating wrapper: dtype/bounds are checked *eagerly* (out-of-range
+    vocab ids raise instead of silently clamping), then the jitted kernel
+    runs."""
     if interpret is None:
         interpret = _interpret_default()
-    return _embed_agg(table, indices, weights, interpret=interpret)
+    indices = jnp.asarray(indices)
+    validate_embed_args(table, indices)
+    return _embed_agg_jit(table, indices, weights, interpret)
+
+
+def _pow2_pad_table(page_table):
+    """Pad a page table to the next pow2 length (with page id 0) so the
+    scan kernel compiles one program per size bucket; padded iterations
+    fall past ``n_rows`` and are skipped by the kernel."""
+    pps = page_table.shape[0]
+    target = 1 << max(pps - 1, 0).bit_length()
+    if target == pps:
+        return page_table
+    return jnp.pad(page_table, (0, target - pps))
+
+
+@functools.partial(jax.jit, static_argnames=("filter_col", "filter_op",
+                                             "interpret"))
+def _scan_reduce_jit(pages, page_table, n_rows, threshold, filter_col,
+                     filter_op, interpret):
+    if interpret:
+        # the interpret emulation carries every input buffer through
+        # each grid step, so step cost tracks the whole pool's size;
+        # compact the pool to this extent's pages first (one gather,
+        # bit-identical).  On TPU the kernel indexes the full pool
+        # directly — no copy — so compaction would only waste HBM.
+        pages = jnp.take(pages, page_table, axis=0)
+        page_table = jnp.arange(page_table.shape[0], dtype=jnp.int32)
+    return _scan_reduce(pages, page_table, n_rows, threshold,
+                        filter_col=filter_col, filter_op=filter_op,
+                        interpret=interpret)
+
+
+def scan_filter_reduce(pages, page_table, n_rows, threshold=0.0, *,
+                       filter_col: int = 0, filter_op: str = "all",
+                       interpret: bool | None = None):
+    """In-storage filtered aggregate over extent pages (jitted, with the
+    page table padded to a pow2 bucket to bound recompiles).
+
+    pages: [n_phys, page_rows, n_cols]; page_table: [pps] int32;
+    n_rows/threshold: python scalars or [1] arrays.
+    Returns [8, n_cols] f32 — see ``kernels.isp_scan`` for the layout."""
+    if interpret is None:
+        interpret = _interpret_default()
+    pt = _pow2_pad_table(jnp.asarray(page_table, jnp.int32).reshape(-1))
+    nr = jnp.asarray(n_rows, jnp.int32).reshape(1)
+    th = jnp.asarray(threshold, jnp.float32).reshape(1)
+    return _scan_reduce_jit(pages, pt, nr, th, filter_col, filter_op,
+                            interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("page_rows", "filter_col",
+                                             "filter_op"))
+def scan_filter_reduce_host(data, threshold=0.0, *, page_rows: int,
+                            filter_col: int = 0, filter_op: str = "all"):
+    """The host-side reference path (host reads everything, then folds
+    page-sequentially) — bit-identical to the in-storage kernel."""
+    return ref.scan_filter_reduce_ref(data, page_rows, threshold,
+                                      filter_col=filter_col,
+                                      filter_op=filter_op)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -91,6 +91,53 @@ def embed_agg_ref(table, indices, weights=None):
 
 
 # ---------------------------------------------------------------------------
+# paged scan/filter/reduce (in-storage analytics)
+# ---------------------------------------------------------------------------
+
+
+def scan_filter_reduce_ref(data, page_rows: int, threshold=0.0, *,
+                           filter_col: int = 0, filter_op: str = "all"):
+    """Host-side reference for ``kernels.isp_scan.scan_filter_reduce``.
+
+    data: [n_rows, n_cols] — the extent the host read back in full
+    (the "host reads everything" baseline).  The fold walks pages of
+    ``page_rows`` rows sequentially with the *same* float32 ops and
+    order as the kernel, so the result is bit-identical to the
+    in-storage path — the offload correctness contract.
+    Returns [8, n_cols] float32 (count/sum/min/max rows, zero padding).
+    """
+    from repro.kernels.isp_scan import (NEG_INF, POS_INF, REDUCE_ROWS,
+                                        _predicate)
+    n_rows, n_cols = data.shape
+    n_pages = -(-max(n_rows, 1) // page_rows)
+    pad = n_pages * page_rows - n_rows
+    blocks = jnp.pad(data.astype(jnp.float32), ((0, pad), (0, 0))
+                     ).reshape(n_pages, page_rows, n_cols)
+    thresh = jnp.asarray(threshold, jnp.float32).reshape(())
+
+    def fold(carry, xs):
+        cnt, s, mn, mx = carry
+        pi, block = xs
+        pos = pi * page_rows + jnp.arange(page_rows, dtype=jnp.int32)[:, None]
+        key = block[:, filter_col:filter_col + 1]
+        mask = (pos < n_rows) & _predicate(key, thresh, filter_op)
+        cnt = cnt + jnp.sum(mask.astype(jnp.float32))
+        s = s + jnp.sum(jnp.where(mask, block, 0.0), axis=0)
+        mn = jnp.minimum(mn, jnp.min(jnp.where(mask, block, POS_INF), axis=0))
+        mx = jnp.maximum(mx, jnp.max(jnp.where(mask, block, NEG_INF), axis=0))
+        return (cnt, s, mn, mx), None
+
+    init = (jnp.zeros((), jnp.float32),
+            jnp.zeros((n_cols,), jnp.float32),
+            jnp.full((n_cols,), POS_INF, jnp.float32),
+            jnp.full((n_cols,), NEG_INF, jnp.float32))
+    (cnt, s, mn, mx), _ = lax.scan(
+        fold, init, (jnp.arange(n_pages, dtype=jnp.int32), blocks))
+    out = jnp.zeros((REDUCE_ROWS, n_cols), jnp.float32)
+    return out.at[0].set(cnt).at[1].set(s).at[2].set(mn).at[3].set(mx)
+
+
+# ---------------------------------------------------------------------------
 # rwkv6 wkv chunked recurrence
 # ---------------------------------------------------------------------------
 

@@ -208,6 +208,15 @@ class PoolRouter(ContinuousBatcher):
                     load[s] += self._striped_share(need, s, srv.n_nodes)
         return load
 
+    def node_headroom(self) -> Dict[int, int]:
+        """Free window pages per alive node given the active set — the
+        admission surface shared with the analytics
+        :class:`~repro.runtime.offload.OffloadPlanner` (serving and
+        in-storage analytics run on the same DockerSSDs; one accounting
+        decides who gets a node)."""
+        cap = self.server.pages_per_node
+        return {s: cap - n for s, n in self._node_load().items()}
+
     def _window_has_room(self, req: Request) -> bool:
         srv = self.server
         cap = srv.pages_per_node

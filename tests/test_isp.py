@@ -1,0 +1,529 @@
+"""In-storage analytics: ExtentStore, scan kernel, job/result frames,
+the docker-cli front door, and the offload planner."""
+import json
+import urllib.parse
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (AnalyticsJob, ContainerError, ContainerOOM,
+                        DockerSSDNode, EthernetFrame, ExtentStore,
+                        ExtentStoreError, ImageManifest, SHARABLE_NS,
+                        StoragePool, analytics_blob, from_jsonable,
+                        make_blob, register_app)
+from repro.core.analytical import data_plane_terms
+from repro.core.ether_on import EtherONError
+from repro.kernels import ops
+
+EXT_CFG = {"n_pages": 16, "page_rows": 8, "n_cols": 16}
+
+
+def _ref(data, threshold=0.0, *, filter_col=0, filter_op="all",
+         page_rows=8, width=16):
+    """Host fold at store width (matches device page zero-padding)."""
+    data = np.asarray(data, np.float32)
+    if data.shape[1] < width:
+        data = np.pad(data, ((0, 0), (0, width - data.shape[1])))
+    return np.asarray(ops.scan_filter_reduce_host(
+        jnp.asarray(data), threshold, page_rows=page_rows,
+        filter_col=filter_col, filter_op=filter_op))
+
+
+def _pool(n=1):
+    pool = StoragePool(n, extent_cfg=EXT_CFG)
+    pool.broadcast_pull("isp-analytics", analytics_blob())
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# scan/filter/reduce kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("filter_op,col,thresh", [
+    ("all", 0, 0.0), ("ge", 2, 0.1), ("lt", 5, -0.3), ("eq", 0, 0.0),
+    ("ne", 1, 0.25),
+])
+def test_scan_kernel_matches_reference(filter_op, col, thresh):
+    rng = np.random.default_rng(0)
+    store = ExtentStore(**EXT_CFG)
+    data = np.round(rng.normal(size=(43, 16)) * 2).astype(np.float32) / 4
+    store.put("t", data)
+    out = np.asarray(ops.scan_filter_reduce(
+        store.pages, store.page_table("t"), 43, thresh,
+        filter_col=col, filter_op=filter_op))
+    ref = _ref(data, thresh, filter_col=col, filter_op=filter_op)
+    assert np.array_equal(out, ref)          # bit-identical, not allclose
+    # count row cross-checked against plain numpy
+    mask = {"all": np.ones(43, bool), "ge": data[:, col] >= thresh,
+            "lt": data[:, col] < thresh, "eq": data[:, col] == thresh,
+            "ne": data[:, col] != thresh}[filter_op]
+    assert out[0, 0] == mask.sum()
+
+
+def test_scan_kernel_pow2_page_table_padding():
+    """A non-pow2 extent pads its page table; padded iterations are
+    masked out by the row count."""
+    rng = np.random.default_rng(1)
+    store = ExtentStore(**EXT_CFG)
+    data = rng.normal(size=(3 * 8, 16)).astype(np.float32)   # 3 pages
+    store.put("t", data)
+    out = np.asarray(ops.scan_filter_reduce(
+        store.pages, store.page_table("t"), data.shape[0], 0.0,
+        filter_op="ge"))
+    assert np.array_equal(out, _ref(data, 0.0, filter_op="ge"))
+
+
+def test_scan_kernel_empty_filter_result():
+    store = ExtentStore(**EXT_CFG)
+    store.put("t", np.ones((10, 16), np.float32))
+    out = np.asarray(ops.scan_filter_reduce(
+        store.pages, store.page_table("t"), 10, 100.0, filter_op="ge"))
+    assert out[0, 0] == 0.0
+    assert np.all(out[2] > 1e29) and np.all(out[3] < -1e29)
+
+    with pytest.raises(ValueError):
+        ops.scan_filter_reduce(store.pages, store.page_table("t"), 10,
+                               0.0, filter_op="between")
+
+
+# ---------------------------------------------------------------------------
+# ExtentStore
+# ---------------------------------------------------------------------------
+
+
+def test_extent_store_roundtrip_and_allocation():
+    store = ExtentStore(**EXT_CFG)
+    a = np.arange(20 * 16, dtype=np.float32).reshape(20, 16)
+    b = np.ones((5, 10), np.float32)                 # narrow extent
+    store.put("a", a)
+    store.put("b", b)
+    assert np.array_equal(store.get("a"), a)
+    assert np.array_equal(store.get("b"), b)
+    assert store.free_pages() == 16 - 3 - 1
+    # page ids never overlap between extents
+    assert not (set(store.extents["a"].page_ids) &
+                set(store.extents["b"].page_ids))
+    with pytest.raises(ExtentStoreError):
+        store.put("a", a)                            # duplicate name
+    store.drop("a")
+    assert store.free_pages() == 16 - 1
+    store.put("a2", a)                               # reuses freed pages
+
+
+def test_extent_store_enospc_and_shape_errors():
+    store = ExtentStore(**EXT_CFG)
+    with pytest.raises(ExtentStoreError):
+        store.put("big", np.zeros((17 * 8, 16), np.float32))
+    with pytest.raises(ExtentStoreError):
+        store.put("wide", np.zeros((4, 17), np.float32))
+    with pytest.raises(ExtentStoreError):
+        store.put("flat", np.zeros((8,), np.float32))
+    with pytest.raises(ExtentStoreError):
+        store.get("missing")
+
+
+# ---------------------------------------------------------------------------
+# docker-cli front door (query parsing + lifecycle round trip)
+# ---------------------------------------------------------------------------
+
+
+@register_app("echo-isp")
+def _echo(ctx, value=41):
+    ctx.log("running")
+    return value + 1
+
+
+def _node():
+    return DockerSSDNode("10.0.0.2", extent_cfg=EXT_CFG)
+
+
+def test_handle_http_query_parsing_robust():
+    node = _node()
+    d = node.docker
+    # valueless key must not crash (the old dict(kv.split("=")) did)
+    out = json.loads(d.handle_http("POST /containers/create?detach"))
+    assert out["status"] == 400 and "image" in out["error"]
+    # '=' inside a value survives
+    out = json.loads(d.handle_http(
+        "POST /containers/nope/start?job=a=b"))
+    assert out["status"] == 400
+    # bad paths/actions are 400-shaped errors, never raises
+    for req in ("GET /", "GET /bogus/path", "POST /containers/1/fly",
+                "totally broken", "GET /images/create"):
+        out = json.loads(d.handle_http(req))
+        assert out["status"] == 400 and out["error"]
+
+
+def test_handle_http_lifecycle_roundtrip():
+    """pull/create/run/stop/restart/kill/rm/logs/ps entirely through the
+    HTTP front door."""
+    node = _node()
+    d = node.docker
+    blob = make_blob(ImageManifest("img", "echo-isp", ["base"]),
+                     {"base": b"\x00"})
+    out = json.loads(d.handle_http("POST /images/create?fromImage=img",
+                                   body=blob))
+    assert out == {"status": "pulled", "name": "img"}
+    assert json.loads(d.handle_http("GET /images/json")) == ["img"]
+
+    cid = json.loads(d.handle_http(
+        "POST /containers/create?image=img&mem=1048576"))["Id"]
+    out = json.loads(d.handle_http(f"POST /containers/{cid}/start"))
+    assert out["result"] == 42
+    assert json.loads(d.handle_http(f"POST /containers/{cid}/stop")) == \
+        {"status": "exited"}
+    out = json.loads(d.handle_http(f"POST /containers/{cid}/restart"))
+    assert out["result"] == 42
+    logs = d.handle_http(f"GET /containers/{cid}/logs")
+    assert b"exit code=0" in logs
+    ps = json.loads(d.handle_http("GET /containers/json"))
+    assert ps[0]["id"] == cid and ps[0]["state"] == "exited"
+    assert json.loads(d.handle_http(f"DELETE /containers/{cid}")) == \
+        {"status": "removed"}
+    assert json.loads(d.handle_http("GET /containers/json")) == []
+
+    # run = create + start in one request
+    out = json.loads(d.handle_http("POST /containers/run?image=img"))
+    assert out["result"] == 42 and out["Id"]
+    d.handle_http(f"POST /containers/{out['Id']}/kill")
+    assert json.loads(d.handle_http("GET /containers/json")
+                      )[0]["state"] == "dead"
+
+
+def test_mem_budget_enforced_as_container_error():
+    @register_app("hog-isp")
+    def hog(ctx):
+        ctx.alloc(2 << 20)
+
+    node = _node()
+    node.docker.cmd_pull("hog", make_blob(
+        ImageManifest("hog", "hog-isp", []), {}))
+    cid = node.docker.cmd_create("hog", mem_budget=1 << 20)
+    # the budget violation is a ContainerError AND a MemoryError
+    with pytest.raises(ContainerError) as ei:
+        node.docker.cmd_start(cid)
+    assert isinstance(ei.value, ContainerOOM)
+    assert isinstance(ei.value, MemoryError)
+    ps = node.docker.cmd_ps()
+    assert ps[0]["state"] == "dead" and ps[0]["exit_code"] == 137
+    # through the front door the violation surfaces as a 400 error
+    cid2 = node.docker.cmd_create("hog", mem_budget=1 << 20)
+    out = json.loads(node.docker.handle_http(
+        f"POST /containers/{cid2}/start"))
+    assert out["status"] == 400 and "budget" in out["error"]
+
+
+def test_analytics_container_respects_mem_budget():
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    node = pool.nodes[ip]
+    node.extents.put("t", np.ones((8, 16), np.float32))
+    # a budget smaller than one page + aggregate must OOM-kill the app
+    cid = node.docker.cmd_create("isp-analytics", mem_budget=16)
+    with pytest.raises(ContainerOOM):
+        node.docker.cmd_start(cid, jobs=[AnalyticsJob(extent="t")])
+    assert node.docker.cmd_ps()[0]["state"] == "dead"
+
+
+# ---------------------------------------------------------------------------
+# embed_agg validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_embed_agg_validates_before_kernel():
+    table = jnp.asarray(np.random.default_rng(0).normal(size=(32, 8)),
+                        jnp.float32)
+    good = jnp.asarray([[0, 31, 5, 7]], jnp.int32)
+    out = ops.embed_agg(table, good)
+    ref = np.asarray(ops.ref.embed_agg_ref(table, good))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6)
+
+    with pytest.raises(TypeError):
+        ops.embed_agg(table, jnp.asarray([[0.0, 1.0]], jnp.float32))
+    with pytest.raises(ValueError):
+        ops.embed_agg(table, jnp.asarray([[0, 32]], jnp.int32))   # == V
+    with pytest.raises(ValueError):
+        ops.embed_agg(table, jnp.asarray([[-1, 3]], jnp.int32))
+    with pytest.raises(ValueError):
+        ops.embed_agg(table, jnp.asarray([0, 1, 2], jnp.int32))   # 1-D
+
+
+# ---------------------------------------------------------------------------
+# Ether-oN job/result data plane
+# ---------------------------------------------------------------------------
+
+
+def test_job_frames_end_to_end_bit_identical():
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(50, 16)).astype(np.float32)
+    pool.nodes[ip].extents.put("t", data)
+    jobs = [AnalyticsJob(extent="t", filter_col=2, filter_op="ge",
+                         job_id=1),
+            AnalyticsJob(extent="t", filter_col=0, filter_op="lt",
+                         threshold=0.5, job_id=2)]
+    out = from_jsonable(pool.driver.submit_jobs(
+        ip, [j.to_dict() for j in jobs]))
+    assert len(out) == 2
+    assert np.array_equal(out[0], _ref(data, 0.0, filter_col=2,
+                                       filter_op="ge"))
+    assert np.array_equal(out[1], _ref(data, 0.5, filter_col=0,
+                                       filter_op="lt"))
+    # one batched frame, result bytes accounted
+    assert pool.driver.stats.job_frames == 1
+    assert pool.driver.stats.result_bytes > 0
+
+
+def test_job_frames_release_node_resources():
+    """A JOB frame must not leak: the batch's container is reclaimed,
+    the ISP-pool job buffers are freed, and λFS space/inodes come back
+    when the batch retires."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    node = pool.nodes[ip]
+    node.extents.put("t", np.ones((8, 16), np.float32))
+    job = AnalyticsJob(extent="t").to_dict()
+    pool.driver.submit_jobs(ip, [job])
+    n_containers = len(node.docker.cmd_ps())
+    isp_pages = len(node.fw.pools.isp_pool)
+    fs_used = node.fs.used
+    n_inodes = len(node.fs._inodes)
+    for _ in range(3):
+        pool.driver.submit_jobs(ip, [job])
+    assert len(node.docker.cmd_ps()) == n_containers
+    assert len(node.fw.pools.isp_pool) == isp_pages
+    assert node.fs.used == fs_used
+    assert len(node.fs._inodes) == n_inodes
+
+
+def test_job_frames_accept_sparse_dicts_and_stale_inbox():
+    """Clients may send sparse job dicts (defaults fill in), and a stale
+    un-drained frame from earlier traffic must not poison the next
+    request."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    node = pool.nodes[ip]
+    data = np.ones((8, 16), np.float32)
+    node.extents.put("t", data)
+    # leave a stale response chunk on the inbox (logs read, never drained)
+    node.docker.cmd_run("isp-analytics", jobs=[AnalyticsJob(extent="t")])
+    pool.driver.transmit(EthernetFrame("10.0.0.1", ip,
+                                       b"GET /containers/1/logs"))
+    out = from_jsonable(pool.driver.submit_jobs(ip, [{"extent": "t"}]))
+    assert np.array_equal(out[0], _ref(data))
+
+
+def test_pull_with_body_over_etheron():
+    """docker pull over the wire: the blob rides after a blank line,
+    HTTP-style."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    blob = make_blob(ImageManifest("wire-img", "echo-isp", []), {})
+    pool.driver.transmit(EthernetFrame(
+        "10.0.0.1", ip,
+        b"POST /images/create?fromImage=wire-img\n\n" + blob))
+    chunks = []
+    while (fr := pool.driver.poll()) is not None:
+        chunks.append(fr.payload)
+    assert json.loads(b"".join(chunks)) == {"status": "pulled",
+                                            "name": "wire-img"}
+    assert "wire-img" in pool.nodes[ip].docker.images()
+
+
+def test_job_frame_errors_surface():
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    with pytest.raises(EtherONError):
+        pool.driver.submit_jobs(ip, [AnalyticsJob(extent="nope").to_dict()])
+    with pytest.raises(EtherONError):
+        pool.driver.fetch_extent(ip, "nope")
+
+
+def test_job_frame_cost_accounting_matches_analytical_terms():
+    """The data plane pays the same per-operation costs the Fig-3 model
+    charges: recompute the expected microseconds from the stats deltas
+    and the Costs constants."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    data = np.random.default_rng(3).normal(size=(40, 16)).astype(np.float32)
+    pool.nodes[ip].extents.put("t", data)
+    job = AnalyticsJob(extent="t", filter_op="ge")
+    pool.driver.submit_jobs(ip, [job.to_dict()])      # warm the kernel
+
+    s = pool.driver.stats
+    before = (s.tx_commands, s.rx_completions, s.reposts,
+              s.pages_allocated, s.bytes_tx, s.bytes_rx, s.time_us)
+    pool.driver.submit_jobs(ip, [job.to_dict()])
+    dtx = s.tx_commands - before[0]
+    drx = s.rx_completions - before[1]
+    drepost = s.reposts - before[2]
+    dpages = s.pages_allocated - before[3]
+    dbytes_tx = s.bytes_tx - before[4]
+    dbytes_rx = s.bytes_rx - before[5]
+    dus = s.time_us - before[6]
+
+    c = pool.driver.costs
+    tx_pages = dpages - drepost              # reposts alloc 1 page each
+    expected = (
+        # transmit: copy + doorbell + DMA + completion
+        c.page_copy_per_kb * dbytes_tx / 1024 + dtx * (
+            c.doorbell + c.completion_msi) + c.dma_per_page * tx_pages
+        # upcalls: DMA (1 page each) + completion + copy
+        + drx * (c.dma_per_page + c.completion_msi)
+        + c.page_copy_per_kb * dbytes_rx / 1024
+        # slot re-posts: doorbell each
+        + drepost * c.doorbell)
+    assert dus == pytest.approx(expected, rel=1e-9)
+
+    terms = data_plane_terms(s, bytes_scanned=data.nbytes, n_jobs=2)
+    assert terms["wire_bytes"] == s.bytes_tx + s.bytes_rx
+    assert terms["us_per_job"] == pytest.approx(s.time_us / 2)
+    assert terms["job_frames"] == s.job_frames == 2
+    assert terms["reduction_ratio"] > 0
+
+
+def test_front_door_over_etheron_matches_host_reference():
+    """The acceptance path: an analytics job through the docker-cli
+    front door, over Ether-oN frames, onto a pool node — bit-identical
+    to the host-side reference fold."""
+    pool = _pool(2)
+    ip = pool.alive_nodes()[1]
+    node = pool.nodes[ip]
+    data = np.random.default_rng(4).normal(size=(30, 16)).astype(np.float32)
+    node.fs.write("/data/t.bin", data.tobytes(), SHARABLE_NS, actor="host")
+    node.ingest_extent("t", "/data/t.bin", 16)
+
+    pool.driver.transmit(EthernetFrame(
+        "10.0.0.1", ip, b"POST /containers/create?image=isp-analytics"))
+    cid = json.loads(pool.driver.poll().payload)["Id"]
+    job = AnalyticsJob(extent="t", filter_col=1, filter_op="ge",
+                       threshold=0.0, reduce="count")
+    q = urllib.parse.quote(json.dumps([job.to_dict()]))
+    pool.driver.transmit(EthernetFrame(
+        "10.0.0.1", ip,
+        f"POST /containers/{cid}/start?job={q}".encode()))
+    chunks = []
+    while (fr := pool.driver.poll()) is not None:
+        chunks.append(fr.payload)
+    resp = from_jsonable(json.loads(b"".join(chunks)))
+    block = resp["result"][0]
+    assert np.array_equal(block, _ref(data, 0.0, filter_col=1,
+                                      filter_op="ge"))
+    assert block[0, 0] == (data[:, 1] >= 0.0).sum()
+
+
+# ---------------------------------------------------------------------------
+# offload planner
+# ---------------------------------------------------------------------------
+
+
+def _planner_pool():
+    pool = _pool(2)
+    rng = np.random.default_rng(5)
+    for i, ip in enumerate(pool.alive_nodes()):
+        pool.nodes[ip].extents.put(
+            f"e{i}", rng.normal(size=(60, 16)).astype(np.float32))
+    return pool
+
+
+def test_planner_decision_follows_cost_model():
+    from repro.runtime.offload import OffloadPlanner
+    pool = _planner_pool()
+    job = AnalyticsJob(extent="e0", filter_op="ge")
+    # I/O-bound scan: storage savings dominate -> device
+    io_bound = OffloadPlanner(pool).estimate(job)
+    assert io_bound.choice == "device"
+    # compute-bound operator: the 2.2 GHz frontend penalty dominates ->
+    # host (the Fig-11 flip)
+    cpu_bound = OffloadPlanner(pool, scan_gbs=0.05).estimate(job)
+    assert cpu_bound.choice == "host"
+    assert cpu_bound.node_ip == io_bound.node_ip == pool.locate_extent("e0")
+    # the per-request intensity hint flips a single job under one
+    # planner — the decision is per request, not per deployment
+    planner = OffloadPlanner(pool)
+    heavy = AnalyticsJob(extent="e0", filter_op="ge", scan_gbs=0.05)
+    assert planner.estimate(heavy).choice == "host"
+    assert planner.estimate(job).choice == "device"
+    with pytest.raises(KeyError):
+        OffloadPlanner(pool).estimate(AnalyticsJob(extent="missing"))
+
+
+def test_planner_batches_per_node_and_matches_reference():
+    from repro.runtime.offload import OffloadPlanner
+    pool = _planner_pool()
+    planner = OffloadPlanner(pool)
+    jobs = [AnalyticsJob(extent="e0", filter_op="ge", job_id=0),
+            AnalyticsJob(extent="e1", filter_op="lt", job_id=1),
+            AnalyticsJob(extent="e0", filter_op="eq", job_id=2,
+                         reduce="count")]
+    before = pool.driver.stats.job_frames
+    recs = planner.execute(jobs)
+    # 3 jobs, 2 nodes -> 2 batched JOB frames
+    assert pool.driver.stats.job_frames - before == 2
+    assert [r["job"].job_id for r in recs] == [0, 1, 2]
+    for rec in recs:
+        assert rec["where"] == "device"
+        data = pool.nodes[rec["est"].node_ip].extents.get(rec["job"].extent)
+        ref = _ref(data, rec["job"].threshold,
+                   filter_col=rec["job"].filter_col,
+                   filter_op=rec["job"].filter_op)
+        assert np.array_equal(rec["block"], ref)
+    assert recs[2]["result"] == recs[2]["block"][0, 0]
+
+    # forced host path produces the same blocks bit-for-bit
+    host_recs = planner.execute(jobs, force="host")
+    for dev, host in zip(recs, host_recs):
+        assert host["where"] == "host"
+        assert np.array_equal(dev["block"], host["block"])
+
+
+def test_planner_shares_admission_with_router():
+    """A serving node with no window headroom falls back to the host
+    path instead of stealing the node from the router."""
+    from repro.runtime.offload import OffloadPlanner
+    pool = _planner_pool()
+    ip0 = pool.locate_extent("e0")
+
+    class BusyRouter:
+        def node_headroom(self):
+            return {0: 0, 1: 7}        # shard 0 saturated
+
+    # bind a fake serving frontend: shard 0 = the node holding e0
+    pool._server = object()
+    pool._serve_ips = [ip0]
+    planner = OffloadPlanner(pool, router=BusyRouter())
+    recs = planner.execute([AnalyticsJob(extent="e0", filter_op="ge")])
+    assert recs[0]["where"] == "host-admission"
+    data = pool.nodes[ip0].extents.get("e0")
+    assert np.array_equal(recs[0]["block"],
+                          _ref(data, 0.0, filter_op="ge"))
+    # an explicit force="device" is a pin — admission never reroutes it
+    forced = planner.execute([AnalyticsJob(extent="e0", filter_op="ge")],
+                             force="device")
+    assert forced[0]["where"] == "device"
+    assert np.array_equal(forced[0]["block"], recs[0]["block"])
+
+
+def test_pool_router_node_headroom_surface():
+    from repro.runtime.scheduler import PoolRouter
+
+    class FakeServer:
+        policy = "placed"
+        pages_per_node = 10
+        n_nodes = 2
+
+        def alive_nodes(self):
+            return [0, 1]
+
+        def node_of(self, rid):
+            return 0
+
+        def pages_needed(self, n):
+            return 2
+
+    router = PoolRouter(FakeServer())
+    assert router.node_headroom() == {0: 10, 1: 10}
