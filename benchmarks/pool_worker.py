@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="fused decode-horizon length for the horizon "
+                         "cell (0 disables)")
     args = ap.parse_args()
 
     flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
@@ -88,30 +91,64 @@ def main():
             last = server.add_request(i, p)
         logits.append(np.asarray(last, np.float64).tolist())
 
-    server.decode(args.gen)          # warm every shape bucket + compile
-    for s in list(server.sequence_ids()):
-        server.free_sequence(s)
-    for i, p in enumerate(prompts):  # re-admit for the timed run
-        if pool is not None:
-            node = pool.place_sequence(i, args.prompt_len + args.gen)
-            server.add_request(i, p, node=node)
-        else:
-            server.add_request(i, p)
+    def readmit():
+        for s in list(server.sequence_ids()):
+            server.free_sequence(s)
+        for i, p in enumerate(prompts):
+            if pool is not None:
+                node = pool.place_sequence(i, args.prompt_len + args.gen)
+                server.add_request(i, p, node=node)
+            else:
+                server.add_request(i, p)
 
-    t0 = time.perf_counter()
-    out = server.decode(args.gen)
-    dt = time.perf_counter() - t0
+    reps = 3                          # best-of-N per cell (noise guard)
+
+    def timed(horizon):
+        """Best-of-``reps`` timed decodes from identical re-admitted
+        states; the caller warms the shape buckets first, so jit
+        tracing never contaminates a cell."""
+        best = None
+        for _ in range(reps):
+            readmit()
+            t0 = time.perf_counter()
+            server.decode(args.gen, horizon=horizon)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best = dt
+        return best
+
+    out = server.decode(args.gen)          # warm per-token + canonical out
+    dt = timed(None)
 
     toks = args.requests * args.gen
     rec["tokens_per_s"] = toks / dt
     rec["decode_s"] = dt
     rec["outputs"] = {int(k): [int(t) for t in v] for k, v in out.items()}
+
+    if args.horizon > 0:
+        readmit()
+        out_h = server.decode(args.gen, horizon=args.horizon)   # warm
+        assert out_h == out, "horizon decode diverged from per-token"
+        dt_h = timed(args.horizon)
+        rec["horizon"] = args.horizon
+        rec["tokens_per_s_horizon"] = toks / dt_h
+        rec["decode_s_horizon"] = dt_h
+        rec["horizon_outputs_match"] = True
     rec["prefill_logits"] = logits
     rec["tier"] = {k: v for k, v in server.tier_stats().items()}
     if pool is not None:
         rec["node_tier"] = server.node_tier_stats()
-        rec["control_plane"] = A.control_plane_terms(
-            pool.driver.stats, toks)
+        # control-plane terms over ONE placement round (a place frame
+        # per request), not the cumulative warm-up admissions:
+        # delta-account the driver stats around a single readmit, the
+        # same discipline the isp bench applies to its data plane
+        import copy
+        import types
+        s0 = copy.copy(vars(pool.driver.stats))
+        readmit()
+        delta = types.SimpleNamespace(**{
+            k: v - s0[k] for k, v in vars(pool.driver.stats).items()})
+        rec["control_plane"] = A.control_plane_terms(delta, toks)
     print(json.dumps(rec))
 
 

@@ -18,7 +18,10 @@ import numpy as np
 
 
 def _cell(fn, *args, n=3, **kw):
-    fn(*args, **kw)                      # warmup / compile
+    """Time a callable with one untimed warm-up call first — every
+    timed region in this driver excludes jit tracing/compilation (the
+    discipline all serving/pool/isp cells follow too)."""
+    fn(*args, **kw)                      # warmup / compile (untimed)
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args, **kw)
@@ -220,17 +223,22 @@ def kernel_micro():
 # ---------------------------------------------------------------------------
 
 
-def serve_decode(out_path="BENCH_serve.json"):
+def serve_decode(out_path="BENCH_serve.json", quick=False):
     """Decode-throughput micro-benchmark on the demo config
     (examples/serve_pool.py scale): tokens/s of the single jitted
     decode_step vs the per-layer Python reference loop (the seed
-    schedule), plus the tier telemetry.  Writes ``BENCH_serve.json`` so
-    future PRs can track the serving-perf trajectory."""
+    schedule), plus the fused decode-horizon sweep (H tokens per host
+    interaction, greedy outputs bit-identical to the per-token path)
+    and the tier telemetry.  Asserts conservative perf floors — a
+    decode regression fails the build via the CI bench-smoke step.
+    Writes ``BENCH_serve.json`` so future PRs can track the
+    serving-perf trajectory."""
     import dataclasses
 
     import jax
     import jax.numpy as jnp
     from repro.configs.base import get_arch
+    from repro.core import analytical as A
     from repro.models.api import get_model
     from repro.runtime.serve import PagedServer
 
@@ -241,29 +249,65 @@ def serve_decode(out_path="BENCH_serve.json"):
     model = get_model(cfg, compute_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    n_req, prompt_len, gen = 4, 24, 16
+    n_req, prompt_len, gen = 4, 24, (8 if quick else 16)
+    horizons = [1, 8] if quick else [1, 2, 4, 8]
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+               for _ in range(n_req)]
 
     server = PagedServer(model, params, page_size=8, hbm_pages=32,
                          dtype=jnp.float32)
     # warm the prefill bucket so t_prefill measures prefill, not tracing
-    server.add_request(
-        -1, rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32))
+    server.add_request(-1, prompts[0])
     server.free_sequence(-1)
     t0 = time.perf_counter()
     for i in range(n_req):
-        server.add_request(
-            i, rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32))
+        server.add_request(i, prompts[i])
     t_prefill = time.perf_counter() - t0
 
-    server.decode(gen)        # warm every pow2 shape bucket the run hits
-    t0 = time.perf_counter()
-    server.decode(gen)
-    t_decode = time.perf_counter() - t0
+    def readmit():
+        for s in list(server.sequence_ids()):
+            server.free_sequence(s)
+        for i in range(n_req):
+            server.add_request(i, prompts[i])
+
+    tier = {}
+    reps = 3                          # best-of-N per cell (noise guard)
+
+    def timed_decode(horizon, grab_tier=False):
+        """One untimed warm-up decode (traces every shape bucket the
+        run hits), then best-of-``reps`` timed runs from identical
+        re-admitted states.  ``grab_tier`` snapshots the tier telemetry
+        right after a timed decode, while its working set is still
+        live."""
+        server.decode(gen, horizon=horizon)
+        best, out = None, None
+        for _ in range(reps):
+            readmit()
+            t0 = time.perf_counter()
+            o = server.decode(gen, horizon=horizon)
+            dt = time.perf_counter() - t0
+            if grab_tier and not tier:
+                tier.update(server.tier_stats())
+            if best is None or dt < best:
+                best, out = dt, o
+        readmit()
+        return best, out
+
+    t_decode, out_per_token = timed_decode(None, grab_tier=True)
     toks = n_req * gen
     tok_s = toks / t_decode
-    # snapshot BEFORE the reference runs below touch the page table, so
-    # the recorded telemetry is the serving path's alone
-    tier = dict(server.tier_stats())
+
+    # fused decode horizon: H tokens per host interaction
+    h_tok_s, identical = {}, True
+    for H in horizons:
+        dt, out_h = timed_decode(H)
+        h_tok_s[H] = toks / dt
+        identical &= (out_h == out_per_token)
+    h_max = max(horizons)
+    h_speedup = h_tok_s[h_max] / tok_s
+    host_s, dev_s = A.fit_horizon_overheads(
+        horizons[0], h_tok_s[horizons[0]], h_max, h_tok_s[h_max])
+    modeled = A.horizon_amortized_terms(gen, h_max, host_s, dev_s)
 
     # reference: the seed schedule (per-layer Python loop, eager
     # appends).  Same store state, no commit, so the comparison is
@@ -286,15 +330,37 @@ def serve_decode(out_path="BENCH_serve.json"):
         "decode_tokens_per_s": tok_s,
         "reference_tokens_per_s": ref_tok_s,
         "speedup_vs_reference": speedup,
+        "horizon": {
+            "tokens_per_s": {str(h): h_tok_s[h] for h in horizons},
+            "speedup_vs_per_token": {str(h): h_tok_s[h] / tok_s
+                                     for h in horizons},
+            "h_max_speedup": h_speedup,
+            "outputs_identical": identical,
+            "fitted": {"host_overhead_s": host_s, "device_step_s": dev_s},
+            "modeled": modeled,
+        },
         "tier": tier,
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     _csv("serve_decode", t_decode / gen * 1e6,
-         f"tok_s={tok_s:.1f},speedup={speedup:.1f}x")
+         f"tok_s={tok_s:.1f},speedup={speedup:.1f}x,"
+         f"h{h_max}={h_speedup:.1f}x")
     print(f"  jitted decode: {tok_s:.1f} tok/s | per-layer reference: "
-          f"{ref_tok_s:.1f} tok/s | speedup {speedup:.1f}x "
-          f"(-> {out_path})")
+          f"{ref_tok_s:.1f} tok/s | speedup {speedup:.1f}x")
+    for H in horizons:
+        print(f"  horizon H={H:2d}: {h_tok_s[H]:7.1f} tok/s "
+              f"({h_tok_s[H] / tok_s:.2f}x vs per-token)")
+    print(f"  outputs identical across horizons: {identical} | "
+          f"fitted host overhead {host_s*1e3:.2f} ms/interaction, "
+          f"device {dev_s*1e3:.2f} ms/token | modeled H={h_max} speedup "
+          f"{modeled['modeled_speedup_vs_h1']:.1f}x (-> {out_path})")
+    assert identical, "horizon decode diverged from the per-token path"
+    # conservative floors: fail the build on a decode-perf regression
+    assert speedup >= 3.0, \
+        f"jitted decode {speedup:.2f}x < 3x floor vs seed schedule"
+    assert h_speedup >= 2.0, \
+        f"horizon H={h_max} {h_speedup:.2f}x < 2x floor vs per-token"
 
 
 # ---------------------------------------------------------------------------
@@ -306,12 +372,14 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
     """Pool-serving scaling benchmark: the same workload through the
     1-node ``PagedServer`` and the mesh-sharded ``PoolServer`` on
     1/2/4/8 simulated nodes (forced host devices — each pool size is a
-    subprocess because the device count binds at jax import).  Asserts
-    the pool path matches the single-node reference to 1e-4 on prefill
-    logits and exactly on greedy outputs, then writes ``BENCH_pool.json``
-    with per-pool-size tokens/s.  CPU simulation numbers measure the
-    mechanism (one jitted step per token, LSE-merged partials), not TPU
-    perf."""
+    subprocess because the device count binds at jax import), each on
+    both the per-token path and the fused decode horizon (H=8).
+    Asserts the pool path matches the single-node reference to 1e-4 on
+    prefill logits and exactly on greedy outputs (per-token AND
+    horizon), plus a conservative horizon-speedup floor, then writes
+    ``BENCH_pool.json`` with per-pool-size tokens/s.  CPU simulation
+    numbers measure the mechanism (one jitted step per token,
+    LSE-merged partials), not TPU perf."""
     import subprocess
     import sys as _sys
 
@@ -320,7 +388,8 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
     sizes = [1, 2] if quick else [1, 2, 4, 8]
     # the one source of truth for the workload: passed to every worker
     # and recorded in the artifact
-    wl = {"requests": 6, "prompt_len": 24, "gen": 16, "page_size": 8}
+    wl = {"requests": 6, "prompt_len": 24, "gen": 16, "page_size": 8,
+          "horizon": 8}
 
     def run(mode, nodes):
         out = subprocess.run(
@@ -336,6 +405,7 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
     result = {
         "config": dict(wl, sizes=sizes, match_tol=1e-4),
         "single_node_tokens_per_s": ref["tokens_per_s"],
+        "single_node_tokens_per_s_horizon": ref["tokens_per_s_horizon"],
         "pool": {},
     }
     for n in sizes:
@@ -345,24 +415,42 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
         assert diff < 1e-4, f"pool({n}) diverged from 1-node: {diff}"
         assert rec["outputs"] == ref["outputs"], \
             f"pool({n}) greedy outputs diverged"
+        assert rec["horizon_outputs_match"], \
+            f"pool({n}) horizon decode diverged from per-token"
+        h_speed = rec["tokens_per_s_horizon"] / rec["tokens_per_s"]
         result["pool"][str(n)] = {
             "tokens_per_s": rec["tokens_per_s"],
+            "tokens_per_s_horizon": rec["tokens_per_s_horizon"],
+            "horizon_speedup": h_speed,
             "scaling_vs_single": rec["tokens_per_s"] / ref["tokens_per_s"],
+            "scaling_vs_single_horizon":
+                rec["tokens_per_s_horizon"] /
+                ref["tokens_per_s_horizon"],
             "max_abs_logit_diff": diff,
             "control_plane": rec["control_plane"],
             "node_tier": rec["node_tier"],
         }
         _csv(f"pool_serving_{n}", rec["decode_s"] / wl["gen"] * 1e6,
-             f"tok_s={rec['tokens_per_s']:.1f},diff={diff:.2e}")
-        print(f"  {n} node(s): {rec['tokens_per_s']:.1f} tok/s "
-              f"({rec['tokens_per_s'] / ref['tokens_per_s']:.2f}x vs "
-              f"1-node PagedServer) | max |dlogit| {diff:.2e} | "
+             f"tok_s={rec['tokens_per_s']:.1f},"
+             f"h{wl['horizon']}={rec['tokens_per_s_horizon']:.1f},"
+             f"diff={diff:.2e}")
+        print(f"  {n} node(s): {rec['tokens_per_s']:.1f} tok/s per-token | "
+              f"{rec['tokens_per_s_horizon']:.1f} tok/s H={wl['horizon']} "
+              f"({h_speed:.2f}x) | max |dlogit| {diff:.2e} | "
               f"{rec['control_plane']['us_per_token']:.2f} us/token "
               f"control plane")
+        # conservative floors (CI bench-smoke): on multi-node pools the
+        # per-token path pays collectives + dispatch per token, so the
+        # fused horizon must win structurally; the 1-node cell's
+        # per-token path is already cheap (no merge traffic), so only a
+        # catastrophic regression is gated there
+        floor = 1.2 if n >= 2 else 0.8
+        assert h_speed >= floor, \
+            f"pool({n}) horizon speedup {h_speed:.2f}x < {floor}x floor"
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"  outputs match the single-node reference on every pool size "
-          f"(-> {out_path})")
+    print(f"  outputs match the single-node reference on every pool size, "
+          f"per-token and horizon (-> {out_path})")
 
 
 # ---------------------------------------------------------------------------
@@ -383,12 +471,16 @@ def isp_offload(out_path="BENCH_isp.json", quick=False):
     from repro.core import (AnalyticsJob, StoragePool, analytics_blob,
                             from_jsonable)
     from repro.core.analytical import data_plane_terms
+    from repro.core.isp_perf import workload_scan_gbs
     from repro.kernels import ops
     from repro.runtime.offload import OffloadPlanner
 
     # Table-2-shaped workload configs (filter op = the workload's scan
     # flavour: pattern match counting, rocksdb key-range read, TPC-H
-    # filtered aggregate)
+    # filtered aggregate).  Each carries its Table-2 per-byte compute
+    # intensity (``workload_scan_gbs``) so the planner's modeled
+    # host_s/dvirtfw_s differentiate pattern-find from mariadb-tpch4
+    # instead of pricing every scan at the planner default.
     configs = [
         ("pattern-find", "eq", 0.25),
         ("rocksdb-read", "ge", 0.0),
@@ -420,8 +512,10 @@ def isp_offload(out_path="BENCH_isp.json", quick=False):
         # quantize so `eq` matches make sense (token-id-like values)
         data[:, 0] = np.round(data[:, 0] * 2) / 8
         pool.nodes[ip].extents.put(name, data)
+        prog, wname = name.split("-", 1)
         jobs.append(AnalyticsJob(extent=name, filter_col=0, filter_op=op,
-                                 threshold=thresh, job_id=i))
+                                 threshold=thresh, job_id=i,
+                                 scan_gbs=workload_scan_gbs(prog, wname)))
         ips.append(ip)
 
     result = {"config": {"rows": rows, "cols": cols,
@@ -468,7 +562,8 @@ def isp_offload(out_path="BENCH_isp.json", quick=False):
             "bit_identical": identical,
             "modeled": {"host_s": est.host_s, "dvirtfw_s": est.dvirtfw_s,
                         "speedup": est.modeled_speedup,
-                        "choice": est.choice},
+                        "choice": est.choice,
+                        "scan_gbs": job.scan_gbs},
         }
         _csv(f"isp_{name}", t_isp * 1e6,
              f"speedup={speedup:.1f}x,modeled={est.modeled_speedup:.1f}x")
@@ -558,14 +653,15 @@ def main() -> None:
     ap.add_argument("benches", nargs="*", choices=[[]] + list(BENCHES),
                     help="benchmarks to run (default: all)")
     ap.add_argument("--quick", action="store_true",
-                    help="pool: 1/2 nodes instead of 1/2/4/8; "
+                    help="serve: shorter gen + 2 horizons; "
+                         "pool: 1/2 nodes instead of 1/2/4/8; "
                          "isp: 2 small workloads instead of 4 full-size")
     args = ap.parse_args()
     which = args.benches or list(BENCHES)
     print("name,us_per_call,derived")
     for name in which:
         print(f"== {name} " + "=" * (66 - len(name)))
-        if name in ("pool", "isp"):
+        if name in ("serve", "pool", "isp"):
             BENCHES[name](quick=args.quick)
         else:
             BENCHES[name]()

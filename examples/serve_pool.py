@@ -70,11 +70,14 @@ def main():
                         hbm_pages_per_node=16, dtype=jnp.float32)
     pool = StoragePool(N_NODES, heartbeat_timeout=0.0)
     pool.attach_server(server)
-    router = PoolRouter(server, pool, max_active=n_req)
+    # horizon=4: four tokens per host interaction — the router admits,
+    # evicts and polls heartbeats at horizon boundaries while the fused
+    # on-device token loop runs uninterrupted in between
+    router = PoolRouter(server, pool, max_active=n_req, horizon=4)
     t0 = time.monotonic()
     for i, p in enumerate(prompts):
         router.submit(Request(rid=i, prompt=p, max_tokens=gen))
-    # a few steps in, one DockerSSD dies mid-decode
+    # a few horizons in, one DockerSSD dies mid-decode
     router.step()
     router.step()
     victim = server.node_of(0)

@@ -322,6 +322,56 @@ def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
     }
 
 
+def horizon_amortized_terms(n_tokens: int, horizon: int,
+                            host_overhead_s: float,
+                            device_step_s: float) -> Dict[str, float]:
+    """Amortized control-plane model of the fused decode horizon.
+
+    The per-token decode path pays one host interaction per generated
+    token (page-table planning, jit dispatch, the logits/argmax
+    transfer); the fused horizon pays it once per ``horizon`` tokens
+    while the on-device token loop runs uninterrupted.  With
+    ``host_overhead_s`` the cost of one host interaction and
+    ``device_step_s`` the on-device per-token cost, generating
+    ``n_tokens`` costs::
+
+        ceil(n_tokens / horizon) * host_overhead_s
+            + n_tokens * device_step_s
+
+    — the H-fold amortization that turns control-plane cost into noise,
+    the serving-side analogue of batching docker-cli ops into one
+    Ether-oN frame.  The two constants are measurable from any pair of
+    horizon runs (two equations, two unknowns)."""
+    toks = max(int(n_tokens), 1)
+    h = max(int(horizon), 1)
+    interactions = -(-toks // h)
+    total = interactions * host_overhead_s + toks * device_step_s
+    per_token_h1 = host_overhead_s + device_step_s
+    return {
+        "horizon": float(h),
+        "host_interactions": float(interactions),
+        "interactions_per_token": interactions / toks,
+        "host_s_per_token": interactions * host_overhead_s / toks,
+        "modeled_tokens_per_s": toks / total,
+        "modeled_speedup_vs_h1": per_token_h1 * toks / total,
+    }
+
+
+def fit_horizon_overheads(h_a: int, tok_s_a: float, h_b: int,
+                          tok_s_b: float) -> Tuple[float, float]:
+    """Solve (host_overhead_s, device_step_s) from two measured horizon
+    runs: per-token time t(H) = host_overhead_s / H + device_step_s."""
+    if h_a == h_b:
+        raise ValueError("need two distinct horizons to fit")
+    ta, tb = 1.0 / tok_s_a, 1.0 / tok_s_b
+    host = max((ta - tb) / (1.0 / h_a - 1.0 / h_b), 0.0)
+    # derive dev from the CLAMPED host so the pair stays consistent
+    # with the measurements even when noise inverts the two cells
+    # (host clamps to 0 -> dev falls back to the faster measured rate)
+    dev = min(max(ta - host / h_a, 0.0), min(ta, tb))
+    return host, dev
+
+
 def data_plane_terms(ether_stats, bytes_scanned: int,
                      n_jobs: int) -> Dict[str, float]:
     """Traffic terms for the analytics data plane (ISP job offload).

@@ -170,6 +170,32 @@ def total(w: Workload, model: str, c: IspCosts = IspCosts()) -> float:
     return sum(components(w, model, c).values())
 
 
+def workload_scan_gbs(program: str, name: str, c: IspCosts = IspCosts(),
+                      *, scale: float = 8.0) -> float:
+    """Per-byte compute intensity of a Table-2 workload, expressed as
+    the effective host scan rate (GB/s) of its operator.
+
+    Table 2 fixes the *relative* intensity: bytes touched divided by
+    the Compute component of the decomposed host runtime
+    (:func:`host_components`) — pattern matching burns more cycles per
+    byte than TPC-H's semi-join counting.  The absolute scale belongs
+    to the operator implementation, not the platform (the planner's
+    ``scan_gbs`` default), so the relative intensity is normalized by
+    the geometric mean across all Table-2 workloads and multiplied by
+    ``scale``.  This is what threads into ``AnalyticsJob.scan_gbs`` so
+    the :class:`~repro.runtime.offload.OffloadPlanner`'s modeled
+    ``host_s``/``dvirtfw_s`` differentiate workloads instead of pricing
+    every scan identically."""
+    import numpy as np
+    w = next((w for w in WORKLOADS
+              if w.program == program and w.name == name), None)
+    if w is None:
+        raise KeyError(f"no Table-2 workload {program}-{name}")
+    intensity = lambda w: w.io_size_gb / host_components(w, c)["Compute"]
+    ref = float(np.exp(np.mean([np.log(intensity(x)) for x in WORKLOADS])))
+    return scale * intensity(w) / ref
+
+
 def evaluate_all(c: IspCosts = IspCosts()):
     """Fig 11 data: components for every model x workload."""
     return {f"{w.program}-{w.name}": {m: components(w, m, c) for m in MODELS}

@@ -328,6 +328,41 @@ class PageTableManager:
     def commit_append(self, seq_id: int, n: int = 1):
         self._lengths[seq_id] += n
 
+    # -- horizon reservation (fused multi-token decode) ----------------------
+
+    def reserve_horizon(self, seq_id: int, horizon: int) -> List[int]:
+        """Pin + return the page-table row for appending up to ``horizon``
+        tokens on device: every page covering positions
+        [0, length + horizon) resident and pinned, in logical order.
+
+        The fused decode loop advances page slots *on device* against
+        this reservation — the host is not consulted between the
+        horizon's steps.  Reserved-but-unused pages (a sequence that hit
+        EOS or its budget mid-horizon) are rolled back by
+        :meth:`commit_horizon`; they hold no data, so the rollback is a
+        pure free-list return."""
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
+        return self.ensure_resident(seq_id, pin=True,
+                                    n_tokens=self._lengths[seq_id] + horizon)
+
+    def commit_horizon(self, seq_id: int, n_committed: int) -> int:
+        """Commit ``n_committed`` appended tokens and roll back the rest
+        of the horizon reservation: reserved pages wholly past the new
+        length return to their shard's free list.  Returns the number of
+        pages rolled back."""
+        self._lengths[seq_id] += n_committed
+        used = self.pages_needed(self._lengths[seq_id])
+        rolled = 0
+        for lkey in [k for k in self._resident
+                     if k[0] == seq_id and k[1] >= used]:
+            phys = self._resident.pop(lkey)
+            self._free[self.shard_of_phys(phys)].append(phys)
+            self._pinned.discard(lkey)
+            self._prefetched.discard(lkey)
+            rolled += 1
+        return rolled
+
     def unpin_all(self):
         self._pinned.clear()
 

@@ -7,14 +7,17 @@ survivors into a tiny aggregate — only the aggregate crosses the wire.
 TPU adaptation: analytics extents live as stacked pages
 ``[n_pages, page_rows, n_cols]`` in HBM ("flash",
 core.extent_store.ExtentStore); a per-extent page table arrives via
-scalar prefetch so each grid step DMAs exactly one page HBM->VMEM and
-folds it into VMEM accumulators — compute moves to the data, the data
-never moves to the host.
+scalar prefetch and the kernel streams exactly the extent's pages
+HBM->VMEM — compute moves to the data, the data never moves to the
+host.
 
-Grid: (pages_per_extent,), sequential, so the count/sum/min/max
-accumulators persist in VMEM scratch across pages.  Pages whose start
-row is past the extent's row count are skipped entirely (``pl.when``),
-so a pow2-padded page table costs no compute.
+**Double-buffered pipeline** (the paper's Virtual-FW prefetch): the
+pages stay in HBM (``memory_space=ANY``) and the kernel drives its own
+async page copies into a two-slot VMEM buffer — while page *i* is being
+reduced, the DMA for page *i+1* is already in flight, so data movement
+overlaps compute instead of serializing in front of it.  The loop runs
+only over the extent's *valid* pages (``ceil(n_rows / page_rows)``);
+pow2 table padding costs neither DMA nor compute.
 
 The aggregate layout (``REDUCE_ROWS`` x n_cols, float32):
 
@@ -24,10 +27,11 @@ The aggregate layout (``REDUCE_ROWS`` x n_cols, float32):
   row 3  per-column max over passing rows (-inf when none pass)
   4..7   zero padding (keeps the output tile-aligned on TPU)
 
-Accumulation is page-sequential in float32 — ``kernels.ref.
-scan_filter_reduce_ref`` folds pages in the identical order with the
-identical ops, so the host reference path is bit-identical to the
-in-storage path (the acceptance contract for offload correctness).
+Accumulation is page-sequential in float32 — the pipeline changes only
+*when bytes move*, never the fold order or its ops, so ``kernels.ref.
+scan_filter_reduce_ref`` (which folds pages in the identical order)
+remains bit-identical to the in-storage path (the acceptance contract
+for offload correctness).
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -47,6 +52,8 @@ POS_INF = 1e30
 FILTER_OPS = ("all", "ge", "lt", "eq", "ne")
 #: rows of the aggregate output block (see layout above)
 REDUCE_ROWS = 8
+#: VMEM page slots of the DMA pipeline (2 = classic double buffering)
+N_BUFFERS = 2
 
 
 def _predicate(key, threshold, op: str):
@@ -64,21 +71,41 @@ def _predicate(key, threshold, op: str):
 
 
 def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
-                 cnt_ref, sum_ref, min_ref, max_ref, *, page_rows: int,
-                 n_pages: int, filter_col: int, filter_op: str):
-    pi = pl.program_id(0)
+                 buf_ref, sem_ref, cnt_ref, sum_ref, min_ref, max_ref, *,
+                 page_rows: int, n_pages: int, filter_col: int,
+                 filter_op: str):
     n_rows = nrows_ref[0]
+    # valid pages are a prefix of the (pow2-padded) page table; padded
+    # entries are never copied nor folded
+    n_valid = jnp.minimum(jnp.maximum((n_rows + page_rows - 1) // page_rows,
+                                      1), n_pages)
 
-    @pl.when(pi == 0)
-    def _init():
-        cnt_ref[...] = jnp.zeros_like(cnt_ref)
-        sum_ref[...] = jnp.zeros_like(sum_ref)
-        min_ref[...] = jnp.full_like(min_ref, POS_INF)
-        max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+    cnt_ref[...] = jnp.zeros_like(cnt_ref)
+    sum_ref[...] = jnp.zeros_like(sum_ref)
+    min_ref[...] = jnp.full_like(min_ref, POS_INF)
+    max_ref[...] = jnp.full_like(max_ref, NEG_INF)
 
-    @pl.when(pi * page_rows < n_rows)
-    def _body():
-        block = pages_ref[0].astype(jnp.float32)          # [page_rows, C]
+    def page_dma(slot, idx):
+        # one flash page HBM -> VMEM slot, physical id from the
+        # scalar-prefetched page table
+        return pltpu.make_async_copy(pages_ref.at[pt_ref[idx]],
+                                     buf_ref.at[slot], sem_ref.at[slot])
+
+    # prime the pipeline: page 0's copy starts before any compute
+    page_dma(0, 0).start()
+
+    def body(pi, _):
+        slot = lax.rem(pi, N_BUFFERS)
+        nxt = lax.rem(pi + 1, N_BUFFERS)
+
+        # Virtual-FW prefetch: next page's DMA departs while this page
+        # is still being reduced
+        @pl.when(pi + 1 < n_valid)
+        def _prefetch():
+            page_dma(nxt, pi + 1).start()
+
+        page_dma(slot, pi).wait()
+        block = buf_ref[slot].astype(jnp.float32)         # [page_rows, C]
         pos = pi * page_rows + jax.lax.broadcasted_iota(
             jnp.int32, (page_rows, 1), 0)
         key = block[:, filter_col:filter_col + 1]         # [page_rows, 1]
@@ -90,14 +117,15 @@ def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
             min_ref[0, :], jnp.min(jnp.where(mask, block, POS_INF), axis=0))
         max_ref[0, :] = jnp.maximum(
             max_ref[0, :], jnp.max(jnp.where(mask, block, NEG_INF), axis=0))
+        return ()
 
-    @pl.when(pi == n_pages - 1)
-    def _finish():
-        o_ref[...] = jnp.zeros_like(o_ref)
-        o_ref[0, :] = jnp.broadcast_to(cnt_ref[0, 0], o_ref[0, :].shape)
-        o_ref[1, :] = sum_ref[0, :]
-        o_ref[2, :] = min_ref[0, :]
-        o_ref[3, :] = max_ref[0, :]
+    lax.fori_loop(0, n_valid, body, ())
+
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[0, :] = jnp.broadcast_to(cnt_ref[0, 0], o_ref[0, :].shape)
+    o_ref[1, :] = sum_ref[0, :]
+    o_ref[2, :] = min_ref[0, :]
+    o_ref[3, :] = max_ref[0, :]
 
 
 def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
@@ -105,9 +133,10 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
                        interpret: bool = False):
     """Filtered aggregate over an extent's flash-resident pages.
 
-    pages: [n_phys, page_rows, n_cols] (the whole ExtentStore pool);
+    pages: [n_phys, page_rows, n_cols] (the whole ExtentStore pool —
+    it stays in HBM; the kernel DMAs one page at a time);
     page_table: [pps] int32 physical page ids of this extent (pow2-pad
-    with any valid id — padded pages past ``n_rows`` are skipped);
+    with any valid id — padded pages past ``n_rows`` cost nothing);
     n_rows: [1] int32 valid rows; threshold: [1] f32 filter operand.
     ``filter_col``/``filter_op`` are static (see FILTER_OPS).
     Returns [REDUCE_ROWS, n_cols] float32 (layout in the module doc).
@@ -126,15 +155,17 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
                                filter_op=filter_op)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(pps,),
+        grid=(1,),
         in_specs=[
-            # physical page id comes from the prefetched page table
-            pl.BlockSpec((1, page_rows, n_cols),
-                         lambda pi, pt, nr, th: (pt[pi], 0, 0)),
+            # the page pool stays in HBM; the kernel's own DMA pipeline
+            # pulls pages into the double buffer
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=pl.BlockSpec((REDUCE_ROWS, n_cols),
                                lambda pi, pt, nr, th: (0, 0)),
         scratch_shapes=[
+            pltpu.VMEM((N_BUFFERS, page_rows, n_cols), pages.dtype),
+            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
             pltpu.VMEM((1, 1), jnp.float32),          # count
             pltpu.VMEM((1, n_cols), jnp.float32),     # sum
             pltpu.VMEM((1, n_cols), jnp.float32),     # min

@@ -84,14 +84,9 @@ def _pow2_pad_table(page_table):
                                              "interpret"))
 def _scan_reduce_jit(pages, page_table, n_rows, threshold, filter_col,
                      filter_op, interpret):
-    if interpret:
-        # the interpret emulation carries every input buffer through
-        # each grid step, so step cost tracks the whole pool's size;
-        # compact the pool to this extent's pages first (one gather,
-        # bit-identical).  On TPU the kernel indexes the full pool
-        # directly — no copy — so compaction would only waste HBM.
-        pages = jnp.take(pages, page_table, axis=0)
-        page_table = jnp.arange(page_table.shape[0], dtype=jnp.int32)
+    # the double-buffered kernel DMAs exactly the extent's valid pages
+    # out of the (HBM-resident) pool — no interpret-mode compaction
+    # gather is needed anymore, and padded table entries cost nothing
     return _scan_reduce(pages, page_table, n_rows, threshold,
                         filter_col=filter_col, filter_op=filter_op,
                         interpret=interpret)
@@ -100,8 +95,9 @@ def _scan_reduce_jit(pages, page_table, n_rows, threshold, filter_col,
 def scan_filter_reduce(pages, page_table, n_rows, threshold=0.0, *,
                        filter_col: int = 0, filter_op: str = "all",
                        interpret: bool | None = None):
-    """In-storage filtered aggregate over extent pages (jitted, with the
-    page table padded to a pow2 bucket to bound recompiles).
+    """In-storage filtered aggregate over extent pages (jitted,
+    double-buffered page pipeline, with the page table padded to a pow2
+    bucket to bound recompiles).
 
     pages: [n_phys, page_rows, n_cols]; page_table: [pps] int32;
     n_rows/threshold: python scalars or [1] arrays.

@@ -51,6 +51,10 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--hbm-pages", type=int, default=32,
                     help="HBM window pages (per node with --pool)")
+    ap.add_argument("--horizon", type=int, default=1,
+                    help="fused decode-horizon length: tokens generated "
+                         "per host interaction (--paged / --pool; 1 = "
+                         "classic per-token scheduling)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -76,7 +80,8 @@ def main(argv=None):
                             hbm_pages_per_node=args.hbm_pages)
         pool = StoragePool(n)
         pool.attach_server(server)
-        router = PoolRouter(server, pool, max_active=args.requests)
+        router = PoolRouter(server, pool, max_active=args.requests,
+                            horizon=args.horizon)
         for i in range(args.requests):
             router.submit(Request(rid=i, prompt=prompts[i],
                                   max_tokens=args.gen))
@@ -94,7 +99,9 @@ def main(argv=None):
                              hbm_pages=args.hbm_pages)
         for i in range(args.requests):
             server.add_request(i, prompts[i])
-        out = server.decode(args.gen)
+        out = server.decode(args.gen,
+                            horizon=args.horizon if args.horizon > 1
+                            else None)
         toks = sum(len(v) for v in out.values())
         print("tier stats:", server.tier_stats())
     else:

@@ -32,7 +32,6 @@ the split DESIGN.md §Pool serving documents.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional
 
 import jax
@@ -45,67 +44,13 @@ from repro.core.kv_tier import PageStore, PageTableManager
 from repro.jax_compat import shard_map_unchecked
 from repro.models import layers as L
 from repro.runtime import sharding as shd
-from repro.runtime.serve import PagedServer
+# the partial-softmax device contract lives with the serving bodies now
+# (the single-node fused horizon shares it); re-exported here for the
+# pool-facing name
+from repro.runtime.serve import (NEG_INF, PagedServer,  # noqa: F401
+                                 combine_partials, paged_attention_partial)
 
-NEG_INF = -1e30
 POOL_AXIS = "model"
-
-
-def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
-                            lengths):
-    """Shard-local paged decode attention returning softmax partials.
-
-    The per-node half of distributed paged attention: score only the
-    pages this node owns, fold them with an online softmax, and hand
-    back the un-normalized state so the caller can merge nodes exactly
-    (``combine_partials``).  On TPU each node would run the Pallas
-    ``paged_attention`` kernel for this piece; the partial form is the
-    distributed contract either way.
-
-    q: [B, H, D]; k_pages/v_pages: *local* [P_node, page, Hkv, D];
-    local_table: [B, pps] local physical ids (garbage where not owned);
-    col_owned: [B, pps] bool — does this node own that logical page;
-    lengths: [B] post-append sequence lengths.
-    Returns (acc [B, H, D] f32, m [B, H] f32, l [B, H] f32).
-    """
-    b, h, d = q.shape
-    _, page, hkv, _ = k_pages.shape
-    pps = local_table.shape[1]
-    g = h // hkv
-    sm_scale = 1.0 / math.sqrt(d)
-
-    safe = jnp.where(col_owned, local_table, 0)
-    k = k_pages[safe].astype(jnp.float32)        # [B, pps, page, Hkv, D]
-    v = v_pages[safe].astype(jnp.float32)
-    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bptkd->bkgpt", qg, k) * sm_scale
-    pos = (jnp.arange(pps, dtype=jnp.int32)[:, None] * page +
-           jnp.arange(page, dtype=jnp.int32)[None, :])     # [pps, page]
-    mask = (pos[None] < lengths[:, None, None]) & col_owned[:, :, None]
-    s = jnp.where(mask[:, None, None], s, NEG_INF)
-    sf = s.reshape(b, hkv, g, pps * page)
-    mf = mask.reshape(b, 1, 1, pps * page)
-    m = jnp.max(sf, axis=-1)                               # [b, hkv, g]
-    # all-masked rows have m == NEG_INF; exp(NEG_INF - NEG_INF) == 1, so
-    # the mask (not the score) must zero those probabilities
-    p = jnp.where(mf, jnp.exp(sf - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
-    acc = jnp.einsum("bkgt,btkd->bkgd", p,
-                     v.reshape(b, pps * page, hkv, d))
-    return acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
-
-
-def combine_partials(acc, m, l, axis_name: str):
-    """Exact cross-node merge of online-softmax partials: rebase every
-    node's accumulator to the global max and sum.  Nodes owning nothing
-    contribute (0, NEG_INF, 0) and vanish; a fully-masked (padding) slot
-    ends with l == 0 and yields 0, matching the Pallas kernel's
-    ``acc / max(l, 1e-30)`` convention."""
-    m_glob = lax.pmax(m, axis_name)
-    scale = jnp.exp(m - m_glob)
-    l_glob = lax.psum(l * scale, axis_name)
-    acc_glob = lax.psum(acc * scale[..., None], axis_name)
-    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
 
 
 class PoolServer(PagedServer):
@@ -157,6 +102,9 @@ class PoolServer(PagedServer):
         self._sharded_prefill = shard_map_unchecked(
             self._prefill_body, mesh=mesh, in_specs=in_specs,
             out_specs=out_specs)
+        # shard_map'd horizon bodies, one per (static) horizon length —
+        # bounded by the pow2 bucketing in ``horizon_batch``
+        self._sharded_horizons: Dict[int, object] = {}
 
     # -- store / table factories ---------------------------------------------
 
@@ -294,6 +242,58 @@ class PoolServer(PagedServer):
         logits = L.unembed(params["embed"], params.get("lm_head"), h,
                            cfg.tie_embeddings)[:, 0]
         return logits, k_pages, v_pages
+
+    # -- fused decode horizon (sharded) ---------------------------------------
+
+    def decode_horizon_step(self, params, k_pages, v_pages, page_table,
+                            lengths, tokens, budget, eos_id, *,
+                            horizon: int):
+        fn = self._sharded_horizons.get(horizon)
+        if fn is None:
+            in_specs, out_specs = shd.pool_horizon_specs()
+            fn = shard_map_unchecked(
+                lambda *a: self._horizon_body(*a, horizon=horizon),
+                mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
+            self._sharded_horizons[horizon] = fn
+        return fn(params, k_pages, v_pages, page_table, lengths, tokens,
+                  budget, eos_id)
+
+    def _horizon_body(self, params, k_pages, v_pages, page_table, lengths,
+                      tokens, budget, eos_id, *, horizon: int):
+        """Per-node slice of one fused decode horizon.
+
+        The shared ``_fused_horizon_scan`` scaffold with the pool's two
+        hooks plugged in: the append target rebases physical ids into
+        this node's window (non-owned appends drop via the sentinel),
+        and attention runs ownership-masked partials merged across the
+        pool axis per layer.  The merged logits' argmax — identical on
+        every node — drives the next step, so control (lengths,
+        budgets, EOS) stays replicated arithmetic: H tokens cost zero
+        host interactions and exactly 3 collectives per layer per
+        token, same as the per-token path.
+        """
+        n_local = k_pages.shape[1]
+        base = lax.axis_index(POOL_AXIS) * n_local
+        # ownership of every logical page in the horizon's reservation
+        # is fixed for the whole horizon (the table covers the
+        # pre-reserved extent; only the append *target* advances)
+        local_table = page_table - base
+        col_owned = (local_table >= 0) & (local_table < n_local)
+
+        def append_target(phys, valid):
+            local_new = phys - base
+            owned = valid & (local_new >= 0) & (local_new < n_local)
+            return jnp.where(owned, local_new, n_local)
+
+        def attention(q, kp, vp, new_lengths):
+            acc, m, l = paged_attention_partial(q, kp, vp, local_table,
+                                                col_owned, new_lengths)
+            return combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
+
+        return self._fused_horizon_scan(
+            params, k_pages, v_pages, page_table, lengths, tokens,
+            budget, eos_id, horizon=horizon,
+            append_target=append_target, attention=attention)
 
     def _prefill_body(self, params, k_pages, v_pages, tokens, phys, length):
         """Per-node slice of the one-shot prefill: the layer stack runs

@@ -56,11 +56,24 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Iteration-level scheduler for a PagedServer."""
+    """Iteration-level scheduler for a PagedServer.
 
-    def __init__(self, server, *, max_active: int = 8):
+    ``horizon=1`` (default) schedules per token: admit, one jitted
+    decode step, retire.  ``horizon=H`` schedules on *horizon
+    boundaries*: each iteration runs one fused H-token device loop
+    (``PagedServer.decode(horizon=H)``) and joins/evicts between
+    horizons.  Per-request EOS and ``max_tokens`` are enforced on
+    device via budgets (plus host-side truncation when active requests
+    disagree on ``eos_id``), so greedy outputs are token-for-token
+    identical to the per-token schedule.
+    """
+
+    def __init__(self, server, *, max_active: int = 8, horizon: int = 1):
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
         self.server = server
         self.max_active = max_active
+        self.horizon = horizon
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
@@ -112,19 +125,47 @@ class ContinuousBatcher:
     # -- the serving loop -----------------------------------------------------
 
     def step(self) -> int:
-        """One scheduler iteration: admit, decode the active set once,
-        retire finished sequences.  Returns tokens produced."""
+        """One scheduler iteration: admit, decode the active set once
+        (one token, or one fused horizon), retire finished sequences.
+        Returns tokens produced."""
         self._admit()
         # retire anything already done from its prefill token
         self._retire()
         if not self.active:
             return 0
-        out = self.server.decode(1, seqs=list(self.active))
+        if self.horizon <= 1:
+            out = self.server.decode(1, seqs=list(self.active))
+            n = 0
+            for rid, toks in out.items():
+                self.active[rid].output.extend(toks)
+                n += len(toks)
+        else:
+            n = self._horizon_step()
+        self._retire()
+        return n
+
+    def _horizon_step(self) -> int:
+        """Decode one fused horizon across the active set.  The device
+        stops each sequence at its own budget (remaining max_tokens,
+        capped by the horizon) and — when every active request agrees
+        on one ``eos_id`` — at EOS; with mixed eos ids the surplus
+        tokens are truncated host-side, so outputs match the per-token
+        schedule either way."""
+        budgets = {rid: req.max_tokens - len(req.output)
+                   for rid, req in self.active.items()}
+        h = min(self.horizon, max(budgets.values()))
+        eos_ids = {req.eos_id for req in self.active.values()}
+        eos = eos_ids.pop() if len(eos_ids) == 1 else None
+        out = self.server.decode(h, seqs=list(self.active), horizon=h,
+                                 eos_id=eos, budgets=budgets)
         n = 0
         for rid, toks in out.items():
-            self.active[rid].output.extend(toks)
-            n += len(toks)
-        self._retire()
+            req = self.active[rid]
+            for t in toks:
+                if req.done:          # mixed-eos truncation
+                    break
+                req.output.append(t)
+                n += 1
         return n
 
     def _retire(self):
@@ -180,8 +221,9 @@ class PoolRouter(ContinuousBatcher):
         serving).
     """
 
-    def __init__(self, server, pool=None, *, max_active: int = 8):
-        super().__init__(server, max_active=max_active)
+    def __init__(self, server, pool=None, *, max_active: int = 8,
+                 horizon: int = 1):
+        super().__init__(server, max_active=max_active, horizon=horizon)
         self.pool = pool
         self.requeues = 0
         self._target_node: Optional[int] = None

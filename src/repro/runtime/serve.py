@@ -19,9 +19,20 @@ Two paths:
     table assembly) runs *between* jitted steps — the ISP-container
     split of the case study: policy at the host, data-path on the
     device.
+
+The **fused decode horizon** (``decode(horizon=H)``) extends the same
+split H tokens at a time: one jitted ``lax.scan`` over H decode steps
+where the on-device argmax feeds the next step, page slots advance
+against a horizon's worth of pre-reserved pages
+(``PageTableManager.reserve_horizon``), per-sequence EOS/budget masks
+stop finished sequences mid-horizon, and exactly one [H, B] token
+transfer crosses the boundary per horizon — greedy outputs are
+token-for-token identical to the per-token path (DESIGN.md §Decode
+horizon).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -35,6 +46,75 @@ from repro.kernels import ops
 from repro.kernels.paged_attention import paged_attention as _paged_inner
 from repro.models import layers as L
 from repro.runtime import sharding as shd
+
+NEG_INF = -1e30
+
+
+def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
+                            lengths):
+    """Paged decode attention returning online-softmax partials.
+
+    The device contract of distributed paged attention (the pool hot
+    path): score only the pages this node owns, fold them with an
+    online softmax, and hand back the un-normalized state ``(acc, m,
+    l)`` so the caller can merge nodes exactly (``combine_partials``)
+    — or, on one node, normalize locally (the partial form *is* the
+    full softmax when every page is owned).  On TPU the Pallas
+    ``paged_attention`` kernel computes this piece per layer slice; the
+    partial form is the distributed contract either way.
+
+    q: [B, H, D]; k_pages/v_pages: *local* [P_node, page, Hkv, D];
+    local_table: [B, pps] local physical ids (garbage where not owned);
+    col_owned: [B, pps] bool — does this node own that logical page;
+    lengths: [B] post-append sequence lengths.
+    Returns (acc [B, H, D] f32, m [B, H] f32, l [B, H] f32).
+    """
+    b, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    pps = local_table.shape[1]
+    g = h // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    safe = jnp.where(col_owned, local_table, 0)
+    k = k_pages[safe].astype(jnp.float32)        # [B, pps, page, Hkv, D]
+    v = v_pages[safe].astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bptkd->bkgpt", qg, k) * sm_scale
+    pos = (jnp.arange(pps, dtype=jnp.int32)[:, None] * page +
+           jnp.arange(page, dtype=jnp.int32)[None, :])     # [pps, page]
+    mask = (pos[None] < lengths[:, None, None]) & col_owned[:, :, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    sf = s.reshape(b, hkv, g, pps * page)
+    mf = mask.reshape(b, 1, 1, pps * page)
+    m = jnp.max(sf, axis=-1)                               # [b, hkv, g]
+    # all-masked rows have m == NEG_INF; exp(NEG_INF - NEG_INF) == 1, so
+    # the mask (not the score) must zero those probabilities
+    p = jnp.where(mf, jnp.exp(sf - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p,
+                     v.reshape(b, pps * page, hkv, d))
+    return acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
+
+
+def combine_partials(acc, m, l, axis_name: str):
+    """Exact cross-node merge of online-softmax partials: rebase every
+    node's accumulator to the global max and sum.  Nodes owning nothing
+    contribute (0, NEG_INF, 0) and vanish; a fully-masked (padding) slot
+    ends with l == 0 and yields 0, matching the Pallas kernel's
+    ``acc / max(l, 1e-30)`` convention."""
+    m_glob = lax.pmax(m, axis_name)
+    scale = jnp.exp(m - m_glob)
+    l_glob = lax.psum(l * scale, axis_name)
+    acc_glob = lax.psum(acc * scale[..., None], axis_name)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+def normalize_partials(acc, m, l):
+    """Single-node closure of the partial contract: with every page
+    owned locally, normalizing the accumulator *is* the full softmax
+    (same ``acc / max(l, 1e-30)`` convention as the Pallas kernel)."""
+    del m  # the local max cancels in acc / l
+    return acc / jnp.maximum(l, 1e-30)[..., None]
 
 
 def make_serving_fns(model, mesh=None):
@@ -59,6 +139,14 @@ def make_serving_fns(model, mesh=None):
 def _pow2(n: int) -> int:
     """Smallest power of two >= n (shape bucketing to bound retraces)."""
     return 1 << max(0, n - 1).bit_length()
+
+
+def _pow2_floor(n: int) -> int:
+    """Largest power of two <= n (horizon bucketing: a tail horizon
+    runs as pow2 chunks — e.g. 5 -> 4 then 1 — so the compiled-program
+    set stays O(log) *without* masked surplus steps burning full model
+    forwards)."""
+    return 1 << (max(n, 1).bit_length() - 1)
 
 
 class PagedServer:
@@ -95,6 +183,9 @@ class PagedServer:
         donate = (1, 2) if not self._interpret else ()
         self._decode_jit = jax.jit(self.decode_step, donate_argnums=donate)
         self._prefill_jit = jax.jit(self.prefill_step, donate_argnums=donate)
+        self._horizon_jit = jax.jit(self.decode_horizon_step,
+                                    static_argnames=("horizon",),
+                                    donate_argnums=donate)
 
     def _new_store(self) -> PageStore:
         """The store the config prescribes (used at init and when a failed
@@ -224,6 +315,125 @@ class PagedServer:
         logits = L.unembed(params["embed"], params.get("lm_head"), h,
                            cfg.tie_embeddings)[:, 0]
         return logits, k_pages, v_pages
+
+    # -- fused decode horizon -------------------------------------------------
+
+    def _horizon_attention(self, q, kp, vp, page_table, lengths):
+        """Per-step decode attention inside the fused horizon loop.
+
+        Uses the LSE-partial formulation — the same device contract the
+        pool hot path runs — normalized locally (exactly the full
+        softmax when every page is owned).  On TPU the Pallas
+        ``paged_attention`` kernel takes this seam per layer slice; in
+        CPU interpret mode the jnp partial path is the realistic fast
+        path (the Pallas emulation's per-call cost would otherwise
+        dominate the very overhead the horizon amortizes).
+        q: [B, H, D] f32; returns [B, H, D]."""
+        if not self._interpret:
+            return _paged_inner(q, kp, vp, page_table, lengths,
+                                interpret=False)
+        owned = jnp.ones(page_table.shape, bool)
+        acc, m, l = paged_attention_partial(q, kp, vp, page_table, owned,
+                                            lengths)
+        return normalize_partials(acc, m, l).astype(q.dtype)
+
+    def _fused_horizon_scan(self, params, k_pages, v_pages, page_table,
+                            lengths, tokens, budget, eos_id, *,
+                            horizon: int, append_target, attention):
+        """The fused-step scaffold shared by the single-node and pool
+        horizon bodies: one ``lax.scan`` over ``horizon`` decode steps
+        where the on-device argmax feeds the next step, page slots
+        advance against the reservation, and EOS/budget masks stop
+        finished sequences.  The two hooks are the only places the
+        paths differ:
+
+        ``append_target(phys, valid) -> [B]`` maps each sequence's tail
+        physical page to the scatter row (out-of-bounds sentinel drops
+        finished/padding/non-owned appends); ``attention(q, kp, vp,
+        new_lengths) -> [B, H, D]`` closes the paged-attention contract
+        (locally normalized, or ownership-masked + pool-merged).
+        """
+        cfg = self.cfg
+        b = tokens.shape[0]
+
+        def step(carry, _):
+            k_pages, v_pages, lengths, tokens, budget = carry
+            valid = (budget > 0) & (lengths > 0)
+            pos = lengths[:, None]
+            pidx = lengths // self.page
+            offs = lengths % self.page
+            phys = jnp.take_along_axis(page_table, pidx[:, None],
+                                       axis=1)[:, 0]
+            tgt = append_target(phys, valid)
+            new_lengths = lengths + valid.astype(jnp.int32)
+
+            h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
+
+            def body(hh, xs):
+                lp, kp, vp = xs
+                q, k, v = self._attn_inputs(lp, hh, pos)
+                kp = kp.at[tgt, offs].set(k[:, 0].astype(kp.dtype),
+                                          mode="drop")
+                vp = vp.at[tgt, offs].set(v[:, 0].astype(vp.dtype),
+                                          mode="drop")
+                o = attention(q[:, 0].astype(self.dtype), kp, vp,
+                              new_lengths)
+                return (self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)),
+                        (kp, vp))
+
+            h, (k_pages, v_pages) = lax.scan(
+                body, h, (params["layers"], k_pages, v_pages))
+            h = L.apply_norm(params["final_norm"], h, cfg.norm)
+            logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                               cfg.tie_embeddings)[:, 0]
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emitted = jnp.where(valid, nxt, -1)
+            # the token just emitted consumed one budget slot; EOS zeroes
+            # what's left so the next step goes inactive
+            budget = jnp.where(valid & (nxt == eos_id), 0,
+                               budget - valid.astype(jnp.int32))
+            tokens = jnp.where(valid, nxt, tokens)
+            return (k_pages, v_pages, new_lengths, tokens, budget), emitted
+
+        (k_pages, v_pages, lengths, tokens, budget), emitted = lax.scan(
+            step, (k_pages, v_pages, lengths, tokens, budget), None,
+            length=horizon)
+        return emitted, k_pages, v_pages
+
+    def decode_horizon_step(self, params, k_pages, v_pages, page_table,
+                            lengths, tokens, budget, eos_id, *,
+                            horizon: int):
+        """``horizon`` fused decode steps in ONE device program.
+
+        A single ``lax.scan`` over the horizon: each step appends the
+        fed token's K/V against the pre-reserved page table (page-slot
+        advance on device — ``lengths // page`` indexes into the
+        horizon reservation), runs the layer stack, takes the greedy
+        argmax **on device**, and feeds it to the next step.  Per-
+        sequence EOS and token budgets are masked on device too, so a
+        finished sequence stops appending mid-horizon without a host
+        round-trip.  Exactly one token transfer happens per horizon:
+        the stacked [horizon, B] emissions (-1 marks "no token").
+
+        page_table: [B, pps] physical ids covering the *reservation*
+        (``PageTableManager.reserve_horizon``); lengths: [B] committed
+        lengths (0 marks padding slots); tokens: [B] the pending token
+        per sequence; budget: [B] int32 tokens this sequence may still
+        produce (device-side min of max_tokens and the caller's ask);
+        eos_id: [] int32, -1 disables EOS stopping.
+
+        Returns (emitted [horizon, B] int32, k_pages, v_pages).
+        """
+        n_phys = k_pages.shape[1]
+        return self._fused_horizon_scan(
+            params, k_pages, v_pages, page_table, lengths, tokens,
+            budget, eos_id, horizon=horizon,
+            # out-of-bounds sentinel => scatter drops finished/padding
+            append_target=lambda phys, valid:
+                jnp.where(valid, phys, n_phys),
+            attention=lambda q, kp, vp, new_lengths:
+                self._horizon_attention(q, kp, vp, page_table,
+                                        new_lengths))
 
     def prefill_step(self, params, k_pages, v_pages, tokens, phys, length):
         """One-shot prefill: run the whole (page-padded) prompt through
@@ -403,13 +613,106 @@ class PagedServer:
             self.table.unpin_all()
         return logits
 
+    # -- one committed horizon batch ------------------------------------------
+
+    def _plan_horizon(self, seqs: List[int], budgets: Dict[int, int]):
+        """Host-side page management for one fused horizon: reserve + pin
+        every page the horizon can touch (``reserve_horizon``), then
+        build the padded device inputs.  Shapes are bucketed to powers
+        of two, so horizons over 3 and 4 active sequences share one
+        compiled program."""
+        try:
+            rows = [self.table.reserve_horizon(s, budgets[s]) for s in seqs]
+        except Exception:
+            # a failed reservation (e.g. pinned working set overflow on a
+            # later sequence) must not leave earlier sequences' data-less
+            # reserved pages resident: roll every reservation back to the
+            # committed lengths before re-raising
+            for s in seqs:
+                self.table.commit_horizon(s, 0)
+            self.table.unpin_all()
+            raise
+        lengths = [self.table.length(s) for s in seqs]
+        pps = _pow2(max(len(r) for r in rows))
+        b2 = _pow2(len(seqs))
+        table = np.zeros((b2, pps), np.int32)
+        for i, r in enumerate(rows):
+            table[i, :len(r)] = r
+        lens = np.zeros((b2,), np.int32)
+        lens[:len(seqs)] = lengths
+        buds = np.zeros((b2,), np.int32)
+        buds[:len(seqs)] = [budgets[s] for s in seqs]
+        return jnp.asarray(table), jnp.asarray(lens), jnp.asarray(buds)
+
+    def horizon_batch(self, tokens: Dict[int, int],
+                      budgets: Dict[int, int], horizon: int,
+                      eos_id: Optional[int] = None) -> Dict[int, List[int]]:
+        """Run one fused decode horizon over ``tokens`` ({seq: pending
+        token}) and commit the appends.  ``budgets[s]`` caps how many
+        tokens sequence ``s`` may produce (<= horizon); ``eos_id`` stops
+        a sequence on device when it emits that token.  Returns
+        {seq_id: emitted tokens} — one device->host transfer total.
+
+        The traced horizon length is bucketed DOWN to a power of two
+        (the ``decode`` loop covers the rest with further — smaller —
+        pow2 horizons), so mixed tails neither retrace the program nor
+        burn masked full-model steps.
+        """
+        seqs = list(tokens)
+        h_run = _pow2_floor(min(horizon, max(budgets[s] for s in seqs)))
+        page_table, lengths, buds = self._plan_horizon(
+            seqs, {s: min(budgets[s], h_run) for s in seqs})
+        try:
+            toks = np.zeros((lengths.shape[0],), np.int32)
+            toks[:len(seqs)] = [tokens[s] for s in seqs]
+            eos = np.int32(eos_id if eos_id is not None else -1)
+            emitted, k_pages, v_pages = self._horizon_jit(
+                self.params, self.store.k_pages, self.store.v_pages,
+                page_table, lengths, jnp.asarray(toks), buds,
+                jnp.asarray(eos), horizon=h_run)
+            # THE one transfer of the horizon: [h_run, B] int32 tokens
+            emitted = np.asarray(emitted)
+            self.store.adopt(k_pages, v_pages)
+            out = {}
+            for i, s in enumerate(seqs):
+                got = [int(t) for t in emitted[:, i] if t >= 0]
+                out[s] = got
+                # committed appends == emitted tokens (each fused step
+                # feeds one token and emits one); rollback the unused
+                # tail of the reservation
+                self.table.commit_horizon(s, len(got))
+        except Exception:
+            self._recover_store()
+            # store intact (the failure was not a donated-buffer loss):
+            # roll back every surviving sequence's unused reservation so
+            # no data-less pages stay resident
+            for s in seqs:
+                if s in self._seqs:
+                    self.table.commit_horizon(s, 0)
+            raise
+        finally:
+            self.table.unpin_all()
+        return out
+
     # -- decode loop ----------------------------------------------------------
 
     def decode(self, n_tokens: int, greedy: bool = True,
-               seqs: Optional[List[int]] = None) -> Dict[int, list]:
+               seqs: Optional[List[int]] = None, *,
+               horizon: Optional[int] = None,
+               eos_id: Optional[int] = None,
+               budgets: Optional[Dict[int, int]] = None) -> Dict[int, list]:
         """Batched greedy decode across live sequences (or a subset — the
         HBM window only needs to hold the *active* batch's working set;
-        idle sequences spill to the flash tier)."""
+        idle sequences spill to the flash tier).
+
+        ``horizon=None`` is the per-token path: one host interaction
+        (plan, jitted step, argmax transfer) per generated token.
+        ``horizon=H`` runs the fused path: H tokens per host
+        interaction, greedy outputs token-for-token identical.
+        ``budgets``/``eos_id`` stop individual sequences early on both
+        paths (on device inside a fused horizon; host-side between
+        per-token steps); a sequence's entry stops growing once its
+        budget is spent or it emits ``eos_id``."""
         active = self._seqs if seqs is None else seqs
         out = {s: [] for s in active}
         # page-in overlap model: pull any spilled pages of the activating
@@ -418,14 +721,40 @@ class PagedServer:
             self.table.prefetch(s)
         # continue from the tokens pending after prefill
         cur = {s: self._pending.get(s, 0) for s in active}
-        for _ in range(n_tokens):
-            seqs, logits = self.step_batch(cur)
-            # one batched argmax + one device->host transfer per token,
-            # not one per sequence
-            nxt_arr = np.asarray(jnp.argmax(logits, axis=-1))
-            cur = {s: int(nxt_arr[i]) for i, s in enumerate(seqs)}
-            for s in active:
-                out[s].append(cur[s])
+        remaining = {s: min(n_tokens, budgets[s]) if budgets else n_tokens
+                     for s in active}
+        live = [s for s in active if remaining[s] > 0]
+        if horizon is None:
+            # per-token path: eos/budget stopping happens host-side (a
+            # finished sequence leaves the batch and is never fed again
+            # — the same append/commit trajectory as the fused path)
+            while live:
+                seqs, logits = self.step_batch({s: cur[s] for s in live})
+                # one batched argmax + one device->host transfer per
+                # token, not one per sequence
+                nxt_arr = np.asarray(jnp.argmax(logits, axis=-1))
+                for i, s in enumerate(seqs):
+                    cur[s] = int(nxt_arr[i])
+                    out[s].append(cur[s])
+                    remaining[s] -= 1
+                    if eos_id is not None and cur[s] == eos_id:
+                        remaining[s] = 0
+                live = [s for s in live if remaining[s] > 0]
+            self._pending.update(cur)
+            return out
+        while live:
+            got = self.horizon_batch(
+                {s: cur[s] for s in live},
+                {s: remaining[s] for s in live},
+                min(horizon, max(remaining[s] for s in live)), eos_id)
+            for s in live:
+                out[s].extend(got[s])
+                remaining[s] -= len(got[s])
+                if got[s]:
+                    cur[s] = got[s][-1]
+                if eos_id is not None and got[s] and got[s][-1] == eos_id:
+                    remaining[s] = 0          # stopped on device
+            live = [s for s in live if remaining[s] > 0]
         self._pending.update(cur)
         return out
 

@@ -248,6 +248,19 @@ def pool_step_specs():
             (P(), store, store))
 
 
+def pool_horizon_specs():
+    """(in_specs, out_specs) for the shard_mapped fused decode horizon
+    ``(params, k_pages, v_pages, page_table, lengths, tokens, budget,
+    eos_id) -> (emitted, k_pages, v_pages)``.  Same replication story as
+    :func:`pool_step_specs` — only the page windows are split; the
+    control-plane carries (lengths/budgets/tokens) are replicated
+    arithmetic, and the emitted token stack is device-invariant because
+    every node argmaxes the *merged* logits."""
+    store = pool_store_spec()
+    return ((P(), store, store, P(), P(), P(), P(), P()),
+            (P(), store, store))
+
+
 def to_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
