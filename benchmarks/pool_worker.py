@@ -149,6 +149,89 @@ def main():
         delta = types.SimpleNamespace(**{
             k: v - s0[k] for k, v in vars(pool.driver.stats).items()})
         rec["control_plane"] = A.control_plane_terms(delta, toks)
+
+    # -- shared-prefix cell: one system template across every request --
+    # cold = the prefix cache ablated (every prompt token computed,
+    # chunked); warm = the same prompts re-admitted with the cache
+    # seeded by an untimed round.  Outputs must be token-identical cold
+    # vs warm; in pool mode the prefix-aware placement routes every
+    # sharer to the node whose index holds the template.
+    chunk = 2 * args.page_size
+    shared = 3 * args.prompt_len // 4
+    sp_template = rng.integers(0, cfg.vocab_size, shared, dtype=np.int32)
+    sp_prompts = [np.concatenate([sp_template, rng.integers(
+        0, cfg.vocab_size, args.prompt_len - shared, dtype=np.int32)])
+        for _ in range(args.requests)]
+
+    def sp_free():
+        for s in list(server.sequence_ids()):
+            server.free_sequence(s)
+
+    def sp_admit(ps):
+        for i, p in enumerate(ps):
+            if pool is not None:
+                node = pool.place_sequence(
+                    i, args.prompt_len + args.gen, prompt=p)
+                server.add_request(i, p, node=node, chunk=chunk)
+            else:
+                server.add_request(i, p, chunk=chunk)
+
+    def sp_decode():
+        # one sequence at a time: the prefix-aware placement
+        # concentrates the cohort on the owning node, whose window only
+        # has to hold the ACTIVE working set — idle sharers' unshared
+        # pages spill to that node's flash tier and page back, the
+        # shared template pages never move
+        pend = server.pending_tokens()
+        out = {}
+        for i in range(args.requests):
+            out[i] = [pend[i]] + server.decode(args.gen, seqs=[i])[i]
+        return out
+
+    sp_free()
+    server.prefix_cache = False
+    sp_admit(sp_prompts)             # untimed cold-shape bucket warm-up
+    sp_free()
+    t0 = time.perf_counter()
+    sp_admit(sp_prompts)
+    t_cold = time.perf_counter() - t0
+    out_cold = sp_decode()
+    sp_free()
+
+    server.prefix_cache = True
+    sp_admit(sp_prompts)             # untimed: seeds the prefix cache
+    sp_free()
+    sp_admit(sp_prompts)             # untimed warm-shape bucket warm-up
+    sp_free()
+    s_tok0 = server.table.stats.prefix_tokens
+    c_tok0 = server.prefill_tokens_computed
+    t0 = time.perf_counter()
+    sp_admit(sp_prompts)
+    t_warm = time.perf_counter() - t0
+    owner = server.node_of(0) if pool is not None else None
+    saved = server.table.stats.prefix_tokens - s_tok0
+    computed = server.prefill_tokens_computed - c_tok0
+    out_warm = sp_decode()
+    assert out_warm == out_cold, \
+        "warm (shared-prefix) outputs diverged from the cold run"
+    rec["shared_prefix"] = {
+        "shared_fraction": shared / args.prompt_len,
+        "prefill_chunk": chunk,
+        "cold_admission_s": t_cold,
+        "warm_admission_s": t_warm,
+        "warm_speedup": t_cold / t_warm,
+        "prefix_hit_rate": saved / max(saved + computed, 1),
+        "prefill_tokens_per_s": {
+            "cold": args.requests * args.prompt_len / t_cold,
+            "warm_admitted": args.requests * args.prompt_len / t_warm,
+        },
+        "outputs_identical_warm_vs_cold": True,
+    }
+    if pool is not None:
+        rec["shared_prefix"]["owner_node"] = owner
+        rec["shared_prefix"]["node_prefix_hits"] = [
+            ns["prefix_hits"] for ns in server.node_tier_stats()]
+    sp_free()
     print(json.dumps(rec))
 
 

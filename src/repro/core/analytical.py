@@ -357,6 +357,70 @@ def horizon_amortized_terms(n_tokens: int, horizon: int,
     }
 
 
+def prefix_chunk_terms(n_prompt: int, n_cached: int, chunk: int,
+                       host_overhead_s: float,
+                       token_prefill_s: float) -> Dict[str, float]:
+    """Amortized admission model of the shared-prefix cache + chunked
+    prefill.
+
+    Cold admission computes every prompt token through
+    ``ceil(n_prompt / chunk)`` jitted chunk calls; a warm admission
+    computes only the uncached suffix (``n_prompt - n_cached`` tokens —
+    the cached pages are refcount shares, zero compute and zero data
+    movement, the redundancy DockerSSD's disaggregated pool exists to
+    eliminate).  With ``host_overhead_s`` the cost of one host
+    interaction (page planning, jit dispatch, the logits transfer) and
+    ``token_prefill_s`` the per-token device cost::
+
+        admission(n) = ceil(n / chunk) * host_overhead_s
+                         + n * token_prefill_s
+
+    The chunk term also bounds how long an admission can stall the
+    in-flight decode horizons: one chunk, not one prompt — the
+    admission-side analogue of the decode horizon's H-fold
+    amortization."""
+    prompt = max(int(n_prompt), 1)
+    cached = min(max(int(n_cached), 0), prompt - 1)
+    ch = max(int(chunk), 1)
+
+    def admission_s(n):
+        return -(-n // ch) * host_overhead_s + n * token_prefill_s
+
+    cold = admission_s(prompt)
+    warm = admission_s(prompt - cached)
+    one_shot_stall = host_overhead_s + prompt * token_prefill_s
+    return {
+        "prompt_tokens": float(prompt),
+        "cached_tokens": float(cached),
+        "prefix_hit_rate": cached / prompt,
+        "chunk": float(ch),
+        "cold_admission_s": cold,
+        "warm_admission_s": warm,
+        "modeled_warm_speedup": cold / max(warm, 1e-12),
+        "max_decode_stall_s": host_overhead_s + ch * token_prefill_s,
+        "one_shot_stall_s": one_shot_stall,
+        "stall_reduction": one_shot_stall /
+            max(host_overhead_s + ch * token_prefill_s, 1e-12),
+    }
+
+
+def fit_prefill_overheads(n_a: int, chunks_a: int, t_a: float,
+                          n_b: int, chunks_b: int,
+                          t_b: float) -> Tuple[float, float]:
+    """Solve (host_overhead_s, token_prefill_s) from two measured
+    admissions: t = n_chunks * host_overhead_s + n_tokens *
+    token_prefill_s (two equations, two unknowns — the prefill-side
+    sibling of :func:`fit_horizon_overheads`)."""
+    det = chunks_a * n_b - chunks_b * n_a
+    if det == 0:
+        raise ValueError("need two admissions with independent "
+                         "(chunks, tokens) mixes to fit")
+    host = (t_a * n_b - t_b * n_a) / det
+    host = max(host, 0.0)
+    tok = max((t_a - chunks_a * host) / max(n_a, 1), 0.0)
+    return host, tok
+
+
 def fit_horizon_overheads(h_a: int, tok_s_a: float, h_b: int,
                           tok_s_b: float) -> Tuple[float, float]:
     """Solve (host_overhead_s, device_step_s) from two measured horizon

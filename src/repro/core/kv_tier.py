@@ -17,9 +17,13 @@ The cache is split along the host/device boundary:
     jitted serving step consumes/produces these arrays directly.
   * :class:`PageTableManager` — host-side policy.  Owns the logical
     (seq_id, page_idx) -> physical mapping, LRU eviction into the host
-    tier, pinning, prefetch, per-tier stats, and sequence lifetime
-    (:meth:`PageTableManager.free_sequence`).  Runs *between* jitted
-    steps; never inside them.
+    tier, pinning, prefetch, per-tier stats, sequence lifetime
+    (:meth:`PageTableManager.free_sequence`), and the **prefix page
+    cache**: a per-shard content-addressed index (token-prefix digest
+    -> physical page) that lets identical prompt prefixes share pages
+    by refcount with copy-on-write splits before any write
+    (DESIGN.md §Prefix page cache).  Runs *between* jitted steps;
+    never inside them.
 
 :class:`PagedKVCache` remains as a thin single-layer facade over the
 pair for code that wants the classic per-layer append/view API.
@@ -31,6 +35,7 @@ block allocation.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -49,6 +54,10 @@ class KVTierStats:
     bytes_in: int = 0
     bytes_out: int = 0
     prefetch_hits: int = 0
+    # prefix page cache (content-addressed sharing)
+    prefix_hits: int = 0        # pages mapped by sharing, not prefill
+    prefix_tokens: int = 0      # prompt tokens whose KV was never computed
+    cow_splits: int = 0         # shared pages privatized before a write
 
 
 class PageStore:
@@ -107,6 +116,13 @@ class PageStore:
         self.k_pages = k_pages
         self.v_pages = v_pages
 
+    def copy_page(self, src: int, dst: int):
+        """Device-side stacked-page copy (the copy-on-write split: a
+        sharer about to append privatizes the shared page without the
+        KV ever crossing the host boundary)."""
+        self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
+        self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+
     def layer(self, li: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Per-layer view [hbm_pages, page, hkv, hd] (kernel convention)."""
         return self.k_pages[li], self.v_pages[li]
@@ -150,12 +166,25 @@ class PageTableManager:
                        (s + 1) * self.pages_per_shard))
             for s in range(n_shards)]
         self._dead_shards: set = set()
-        # logical -> physical, LRU-ordered
+        # logical -> physical, LRU-ordered.  Several logical keys may map
+        # to ONE physical page (prefix sharing); _rc counts the sharers.
         self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
+        self._rc: Dict[int, int] = {}
         self._host: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
         self._lengths: Dict[int, int] = {}
         self._prefetched: set = set()
         self._pinned: set = set()
+        # prefix page cache: per-shard content-addressed index
+        # digest(tokens[:end]) -> physical page whose KV covers exactly
+        # that prefix's slice; _page_digest is the reverse map used to
+        # invalidate entries when a page leaves HBM; _cached holds
+        # registered pages no sequence references any more — they stay
+        # resident as reclaimable cache (LRU order) so an identical
+        # prompt later still hits warm.
+        self._prefix_index: List[Dict[bytes, int]] = [
+            {} for _ in range(n_shards)]
+        self._page_digest: Dict[int, bytes] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
         self.stats = KVTierStats()
         self.shard_stats: List[KVTierStats] = [KVTierStats()
                                                for _ in range(n_shards)]
@@ -183,14 +212,12 @@ class PageTableManager:
 
     def free_sequence(self, seq_id: int) -> int:
         """Release every page a sequence holds, in both tiers.  Returns
-        the number of pages freed; the physical slots are immediately
-        reusable by a waiting request."""
+        the number of logical pages released; physical slots whose last
+        sharer this was are immediately reusable by a waiting request
+        (registered prefix pages stay resident as reclaimable cache)."""
         freed = 0
         for lkey in [k for k in list(self._resident) if k[0] == seq_id]:
-            phys = self._resident.pop(lkey)
-            self._free[self.shard_of_phys(phys)].append(phys)
-            self._pinned.discard(lkey)
-            self._prefetched.discard(lkey)
+            self._unmap(lkey)
             freed += 1
         for lkey in [k for k in list(self._host) if k[0] == seq_id]:
             self._host.pop(lkey)
@@ -207,21 +234,32 @@ class PageTableManager:
 
     @property
     def free_pages(self) -> int:
-        return sum(len(f) for f in self._free)
+        """Immediately-allocatable pages: the free lists plus the
+        unreferenced prefix-cache pages (reclaimed on demand)."""
+        return sum(len(f) for f in self._free) + len(self._cached)
 
     def shard_free_pages(self, shard: int) -> int:
-        return len(self._free[shard])
+        return len(self._free[shard]) + sum(
+            1 for p in self._cached if self.shard_of_phys(p) == shard)
 
     @property
     def resident_pages(self) -> int:
-        return len(self._resident)
+        """Distinct physical pages some sequence maps (shared pages
+        count once; unreferenced cache pages don't count)."""
+        return len(self._rc)
+
+    @property
+    def cached_pages(self) -> int:
+        """Registered prefix pages no sequence references — resident,
+        reclaimable, waiting for a warm admission."""
+        return len(self._cached)
 
     @property
     def host_pages(self) -> int:
         return len(self._host)
 
     def residency(self) -> float:
-        return len(self._resident) / self.hbm_pages
+        return len(self._rc) / self.hbm_pages
 
     def sequences_on_shard(self, shard: int) -> set:
         """Every sequence with a page (either tier) homed on ``shard``."""
@@ -233,20 +271,60 @@ class PageTableManager:
 
     def disable_shard(self, shard: int):
         """Take a shard's window out of service (node failure): nothing
-        can be allocated there again.  The caller is responsible for
-        freeing the sequences that lost pages (``sequences_on_shard``)."""
+        can be allocated there again, and its prefix index/cache is
+        gone with the window.  The caller is responsible for freeing
+        the sequences that lost pages (``sequences_on_shard``)."""
         self._dead_shards.add(shard)
         self._free[shard] = []
+        for phys in [p for p in self._page_digest
+                     if self.shard_of_phys(p) == shard]:
+            self._invalidate(phys)
+            self._cached.pop(phys, None)
+        self._prefix_index[shard] = {}
 
     # -- page lifecycle ------------------------------------------------------
 
+    def _map(self, lkey, phys: int):
+        """Bind a logical page to a physical one (refcounted; a cached
+        page being re-referenced leaves the reclaim list)."""
+        self._resident[lkey] = phys
+        self._rc[phys] = self._rc.get(phys, 0) + 1
+        self._cached.pop(phys, None)
+
+    def _unmap(self, lkey):
+        """Release one logical page.  The physical slot is returned when
+        the last sharer leaves — to the prefix cache if the page is
+        registered (still warm for identical prompts), else to the
+        shard's free list."""
+        phys = self._resident.pop(lkey)
+        self._pinned.discard(lkey)
+        self._prefetched.discard(lkey)
+        rc = self._rc[phys] - 1
+        if rc > 0:
+            self._rc[phys] = rc
+            return
+        del self._rc[phys]
+        if phys in self._page_digest:
+            self._cached[phys] = None
+        else:
+            self._free[self.shard_of_phys(phys)].append(phys)
+
+    def _invalidate(self, phys: int):
+        """Drop a page's prefix-index entry (the page is leaving HBM or
+        being reclaimed; the index only ever points at window pages)."""
+        d = self._page_digest.pop(phys, None)
+        if d is not None:
+            self._prefix_index[self.shard_of_phys(phys)].pop(d, None)
+
     def _evict_one(self, shard: int):
-        # LRU among the shard's unpinned pages (pinned = in-flight step);
+        # LRU among the shard's unpinned, UNSHARED pages (pinned =
+        # in-flight step; shared = prefix pages other sequences still
+        # read — eviction refuses those until every sharer releases);
         # tiering never crosses a node boundary — each DockerSSD spills
         # to its own flash
         victim = None
         for lkey, phys in self._resident.items():            # LRU order
-            if lkey not in self._pinned and \
+            if lkey not in self._pinned and self._rc[phys] == 1 and \
                     self.shard_of_phys(phys) == shard:
                 victim = lkey
                 break
@@ -254,21 +332,35 @@ class PageTableManager:
             raise RuntimeError(
                 "HBM window too small for the pinned working set "
                 f"(shard {shard}: {len(self._pinned)} pages pinned, "
+                "shared prefix pages are not evictable, "
                 f"{self.pages_per_shard} per shard)")
         phys = self._resident.pop(victim)
+        self._pinned.discard(victim)
+        del self._rc[phys]
+        self._invalidate(phys)
         self._host[victim] = self.store.read_page(phys)
         self._free[shard].append(phys)
         self._bump(shard, "page_outs")
         self._bump(shard, "bytes_out", self.store.page_bytes())
 
-    def _alloc(self, lkey) -> int:
-        shard = self.shard_of(lkey[0], lkey[1])
+    def _take_phys(self, shard: int) -> int:
+        """Claim one physical slot on ``shard``: free list first, then
+        reclaim the LRU unreferenced cache page, then evict."""
         if shard in self._dead_shards:
             raise RuntimeError(f"page shard {shard} is dead (node failed)")
-        if not self._free[shard]:
-            self._evict_one(shard)
-        phys = self._free[shard].pop()
-        self._resident[lkey] = phys
+        if self._free[shard]:
+            return self._free[shard].pop()
+        for phys in self._cached:                            # LRU order
+            if self.shard_of_phys(phys) == shard:
+                self._cached.pop(phys)
+                self._invalidate(phys)
+                return phys
+        self._evict_one(shard)
+        return self._free[shard].pop()
+
+    def _alloc(self, lkey) -> int:
+        phys = self._take_phys(self.shard_of(lkey[0], lkey[1]))
+        self._map(lkey, phys)
         return phys
 
     def _page_in(self, lkey) -> int:
@@ -280,6 +372,149 @@ class PageTableManager:
         self._bump(shard, "page_ins")
         self._bump(shard, "bytes_in", self.store.page_bytes())
         return phys
+
+    # -- prefix page cache (content-addressed sharing + CoW) -----------------
+
+    @staticmethod
+    def _digest(toks: np.ndarray) -> bytes:
+        """Content address of a token prefix: one digest identifies the
+        KV of every position it covers (params/config are fixed per
+        server, so token identity implies KV identity)."""
+        return hashlib.blake2b(toks.tobytes(), digest_size=16).digest()
+
+    @staticmethod
+    def _probe_page(idx: Dict[bytes, int], toks: np.ndarray,
+                    lo: int, hi: int, hasher):
+        """Longest indexed prefix of ``toks`` ending inside (lo, hi].
+        ``hasher`` already covers ``toks[:lo]`` — each candidate end
+        forks it and hashes only the page's own tokens, so a whole
+        prefix walk costs O(len * page) bytes, not O(len^2)."""
+        for end in range(hi, lo, -1):
+            hh = hasher.copy()
+            hh.update(toks[lo:end].tobytes())
+            phys = idx.get(hh.digest())
+            if phys is not None:
+                return end, phys
+        return None
+
+    def _walk_prefix(self, toks: np.ndarray, shard_for, on_hit=None) -> int:
+        """Walk the prefix chain page by page.  The returned coverage is
+        capped at len-1 — admission always computes at least the final
+        token's logits — but the *probe* runs to the full prompt length,
+        so an identical prompt shares its tail page too (the recomputed
+        final token CoWs into a copy).  A partial-page hit ends the
+        chain (positions after it belong to this sequence alone)."""
+        cap = int(toks.shape[0]) - 1
+        n, pi = 0, 0
+        hasher = hashlib.blake2b(digest_size=16)   # covers toks[:n]
+        while n < cap:
+            shard = shard_for(pi)
+            if shard in self._dead_shards:
+                break
+            got = self._probe_page(self._prefix_index[shard], toks,
+                                   n, min(n + self.page,
+                                          int(toks.shape[0])), hasher)
+            if got is None:
+                break
+            end, phys = got
+            if on_hit is not None:
+                on_hit(pi, shard, min(end, cap) - n, phys)
+            hasher.update(toks[n:end].tobytes())
+            n = end
+            pi += 1
+            if end % self.page or end >= cap:
+                break
+        return min(n, cap)
+
+    def match_prefix(self, seq_id: int, tokens) -> int:
+        """Map the longest indexed prefix of a prompt into ``seq_id``'s
+        page table: each hit is a refcount++ on an already-resident page
+        — zero prefill compute for the covered tokens.  Sets the
+        sequence length to the covered count and returns it."""
+        toks = np.asarray(tokens, np.int32)
+
+        def on_hit(pi, shard, n_toks, phys):
+            self._map((seq_id, pi), phys)
+            self._bump(shard, "prefix_hits")
+            self._bump(shard, "prefix_tokens", n_toks)
+
+        n = self._walk_prefix(toks, lambda pi: self.shard_of(seq_id, pi),
+                              on_hit)
+        self._lengths[seq_id] = n
+        return n
+
+    def probe_prefix(self, seq_id: int, tokens) -> int:
+        """How many tokens :meth:`match_prefix` would cover right now,
+        without mapping anything (admission telemetry / routing)."""
+        return self._walk_prefix(np.asarray(tokens, np.int32),
+                                 lambda pi: self.shard_of(seq_id, pi))
+
+    def prefix_tokens_on_shard(self, tokens, shard: int) -> int:
+        """Tokens of ``tokens`` shard ``shard``'s index could serve if
+        the sequence were placed entirely there — the routing signal
+        for placement policies (admit where the prefix already lives)."""
+        return self._walk_prefix(np.asarray(tokens, np.int32),
+                                 lambda pi: shard)
+
+    def register_prefix(self, seq_id: int, tokens):
+        """Index the prompt pages a finished prefill wrote, full pages
+        under their chain digest plus the partial tail (later decode
+        appends land at offsets past the digest's coverage, so entries
+        stay valid until the page leaves HBM)."""
+        toks = np.asarray(tokens, np.int32)
+        s = int(toks.shape[0])
+        for pi in range(self.pages_needed(s)):
+            phys = self._resident.get((seq_id, pi))
+            if phys is None or phys in self._page_digest:
+                continue                  # spilled, or already indexed
+            d = self._digest(toks[:min((pi + 1) * self.page, s)])
+            shard = self.shard_of_phys(phys)
+            if d in self._prefix_index[shard]:
+                continue                  # identical content indexed
+            self._prefix_index[shard][d] = phys
+            self._page_digest[phys] = d
+
+    def clear_prefix_cache(self):
+        """Forget every registered prefix: index entries dropped,
+        unreferenced cache pages returned to their free lists.  Mapped
+        pages stay with their sharers — they just stop being
+        discoverable (bench/test isolation knob)."""
+        for phys in list(self._page_digest):
+            self._invalidate(phys)
+        for phys in list(self._cached):
+            self._cached.pop(phys)
+            self._free[self.shard_of_phys(phys)].append(phys)
+
+    def make_writable(self, seq_id: int, page_idx: int) -> int:
+        """Copy-on-write split: before any append lands in a shared
+        page, this sharer gets a private device-side copy (the shared
+        original keeps its index entry and remaining sharers).  No-op
+        on exclusively-held pages.  Returns the writable physical id."""
+        lkey = (seq_id, page_idx)
+        phys = self._resident[lkey]
+        if self._rc[phys] == 1:
+            return phys
+        shard = self.shard_of(seq_id, page_idx)
+        new = self._take_phys(shard)
+        self.store.copy_page(phys, new)
+        self._rc[phys] -= 1
+        self._rc[new] = 1
+        self._resident[lkey] = new
+        self._bump(shard, "cow_splits")
+        return new
+
+    def _writable_tail(self, seq_id: int):
+        """Appends land mid-page when the committed length is not
+        page-aligned — CoW that tail page if it is shared."""
+        n = self._lengths[seq_id]
+        if n % self.page:
+            self.make_writable(seq_id, n // self.page)
+
+    def row(self, seq_id: int, n_pages: int) -> List[int]:
+        """The sequence's current physical page row (CoW-fresh), in
+        logical order — what a jitted step's page table must carry
+        after any make_writable splits remapped pages."""
+        return [self._resident[(seq_id, pi)] for pi in range(n_pages)]
 
     def ensure_page(self, seq_id: int, page_idx: int, *, pin: bool = False,
                     count: bool = True) -> int:
@@ -320,10 +555,13 @@ class PageTableManager:
 
     def prepare_append(self, seq_id: int) -> List[int]:
         """Pin + return the page-table row for appending one token: every
-        page covering positions [0, length] resident, in logical order.
+        page covering positions [0, length] resident, in logical order,
+        the tail page CoW-split if shared (the append writes into it).
         Commit the append with :meth:`commit_append` after the step."""
-        return self.ensure_resident(seq_id, pin=True,
+        rows = self.ensure_resident(seq_id, pin=True,
                                     n_tokens=self._lengths[seq_id] + 1)
+        self._writable_tail(seq_id)
+        return self.row(seq_id, len(rows))
 
     def commit_append(self, seq_id: int, n: int = 1):
         self._lengths[seq_id] += n
@@ -343,8 +581,12 @@ class PageTableManager:
         pure free-list return."""
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
-        return self.ensure_resident(seq_id, pin=True,
+        rows = self.ensure_resident(seq_id, pin=True,
                                     n_tokens=self._lengths[seq_id] + horizon)
+        # the horizon's first append may land mid-page in a shared
+        # prefix page: split it now, on the host, before the device loop
+        self._writable_tail(seq_id)
+        return self.row(seq_id, len(rows))
 
     def commit_horizon(self, seq_id: int, n_committed: int) -> int:
         """Commit ``n_committed`` appended tokens and roll back the rest
@@ -356,10 +598,7 @@ class PageTableManager:
         rolled = 0
         for lkey in [k for k in self._resident
                      if k[0] == seq_id and k[1] >= used]:
-            phys = self._resident.pop(lkey)
-            self._free[self.shard_of_phys(phys)].append(phys)
-            self._pinned.discard(lkey)
-            self._prefetched.discard(lkey)
+            self._unmap(lkey)
             rolled += 1
         return rolled
 
@@ -420,7 +659,10 @@ class PagedKVCache:
         """k_tok/v_tok: [n_kv_heads, head_dim] for the new position."""
         pos = self.table.length(seq_id)
         off = pos % self.page
-        phys = self.table.ensure_page(seq_id, pos // self.page, count=False)
+        self.table.ensure_page(seq_id, pos // self.page, count=False)
+        # same invariant as every other write path: never write into a
+        # shared physical page — split it first
+        phys = self.table.make_writable(seq_id, pos // self.page)
         st = self.store
         st.k_pages = st.k_pages.at[0, phys, off].set(
             k_tok.astype(st.dtype))

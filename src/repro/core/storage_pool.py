@@ -293,12 +293,16 @@ class StoragePool:
         return list(self._serve_ips)
 
     def place_sequence(self, seq_id: int, n_tokens: int,
-                       node: Optional[int] = None) -> int:
-        """Admit a sequence: choose a node (least-loaded by free window
-        pages unless the router already picked one), announce the
-        placement to that node over Ether-oN, and return the shard index
-        for ``PoolServer.add_request``."""
+                       node: Optional[int] = None,
+                       prompt=None) -> int:
+        """Admit a sequence: choose a node (the node already holding
+        ``prompt``'s prefix when one exists, else least-loaded by free
+        window pages, unless the router already picked one), announce
+        the placement to that node over Ether-oN, and return the shard
+        index for ``PoolServer.add_request``/``begin_request``."""
         srv = self._server
+        if node is None and prompt is not None:
+            node = srv.pick_prefix_node(prompt, n_tokens)
         if node is None:
             node = srv.least_loaded_node()
         self.driver.send_control(

@@ -55,6 +55,13 @@ def main(argv=None):
                     help="fused decode-horizon length: tokens generated "
                          "per host interaction (--paged / --pool; 1 = "
                          "classic per-token scheduling)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill size: admissions run at most "
+                         "this many prompt tokens per scheduler "
+                         "iteration, interleaved with decode horizons "
+                         "(--paged / --pool; 0 = blocking one-shot "
+                         "admission).  Prompts sharing a cached prefix "
+                         "skip the covered pages entirely")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -81,7 +88,8 @@ def main(argv=None):
         pool = StoragePool(n)
         pool.attach_server(server)
         router = PoolRouter(server, pool, max_active=args.requests,
-                            horizon=args.horizon)
+                            horizon=args.horizon,
+                            prefill_chunk=args.prefill_chunk or None)
         for i in range(args.requests):
             router.submit(Request(rid=i, prompt=prompts[i],
                                   max_tokens=args.gen))
@@ -98,12 +106,15 @@ def main(argv=None):
         server = PagedServer(model, params, page_size=args.page_size,
                              hbm_pages=args.hbm_pages)
         for i in range(args.requests):
-            server.add_request(i, prompts[i])
+            server.add_request(i, prompts[i],
+                               chunk=args.prefill_chunk or None)
         out = server.decode(args.gen,
                             horizon=args.horizon if args.horizon > 1
                             else None)
         toks = sum(len(v) for v in out.values())
         print("tier stats:", server.tier_stats())
+        print(f"prefix hit rate: {server.prefix_hit_rate():.2f} "
+              f"(prompt tokens served from the shared-prefix cache)")
     else:
         prefill, decode = make_serving_fns(model)
         total = args.prompt_len + args.gen

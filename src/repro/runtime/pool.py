@@ -71,7 +71,7 @@ class PoolServer(PagedServer):
     def __init__(self, model, params, *, n_nodes: Optional[int] = None,
                  mesh: Optional[Mesh] = None, page_size: int = 16,
                  hbm_pages_per_node: int = 32, dtype=jnp.float32,
-                 policy: str = "placed"):
+                 policy: str = "placed", prefix_cache: bool = True):
         if policy not in ("placed", "striped"):
             raise ValueError(f"unknown placement policy {policy!r}")
         if mesh is None:
@@ -94,14 +94,15 @@ class PoolServer(PagedServer):
         self._dead: set = set()
         super().__init__(model, params, page_size=page_size,
                          hbm_pages=self.n_nodes * hbm_pages_per_node,
-                         dtype=dtype)
+                         dtype=dtype, prefix_cache=prefix_cache)
         in_specs, out_specs = shd.pool_step_specs()
         self._sharded_decode = shard_map_unchecked(
             self._decode_body, mesh=mesh, in_specs=in_specs,
             out_specs=out_specs)
-        self._sharded_prefill = shard_map_unchecked(
-            self._prefill_body, mesh=mesh, in_specs=in_specs,
-            out_specs=out_specs)
+        chunk_in, chunk_out = shd.pool_chunk_specs()
+        self._sharded_chunk = shard_map_unchecked(
+            self._chunk_body, mesh=mesh, in_specs=chunk_in,
+            out_specs=chunk_out)
         # shard_map'd horizon bodies, one per (static) horizon length —
         # bounded by the pow2 bucketing in ``horizon_batch``
         self._sharded_horizons: Dict[int, object] = {}
@@ -139,21 +140,66 @@ class PoolServer(PagedServer):
             raise RuntimeError("no alive pool nodes")
         return max(alive, key=lambda s: (self.table.shard_free_pages(s), -s))
 
-    def add_request(self, seq_id: int, prompt, *, node: Optional[int] = None):
-        """Admit a sequence onto the pool.  ``node`` pins the placement
-        (the StoragePool frontend routes it there); default is the
-        least-loaded alive node.  Striped policy ignores ``node`` — the
-        extent spans every node by construction."""
-        if self.policy == "placed":
+    def best_prefix_node(self, prompt):
+        """(node, tokens): the alive node whose per-shard prefix index
+        covers the longest prefix of ``prompt`` — the placement signal
+        that routes a request to where its prefix KV already lives
+        (placed policy; a striped extent matches per page across every
+        node by construction).  (None, 0) when nothing matches."""
+        best, best_n = None, 0
+        for s in self.alive_nodes():
+            n = self.table.prefix_tokens_on_shard(prompt, s)
+            if n > best_n:
+                best, best_n = s, n
+        return best, best_n
+
+    def pick_prefix_node(self, prompt, n_tokens: Optional[int] = None):
+        """THE prefix-placement policy (one copy — the StoragePool
+        frontend and direct ``begin_request`` both route through it):
+        the prefix-owning node wins only while its window has room for
+        the request's whole ``n_tokens`` extent (default: the prompt —
+        conservative, since shares need no new pages, but the fallback
+        must never wedge an admission).  None -> caller falls back to
+        least-loaded."""
+        node, hit = self.best_prefix_node(prompt)
+        if not hit:
+            return None
+        need = self.pages_needed(n_tokens if n_tokens is not None
+                                 else len(prompt))
+        if self.table.shard_free_pages(node) < need:
+            return None
+        return node
+
+    def begin_request(self, seq_id: int, prompt, *,
+                      node: Optional[int] = None) -> int:
+        """Open an admission onto the pool.  ``node`` pins the placement
+        (the StoragePool frontend routes it there); default prefers the
+        node already holding the prompt's prefix, else least-loaded.
+        Striped policy ignores ``node`` — the extent spans every node by
+        construction."""
+        if self.policy == "placed" and seq_id not in self._placement:
+            if node is None:
+                node = self.pick_prefix_node(prompt)
             target = self.least_loaded_node() if node is None else int(node)
             if target in self._dead:
                 raise RuntimeError(f"node {target} is dead")
             self._placement[seq_id] = target
         try:
-            return super().add_request(seq_id, prompt)
+            return super().begin_request(seq_id, prompt)
         except Exception:
             self._placement.pop(seq_id, None)
             raise
+
+    def add_request(self, seq_id: int, prompt, *,
+                    node: Optional[int] = None,
+                    chunk: Optional[int] = None):
+        """Blocking admission: placement + cached-prefix match + chunked
+        prefill of the uncached suffix (see PagedServer.add_request)."""
+        self.begin_request(seq_id, prompt, node=node)
+        logits = None
+        while logits is None:
+            logits = self.prefill_chunk(seq_id, chunk)
+        return logits
 
     def free_sequence(self, seq_id: int) -> int:
         freed = super().free_sequence(seq_id)
@@ -189,58 +235,48 @@ class PoolServer(PagedServer):
         return self._sharded_decode(params, k_pages, v_pages, page_table,
                                     lengths, tokens)
 
-    def prefill_step(self, params, k_pages, v_pages, tokens, phys, length):
-        return self._sharded_prefill(params, k_pages, v_pages, tokens,
-                                     phys, length)
+    def prefill_chunk_step(self, params, k_pages, v_pages, page_row,
+                           tokens, start, n_valid):
+        return self._sharded_chunk(params, k_pages, v_pages, page_row,
+                                   tokens, start, n_valid)
 
-    def _decode_body(self, params, k_pages, v_pages, page_table, lengths,
-                     tokens):
-        """Per-node slice of one pool decode step.
-
-        Identical schedule to ``PagedServer.decode_step`` except that
-        physical page ids are global: each node maps them into its own
-        window (append and attention are masked to owned pages) and the
-        attention partials are merged across the pool axis.
-        """
-        cfg = self.cfg
-        b = tokens.shape[0]
-        n_local = k_pages.shape[1]
+    def _pool_hooks(self, n_local: int, page_table):
+        """The two scaffold hooks every pool body shares: rebase global
+        physical ids into this node's window (the append sentinel drops
+        non-owned writes) and run ownership-masked attention partials
+        merged across the pool axis.  ``page_table`` may be a [B, pps]
+        batch table (decode/horizon) or a broadcast [C, pps] chunk
+        table."""
         base = lax.axis_index(POOL_AXIS) * n_local
-        valid = lengths > 0                      # padding slots carry 0
-        pos = lengths[:, None]                   # new token's position
-        pidx = lengths // self.page
-        offs = lengths % self.page
-        phys = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
-        local_new = phys - base
-        owned_new = valid & (local_new >= 0) & (local_new < n_local)
-        # out-of-window sentinel => the scatter drops non-owned appends
-        local_new = jnp.where(owned_new, local_new, n_local)
-        new_lengths = lengths + valid.astype(jnp.int32)
-        # ownership of every logical page in the batch's table (padding
-        # columns beyond a row's extent are already masked by pos<length)
         local_table = page_table - base
         col_owned = (local_table >= 0) & (local_table < n_local)
 
-        h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
+        def append_target(phys, valid):
+            local_new = phys - base
+            owned = valid & (local_new >= 0) & (local_new < n_local)
+            return jnp.where(owned, local_new, n_local)
 
-        def body(hh, xs):
-            lp, kp, vp = xs
-            q, k, v = self._attn_inputs(lp, hh, pos)
-            kp = kp.at[local_new, offs].set(k[:, 0].astype(kp.dtype),
-                                            mode="drop")
-            vp = vp.at[local_new, offs].set(v[:, 0].astype(vp.dtype),
-                                            mode="drop")
-            acc, m, l = paged_attention_partial(
-                q[:, 0].astype(self.dtype), kp, vp, local_table, col_owned,
-                new_lengths)
-            o = combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
-            return self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)), (kp, vp)
+        def attention(q, kp, vp, new_lengths):
+            acc, m, l = paged_attention_partial(q, kp, vp, local_table,
+                                                col_owned, new_lengths)
+            return combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
 
-        h, (k_pages, v_pages) = lax.scan(
-            body, h, (params["layers"], k_pages, v_pages))
-        h = L.apply_norm(params["final_norm"], h, cfg.norm)
-        logits = L.unembed(params["embed"], params.get("lm_head"), h,
-                           cfg.tie_embeddings)[:, 0]
+        return append_target, attention
+
+    def _decode_body(self, params, k_pages, v_pages, page_table, lengths,
+                     tokens):
+        """Per-node slice of one pool decode step — the shared horizon
+        scaffold at H=1 (same unification as ``PagedServer.decode_step``)
+        with the pool hooks plugged in: physical page ids are global,
+        each node maps them into its own window (append and attention
+        masked to owned pages) and the attention partials are merged
+        across the pool axis."""
+        append_target, attention = self._pool_hooks(k_pages.shape[1],
+                                                    page_table)
+        _, logits, k_pages, v_pages = self._fused_horizon_scan(
+            params, k_pages, v_pages, page_table, lengths, tokens,
+            (lengths > 0).astype(jnp.int32), jnp.int32(-1), horizon=1,
+            append_target=append_target, attention=attention)
         return logits, k_pages, v_pages
 
     # -- fused decode horizon (sharded) ---------------------------------------
@@ -271,67 +307,36 @@ class PoolServer(PagedServer):
         budgets, EOS) stays replicated arithmetic: H tokens cost zero
         host interactions and exactly 3 collectives per layer per
         token, same as the per-token path.
+
+        Ownership of every logical page in the horizon's reservation is
+        fixed for the whole horizon (the table covers the pre-reserved
+        extent; only the append *target* advances).
         """
-        n_local = k_pages.shape[1]
-        base = lax.axis_index(POOL_AXIS) * n_local
-        # ownership of every logical page in the horizon's reservation
-        # is fixed for the whole horizon (the table covers the
-        # pre-reserved extent; only the append *target* advances)
-        local_table = page_table - base
-        col_owned = (local_table >= 0) & (local_table < n_local)
-
-        def append_target(phys, valid):
-            local_new = phys - base
-            owned = valid & (local_new >= 0) & (local_new < n_local)
-            return jnp.where(owned, local_new, n_local)
-
-        def attention(q, kp, vp, new_lengths):
-            acc, m, l = paged_attention_partial(q, kp, vp, local_table,
-                                                col_owned, new_lengths)
-            return combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
-
+        append_target, attention = self._pool_hooks(k_pages.shape[1],
+                                                    page_table)
         return self._fused_horizon_scan(
             params, k_pages, v_pages, page_table, lengths, tokens,
             budget, eos_id, horizon=horizon,
             append_target=append_target, attention=attention)
 
-    def _prefill_body(self, params, k_pages, v_pages, tokens, phys, length):
-        """Per-node slice of the one-shot prefill: the layer stack runs
-        replicated (attention over the in-flight prompt needs no pages),
-        each node keeps only the prompt pages it owns."""
-        cfg = self.cfg
-        s_pad = tokens.shape[1]
-        n_pages = s_pad // self.page
-        n_local = k_pages.shape[1]
-        base = lax.axis_index(POOL_AXIS) * n_local
-        local = phys - base
-        owned = (local >= 0) & (local < n_local)
-        # the global padding sentinel (hbm_pages) stays out of range for
-        # every node after rebasing; non-owned pages join it via the mask
-        local = jnp.where(owned, local, n_local)
-        positions = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
-        h = L.embed_tokens(params["embed"], tokens, self.dtype)
+    def _chunk_body(self, params, k_pages, v_pages, page_row, tokens,
+                    start, n_valid):
+        """Per-node slice of one prefill chunk: the shared chunk
+        scaffold with the pool hooks — every node runs the layer stack
+        on the chunk (replicated; each DockerSSD stores the full model),
+        writes only the chunk K/V pages it owns via the masked scatter,
+        attends over its own pages and merges the LSE partials, so the
+        chunk's queries see the whole cached prefix wherever its pages
+        live in the pool."""
+        append_target, attention = self._pool_hooks(
+            k_pages.shape[1], jnp.broadcast_to(
+                page_row[None, :], (tokens.shape[1], page_row.shape[0])))
 
-        def body(hh, xs):
-            lp, kp, vp = xs
-            q, k, v = self._attn_inputs(lp, hh, positions)
-            o = L.chunked_attention(q, k, v, causal=True,
-                                    positions_q=positions,
-                                    positions_k=positions)
-            kpg = k[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
-            vpg = v[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
-            kp = kp.at[local].set(kpg.astype(kp.dtype), mode="drop")
-            vp = vp.at[local].set(vpg.astype(vp.dtype), mode="drop")
-            return self._attn_out_ffn(lp, hh, o.reshape(1, s_pad, -1)), \
-                (kp, vp)
-
-        h, (k_pages, v_pages) = lax.scan(
-            body, h, (params["layers"], k_pages, v_pages))
-        h = L.apply_norm(params["final_norm"], h, cfg.norm)
-        last = lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
-        logits = L.unembed(params["embed"], params.get("lm_head"), last,
-                           cfg.tie_embeddings)[0, 0]
-        return logits, k_pages, v_pages
+        return self._prefill_chunk_scan(
+            params, k_pages, v_pages, page_row, tokens, start, n_valid,
+            append_target=append_target,
+            attention=lambda q, kp, vp, table, lengths:
+                attention(q, kp, vp, lengths))
 
     def step_reference(self, tokens):
         raise NotImplementedError(

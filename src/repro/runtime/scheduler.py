@@ -68,13 +68,24 @@ class ContinuousBatcher:
     identical to the per-token schedule.
     """
 
-    def __init__(self, server, *, max_active: int = 8, horizon: int = 1):
+    def __init__(self, server, *, max_active: int = 8, horizon: int = 1,
+                 prefill_chunk: Optional[int] = None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.server = server
         self.max_active = max_active
         self.horizon = horizon
+        # chunked admission: an admitted request prefills at most
+        # ``prefill_chunk`` tokens per scheduler iteration (one jitted
+        # chunk), interleaved with the active set's decode horizons, so
+        # admission never stalls decode longer than one chunk.  None =
+        # legacy blocking admission (the whole suffix in one chunk).
+        self.prefill_chunk = prefill_chunk
         self.waiting: Deque[Request] = deque()
+        self.prefilling: Dict[int, Request] = {}
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
 
@@ -89,6 +100,8 @@ class ContinuousBatcher:
 
     def _window_has_room(self, req: Request) -> bool:
         pinned_now = sum(self._pages_needed(r) for r in self.active.values())
+        pinned_now += sum(self._pages_needed(r)
+                          for r in self.prefilling.values())
         return pinned_now + self._pages_needed(req) <= self.server.hbm_pages
 
     def _prompt_of(self, req: Request) -> np.ndarray:
@@ -103,24 +116,51 @@ class ContinuousBatcher:
                                np.asarray(req.output, np.int32)])
 
     def _prefill(self, req: Request):
-        """Admission hook — PoolRouter overrides to route the placement
-        through the pool frontend."""
+        """Blocking-admission hook — PoolRouter overrides to route the
+        placement through the pool frontend."""
         return self.server.add_request(req.rid, self._prompt_of(req))
+
+    def _begin_prefill(self, req: Request):
+        """Chunked-admission hook: open the admission (prefix-cache
+        match, no compute) — PoolRouter overrides to route the
+        placement through the pool frontend."""
+        self.server.begin_request(req.rid, self._prompt_of(req))
 
     def _release(self, rid: int):
         """Retirement hook — PoolRouter overrides to notify the owning
         node over Ether-oN before the pages come back."""
         self.server.free_sequence(rid)
 
+    def _activate(self, req: Request, last):
+        """Admission finished: seed the first output token."""
+        if not req.output:          # requeues keep their first-token stamp
+            req.t_first = time.monotonic()
+        req.output.append(int(np.argmax(np.asarray(last))))
+        self.active[req.rid] = req
+
     def _admit(self):
-        while (self.waiting and len(self.active) < self.max_active and
-               self._window_has_room(self.waiting[0])):
+        if self.prefill_chunk is None:
+            while (self.waiting and len(self.active) < self.max_active and
+                   self._window_has_room(self.waiting[0])):
+                req = self.waiting.popleft()
+                self._activate(req, self._prefill(req))
+            return
+        # chunked admission: open admissions eagerly (prefix match only
+        # — zero compute), then run at most ONE jitted prefill chunk per
+        # scheduler iteration, so the decode horizon between iterations
+        # is never stalled by more than one chunk of admission work
+        while (self.waiting and
+               len(self.active) + len(self.prefilling) < self.max_active
+               and self._window_has_room(self.waiting[0])):
             req = self.waiting.popleft()
-            last = self._prefill(req)
-            if not req.output:          # requeues keep their first-token stamp
-                req.t_first = time.monotonic()
-            req.output.append(int(np.argmax(np.asarray(last))))
-            self.active[req.rid] = req
+            self._begin_prefill(req)
+            self.prefilling[req.rid] = req
+        if self.prefilling:
+            rid, req = next(iter(self.prefilling.items()))
+            last = self.server.prefill_chunk(rid, self.prefill_chunk)
+            if last is not None:
+                del self.prefilling[rid]
+                self._activate(req, last)
 
     # -- the serving loop -----------------------------------------------------
 
@@ -179,7 +219,8 @@ class ContinuousBatcher:
 
     def run_to_completion(self, max_iters: int = 10_000) -> dict:
         it = 0
-        while (self.waiting or self.active) and it < max_iters:
+        while (self.waiting or self.prefilling or self.active) and \
+                it < max_iters:
             self.step()
             it += 1
         lat = [r.t_done - r.t_arrive for r in self.finished]
@@ -222,8 +263,9 @@ class PoolRouter(ContinuousBatcher):
     """
 
     def __init__(self, server, pool=None, *, max_active: int = 8,
-                 horizon: int = 1):
-        super().__init__(server, max_active=max_active, horizon=horizon)
+                 horizon: int = 1, prefill_chunk: Optional[int] = None):
+        super().__init__(server, max_active=max_active, horizon=horizon,
+                         prefill_chunk=prefill_chunk)
         self.pool = pool
         self.requeues = 0
         self._target_node: Optional[int] = None
@@ -236,10 +278,12 @@ class PoolRouter(ContinuousBatcher):
         return len(range(node, n_pages, n_nodes))
 
     def _node_load(self) -> Dict[int, int]:
-        """Projected pinned pages per alive node from the active set."""
+        """Projected pinned pages per alive node from the active set
+        (in-flight chunked admissions hold pages too)."""
         srv = self.server
         load = {s: 0 for s in srv.alive_nodes()}
-        for r in self.active.values():
+        for r in list(self.active.values()) + list(
+                self.prefilling.values()):
             need = self._pages_needed(r)
             if srv.policy == "placed":
                 s = srv.node_of(r.rid)
@@ -268,9 +312,13 @@ class PoolRouter(ContinuousBatcher):
             return False
         if srv.policy == "placed":
             fits = [s for s in load if load[s] + need <= cap]
-            # remember the least-loaded fitting node for _prefill
-            self._target_node = min(fits, key=lambda s: (load[s], s)) \
-                if fits else None
+            # prefer the fitting node that already holds the request's
+            # prefix (zero prefill compute there); else least-loaded
+            self._target_node = None
+            if fits:
+                pn, hit = srv.best_prefix_node(self._prompt_of(req))
+                self._target_node = pn if (hit and pn in fits) else \
+                    min(fits, key=lambda s: (load[s], s))
             return bool(fits)
         self._check_striped_alive()
         return all(load[s] + self._striped_share(need, s, srv.n_nodes) <= cap
@@ -284,16 +332,33 @@ class PoolRouter(ContinuousBatcher):
                 "continue degraded — restart the pool (DESIGN.md §Pool "
                 "serving)")
 
+    def _route(self, req: Request, prompt) -> Optional[int]:
+        """Placement for one admission (placed policy): the node the
+        admission check chose — prefix-owning when possible — routed
+        through the pool frontend's Ether-oN control frame when a
+        StoragePool is bound."""
+        node = self._target_node
+        if self.pool is not None:
+            node = self.pool.place_sequence(
+                req.rid, len(req.prompt) + req.max_tokens, node=node,
+                prompt=prompt)
+        return node
+
     def _prefill(self, req: Request):
         srv = self.server
         prompt = self._prompt_of(req)
         if srv.policy != "placed":
             return srv.add_request(req.rid, prompt)
-        node = self._target_node
-        if self.pool is not None:
-            node = self.pool.place_sequence(
-                req.rid, len(req.prompt) + req.max_tokens, node=node)
-        return srv.add_request(req.rid, prompt, node=node)
+        return srv.add_request(req.rid, prompt,
+                               node=self._route(req, prompt))
+
+    def _begin_prefill(self, req: Request):
+        srv = self.server
+        prompt = self._prompt_of(req)
+        if srv.policy != "placed":
+            srv.begin_request(req.rid, prompt)
+            return
+        srv.begin_request(req.rid, prompt, node=self._route(req, prompt))
 
     def _release(self, rid: int):
         if self.pool is not None:
@@ -312,6 +377,8 @@ class PoolRouter(ContinuousBatcher):
             self._check_striped_alive()         # unrecoverable: fail fast
         for rid in reversed(victims):           # keep original order at front
             req = self.active.pop(rid, None)
+            if req is None:                     # admission was in flight
+                req = self.prefilling.pop(rid, None)
             if req is not None:
                 self.requeues += 1
                 self.waiting.appendleft(req)

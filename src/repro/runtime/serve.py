@@ -14,11 +14,16 @@ Two paths:
     every layer and every active sequence per token: a single batched
     scatter appends the new K/V for all layers/sequences, then a
     ``lax.scan`` over layers runs the paged-attention kernel against
-    each layer's page slice.  Prefill is one jitted shot that writes
-    whole prompt pages.  Host-side page management (eviction, page-in,
-    table assembly) runs *between* jitted steps — the ISP-container
-    split of the case study: policy at the host, data-path on the
-    device.
+    each layer's page slice.  Prefill is **chunked**: each jitted
+    ``prefill_chunk_step`` writes one pow2-bucketed chunk of prompt
+    pages and attends over the paged context, and prompts whose prefix
+    is already resident skip the covered pages entirely (the
+    content-addressed **prefix page cache** in
+    ``core.kv_tier.PageTableManager``: refcount shares + copy-on-write;
+    DESIGN.md §Prefix page cache).  Host-side page management
+    (eviction, page-in, CoW splits, table assembly) runs *between*
+    jitted steps — the ISP-container split of the case study: policy
+    at the host, data-path on the device.
 
 The **fused decode horizon** (``decode(horizon=H)``) extends the same
 split H tokens at a time: one jitted ``lax.scan`` over H decode steps
@@ -162,7 +167,8 @@ class PagedServer:
 
     def __init__(self, model, params, *, page_size: int = 16,
                  hbm_pages: Optional[int] = None, dtype=jnp.float32,
-                 hbm_pages_per_layer: Optional[int] = None):
+                 hbm_pages_per_layer: Optional[int] = None,
+                 prefix_cache: bool = True):
         if hbm_pages is None:
             hbm_pages = (hbm_pages_per_layer
                          if hbm_pages_per_layer is not None else 64)
@@ -172,17 +178,29 @@ class PagedServer:
         self.dtype = dtype
         self.page = page_size
         self.hbm_pages = hbm_pages
+        # prefix_cache=False ablates the shared-prefix page cache (every
+        # admission computes every prompt token — the cold baseline the
+        # benchmark's warm-speedup floor is measured against)
+        self.prefix_cache = prefix_cache
         self.store = self._new_store()
         self.table = self._new_table()
         self._seqs: List[int] = []
         self._pending: Dict[int, int] = {}
+        # prompt tokens of admissions whose chunked prefill is still
+        # in flight (progress = the table's committed length);
+        # _prefill_unmatched marks the ones whose lazy prefix match has
+        # not run yet
+        self._prefill_state: Dict[int, np.ndarray] = {}
+        self._prefill_unmatched: set = set()
+        self.prefill_tokens_computed = 0
         self._interpret = jax.default_backend() != "tpu"
         # donating the page arrays lets XLA update the store in place;
         # CPU jit ignores donation (with a warning), so only opt in on
         # accelerators.
         donate = (1, 2) if not self._interpret else ()
         self._decode_jit = jax.jit(self.decode_step, donate_argnums=donate)
-        self._prefill_jit = jax.jit(self.prefill_step, donate_argnums=donate)
+        self._chunk_jit = jax.jit(self.prefill_chunk_step,
+                                  donate_argnums=donate)
         self._horizon_jit = jax.jit(self.decode_horizon_step,
                                     static_argnames=("horizon",),
                                     donate_argnums=donate)
@@ -221,6 +239,8 @@ class PagedServer:
         if seq_id in self._seqs:
             self._seqs.remove(seq_id)
         self._pending.pop(seq_id, None)
+        self._prefill_state.pop(seq_id, None)
+        self._prefill_unmatched.discard(seq_id)
         return freed
 
     def _recover_store(self):
@@ -239,6 +259,8 @@ class PagedServer:
         self.table.shard_stats = shard_stats
         self._seqs.clear()
         self._pending.clear()
+        self._prefill_state.clear()
+        self._prefill_unmatched.clear()
 
     # -- shared transformer-block halves (used by the jitted decode /
     #    prefill bodies and the eager reference; only the attention
@@ -270,50 +292,28 @@ class PagedServer:
 
     def decode_step(self, params, k_pages, v_pages, page_table, lengths,
                     tokens):
-        """One fused decode step for the whole active batch.
+        """One fused decode step for the whole active batch — the
+        horizon scaffold run at H=1, so per-token/horizon token identity
+        holds by construction rather than by test-enforced parallel
+        bodies.  The attention is the Pallas ``paged_attention`` kernel
+        (it stays the benchmark baseline); longer horizons swap in the
+        LSE-partial form via their own hook.
 
         k_pages/v_pages: [L, P, page, Hkv, D] stacked store; page_table:
         [B, pps] int32 physical ids; lengths: [B] int32 committed length
         per sequence (0 marks a padding slot); tokens: [B] int32.
-
-        Appends each sequence's new K/V into its current page for every
-        layer (one batched scatter per layer inside the scan — no
-        per-sequence host loop) and runs the Pallas paged_attention
-        kernel per layer via ``lax.scan``.  Returns (logits [B, V] f32,
-        k_pages, v_pages).
+        Returns (logits [B, V] f32, k_pages, v_pages).
         """
-        cfg = self.cfg
-        b = tokens.shape[0]
         n_phys = k_pages.shape[1]
-        valid = lengths > 0                      # padding slots carry 0
-        pos = lengths[:, None]                   # new token's position
-        pidx = lengths // self.page
-        offs = lengths % self.page
-        phys = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
-        # out-of-bounds sentinel => scatter drops padding slots
-        phys = jnp.where(valid, phys, n_phys)
-        new_lengths = lengths + valid.astype(jnp.int32)
-
-        h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
-
-        def body(hh, xs):
-            lp, kp, vp = xs
-            q, k, v = self._attn_inputs(lp, hh, pos)
-            # batched append: all sequences' new K/V in one scatter
-            kp = kp.at[phys, offs].set(k[:, 0].astype(kp.dtype),
-                                       mode="drop")
-            vp = vp.at[phys, offs].set(v[:, 0].astype(vp.dtype),
-                                       mode="drop")
-            o = _paged_inner(q[:, 0].astype(self.dtype), kp, vp,
-                             page_table, new_lengths,
-                             interpret=self._interpret)
-            return self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)), (kp, vp)
-
-        h, (k_pages, v_pages) = lax.scan(
-            body, h, (params["layers"], k_pages, v_pages))
-        h = L.apply_norm(params["final_norm"], h, cfg.norm)
-        logits = L.unembed(params["embed"], params.get("lm_head"), h,
-                           cfg.tie_embeddings)[:, 0]
+        _, logits, k_pages, v_pages = self._fused_horizon_scan(
+            params, k_pages, v_pages, page_table, lengths, tokens,
+            (lengths > 0).astype(jnp.int32), jnp.int32(-1), horizon=1,
+            # out-of-bounds sentinel => scatter drops padding slots
+            append_target=lambda phys, valid:
+                jnp.where(valid, phys, n_phys),
+            attention=lambda q, kp, vp, new_lengths:
+                _paged_inner(q, kp, vp, page_table, new_lengths,
+                             interpret=self._interpret))
         return logits, k_pages, v_pages
 
     # -- fused decode horizon -------------------------------------------------
@@ -352,6 +352,10 @@ class PagedServer:
         finished/padding/non-owned appends); ``attention(q, kp, vp,
         new_lengths) -> [B, H, D]`` closes the paged-attention contract
         (locally normalized, or ownership-masked + pool-merged).
+
+        Returns (emitted [H, B], last step's logits [B, V] f32, k_pages,
+        v_pages) — the logits make H=1 *be* the per-token decode step
+        (one scaffold, token identity by construction).
         """
         cfg = self.cfg
         b = tokens.shape[0]
@@ -393,12 +397,13 @@ class PagedServer:
             budget = jnp.where(valid & (nxt == eos_id), 0,
                                budget - valid.astype(jnp.int32))
             tokens = jnp.where(valid, nxt, tokens)
-            return (k_pages, v_pages, new_lengths, tokens, budget), emitted
+            return (k_pages, v_pages, new_lengths, tokens, budget), \
+                (emitted, logits.astype(jnp.float32))
 
-        (k_pages, v_pages, lengths, tokens, budget), emitted = lax.scan(
-            step, (k_pages, v_pages, lengths, tokens, budget), None,
-            length=horizon)
-        return emitted, k_pages, v_pages
+        (k_pages, v_pages, lengths, tokens, budget), (emitted, logits) = \
+            lax.scan(step, (k_pages, v_pages, lengths, tokens, budget),
+                     None, length=horizon)
+        return emitted, logits[-1], k_pages, v_pages
 
     def decode_horizon_step(self, params, k_pages, v_pages, page_table,
                             lengths, tokens, budget, eos_id, *,
@@ -422,7 +427,8 @@ class PagedServer:
         produce (device-side min of max_tokens and the caller's ask);
         eos_id: [] int32, -1 disables EOS stopping.
 
-        Returns (emitted [horizon, B] int32, k_pages, v_pages).
+        Returns (emitted [horizon, B] int32, last step's logits [B, V],
+        k_pages, v_pages).
         """
         n_phys = k_pages.shape[1]
         return self._fused_horizon_scan(
@@ -435,80 +441,148 @@ class PagedServer:
                 self._horizon_attention(q, kp, vp, page_table,
                                         new_lengths))
 
-    def prefill_step(self, params, k_pages, v_pages, tokens, phys, length):
-        """One-shot prefill: run the whole (page-padded) prompt through
-        the layer stack and write full prompt pages into the store.
+    def _prefill_chunk_scan(self, params, k_pages, v_pages, page_row,
+                            tokens, start, n_valid, *, append_target,
+                            attention):
+        """The prefill-chunk scaffold shared by the single-node and pool
+        chunk bodies (the chunk-shaped sibling of
+        :meth:`_fused_horizon_scan`, with the same two hooks): append
+        the chunk's K/V into the sequence's pages, then attend every
+        chunk position over the *paged* context — the cached/committed
+        prefix plus the chunk itself, causally — as decode-shaped
+        queries with per-position length ``pos+1``.
 
-        tokens: [1, S_pad] int32 with S_pad a page multiple; phys:
-        [S_pad // page] int32 physical destinations; length: scalar int32
-        true prompt length.  Returns (last-real-token logits [V] f32,
-        k_pages, v_pages).
+        ``append_target(phys, valid) -> [C]`` maps each position's
+        destination page to the scatter row (sentinel drops padding /
+        non-owned writes); ``attention(q, kp, vp, table, lengths) ->
+        [C, H, D]`` closes the paged-attention contract.
         """
         cfg = self.cfg
-        s_pad = tokens.shape[1]
-        n_pages = s_pad // self.page
-        positions = jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+        c = tokens.shape[1]
+        pps = page_row.shape[0]
+        pos_i = jnp.arange(c, dtype=jnp.int32)
+        wpos = start + pos_i                      # absolute positions
+        positions = wpos[None, :]
+        valid_w = pos_i < n_valid
+        pidx = jnp.clip(wpos // self.page, 0, pps - 1)
+        offs = wpos % self.page
+        phys_w = append_target(page_row[pidx], valid_w)
+        # per-position causal extent; 0 fully masks padding queries
+        lengths_q = jnp.where(valid_w, wpos + 1, 0)
+        table = jnp.broadcast_to(page_row[None, :], (c, pps))
+
         h = L.embed_tokens(params["embed"], tokens, self.dtype)
 
         def body(hh, xs):
             lp, kp, vp = xs
             q, k, v = self._attn_inputs(lp, hh, positions)
-            o = L.chunked_attention(q, k, v, causal=True,
-                                    positions_q=positions,
-                                    positions_k=positions)
-            # whole prompt pages in one scatter (positions past `length`
-            # are garbage the kernel masks by sequence length; padding
-            # pages carry an out-of-bounds id and are dropped)
-            kpg = k[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
-            vpg = v[0].reshape(n_pages, self.page, cfg.n_kv_heads, cfg.hd)
-            kp = kp.at[phys].set(kpg.astype(kp.dtype), mode="drop")
-            vp = vp.at[phys].set(vpg.astype(vp.dtype), mode="drop")
-            return self._attn_out_ffn(lp, hh, o.reshape(1, s_pad, -1)), \
+            kp = kp.at[phys_w, offs].set(k[0].astype(kp.dtype),
+                                         mode="drop")
+            vp = vp.at[phys_w, offs].set(v[0].astype(vp.dtype),
+                                         mode="drop")
+            o = attention(q[0].astype(self.dtype), kp, vp, table,
+                          lengths_q)
+            return self._attn_out_ffn(lp, hh, o.reshape(1, c, -1)), \
                 (kp, vp)
 
         h, (k_pages, v_pages) = lax.scan(
             body, h, (params["layers"], k_pages, v_pages))
         h = L.apply_norm(params["final_norm"], h, cfg.norm)
-        last = lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        last = lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
         logits = L.unembed(params["embed"], params.get("lm_head"), last,
                            cfg.tie_embeddings)[0, 0]
-        return logits, k_pages, v_pages
+        return logits.astype(jnp.float32), k_pages, v_pages
+
+    def prefill_chunk_step(self, params, k_pages, v_pages, page_row,
+                           tokens, start, n_valid):
+        """One jitted prefill chunk on one device.
+
+        page_row: [pps] int32 physical ids covering positions
+        [0, start + n_valid); tokens: [1, C] int32 (C a pow2 bucket,
+        garbage past n_valid); start: [] int32 committed tokens before
+        this chunk; n_valid: [] int32 true chunk length.  Returns
+        (last-valid-position logits [V] f32, k_pages, v_pages).
+        """
+        n_phys = k_pages.shape[1]
+        return self._prefill_chunk_scan(
+            params, k_pages, v_pages, page_row, tokens, start, n_valid,
+            # out-of-bounds sentinel => the scatter drops chunk padding
+            append_target=lambda phys, valid:
+                jnp.where(valid, phys, n_phys),
+            attention=self._horizon_attention)
 
     # -- request handling -----------------------------------------------------
 
-    def add_request(self, seq_id: int, prompt: np.ndarray):
-        """Admit a sequence: one jitted prefill writes the whole prompt's
-        pages (no token-by-token teacher forcing).  Returns the last
-        prompt position's logits [V].
+    def begin_request(self, seq_id: int, prompt: np.ndarray) -> int:
+        """Open an admission: queue the prompt for :meth:`prefill_chunk`
+        calls.  The cached-prefix match itself runs lazily at the first
+        chunk — a queued admission neither holds shared pages (they
+        would be unevictable) nor misses pages an admission ahead of it
+        in the queue is still about to register.  Returns the number of
+        prompt tokens the cache covers *right now* (telemetry/routing;
+        the lazy match can only cover more)."""
+        prompt = np.asarray(prompt, np.int32)
+        assert int(prompt.shape[0]) >= 1, "empty prompt"
+        self.table.add_sequence(seq_id)
+        self._seqs.append(seq_id)
+        self._prefill_state[seq_id] = prompt
+        if not self.prefix_cache:
+            return 0
+        self._prefill_unmatched.add(seq_id)
+        return self.table.probe_prefix(seq_id, prompt)
+
+    def prefill_pending(self, seq_id: int) -> int:
+        """Prompt tokens still to prefill (0 = admission complete)."""
+        prompt = self._prefill_state.get(seq_id)
+        if prompt is None:
+            return 0
+        return int(prompt.shape[0]) - self.table.length(seq_id)
+
+    def prefill_chunk(self, seq_id: int, chunk: Optional[int] = None):
+        """Run ONE jitted prefill chunk of at most ``chunk`` tokens
+        (default: the whole remaining suffix).  The chunk length is
+        bucketed UP to a power of two and the page row to a pow2 width,
+        so admissions of any prompt length compile O(log) programs.
+        Returns the last prompt position's logits [V] when this chunk
+        completes the prompt, else None.
 
         Like the kernel view it feeds, the active working set must fit
         the HBM window (admission control's ``pages_needed`` contract);
         a prompt needing more pages than the window raises the same
-        pinned-working-set error the per-token path raised.
+        pinned-working-set error the per-token path raises.
         """
-        prompt = np.asarray(prompt, np.int32)
+        prompt = self._prefill_state[seq_id]
         s = int(prompt.shape[0])
-        assert s >= 1, "empty prompt"
-        self.table.add_sequence(seq_id)
-        self._seqs.append(seq_id)
+        if seq_id in self._prefill_unmatched:
+            # lazy cached-prefix match (see begin_request): map shares,
+            # skip their prefill compute entirely
+            self._prefill_unmatched.discard(seq_id)
+            try:
+                self.table.match_prefix(seq_id, prompt)
+            except Exception:
+                self.free_sequence(seq_id)
+                raise
+        start = self.table.length(seq_id)
+        c = s - start if chunk is None else min(int(chunk), s - start)
         try:
             try:
-                phys = self.table.ensure_resident(seq_id, pin=True,
-                                                  n_tokens=s)
+                rows = self.table.ensure_resident(seq_id, pin=True,
+                                                  n_tokens=start + c)
+                if start % self.page:
+                    # the chunk's first write lands mid-page: CoW-split
+                    # a shared prefix tail before the device touches it
+                    self.table.make_writable(seq_id, start // self.page)
+                    rows = self.table.row(seq_id, len(rows))
             finally:
                 self.table.unpin_all()
-            # bucket the padded prompt to a power-of-two page count;
-            # padding pages get an out-of-bounds destination (dropped by
-            # the scatter)
-            n_pages_pad = _pow2(len(phys))
-            phys = list(phys) + [self.hbm_pages] * (n_pages_pad - len(phys))
-            s_pad = n_pages_pad * self.page
-            tokens = np.zeros((1, s_pad), np.int32)
-            tokens[0, :s] = prompt
-            logits, k_pages, v_pages = self._prefill_jit(
+            row = np.zeros((_pow2(len(rows)),), np.int32)
+            row[:len(rows)] = rows
+            tokens = np.zeros((1, _pow2(c)), np.int32)
+            tokens[0, :c] = prompt[start:start + c]
+            logits, k_pages, v_pages = self._chunk_jit(
                 self.params, self.store.k_pages, self.store.v_pages,
-                jnp.asarray(tokens), jnp.asarray(phys, jnp.int32),
-                jnp.asarray(s, jnp.int32))
+                jnp.asarray(row), jnp.asarray(tokens),
+                jnp.asarray(start, jnp.int32), jnp.asarray(c, jnp.int32))
         except Exception:
             # rejected admissions must not leak window pages or leave a
             # zero-length ghost in the live set; a failure inside the
@@ -517,9 +591,37 @@ class PagedServer:
             self._recover_store()
             raise
         self.store.adopt(k_pages, v_pages)
-        self.table.set_length(seq_id, s)
+        self.table.set_length(seq_id, start + c)
+        self.prefill_tokens_computed += c
+        if start + c < s:
+            return None
+        # admission complete: index the prompt's pages for later sharers
+        del self._prefill_state[seq_id]
+        if self.prefix_cache:
+            self.table.register_prefix(seq_id, prompt)
         self._pending[seq_id] = int(jnp.argmax(logits))
         return logits
+
+    def add_request(self, seq_id: int, prompt: np.ndarray, *,
+                    chunk: Optional[int] = None):
+        """Admit a sequence: cached-prefix match, then chunked jitted
+        prefill of only the uncached suffix (``chunk=None`` runs the
+        suffix as a single chunk — the blocking admission of the
+        pre-chunking servers; schedulers that interleave admission with
+        decode drive :meth:`begin_request`/:meth:`prefill_chunk`
+        directly).  Returns the last prompt position's logits [V]."""
+        self.begin_request(seq_id, prompt)
+        logits = None
+        while logits is None:
+            logits = self.prefill_chunk(seq_id, chunk)
+        return logits
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of all admitted prompt tokens served from the
+        prefix cache instead of computed."""
+        saved = self.table.stats.prefix_tokens
+        total = saved + self.prefill_tokens_computed
+        return saved / total if total else 0.0
 
     # -- one committed batched step -------------------------------------------
 
@@ -666,7 +768,7 @@ class PagedServer:
             toks = np.zeros((lengths.shape[0],), np.int32)
             toks[:len(seqs)] = [tokens[s] for s in seqs]
             eos = np.int32(eos_id if eos_id is not None else -1)
-            emitted, k_pages, v_pages = self._horizon_jit(
+            emitted, _, k_pages, v_pages = self._horizon_jit(
                 self.params, self.store.k_pages, self.store.v_pages,
                 page_table, lengths, jnp.asarray(toks), buds,
                 jnp.asarray(eos), horizon=h_run)

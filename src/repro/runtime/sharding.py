@@ -240,25 +240,36 @@ def pool_step_specs():
     (logits, k_pages, v_pages)``.  Params and the control tensors are
     replicated — every node runs the full layer stack (each DockerSSD
     stores the whole model in its flash; the pool parallelism is over
-    the KV extent, per DESIGN.md), only the page windows are split.
-    The prefill step ``(params, k_pages, v_pages, tokens, phys, length)``
-    has the same signature shape, so one spec pair serves both."""
+    the KV extent, per DESIGN.md), only the page windows are split."""
     store = pool_store_spec()
     return ((P(), store, store, P(), P(), P()),
+            (P(), store, store))
+
+
+def pool_chunk_specs():
+    """(in_specs, out_specs) for the shard_mapped prefill chunk
+    ``(params, k_pages, v_pages, page_row, tokens, start, n_valid) ->
+    (logits, k_pages, v_pages)``.  Same replication story as
+    :func:`pool_step_specs`: the chunk's page row / tokens / scalars are
+    replicated control, the logits come out identical on every node
+    (each merges the same LSE partials), only the page windows are
+    split."""
+    store = pool_store_spec()
+    return ((P(), store, store, P(), P(), P(), P()),
             (P(), store, store))
 
 
 def pool_horizon_specs():
     """(in_specs, out_specs) for the shard_mapped fused decode horizon
     ``(params, k_pages, v_pages, page_table, lengths, tokens, budget,
-    eos_id) -> (emitted, k_pages, v_pages)``.  Same replication story as
-    :func:`pool_step_specs` — only the page windows are split; the
-    control-plane carries (lengths/budgets/tokens) are replicated
-    arithmetic, and the emitted token stack is device-invariant because
-    every node argmaxes the *merged* logits."""
+    eos_id) -> (emitted, logits, k_pages, v_pages)``.  Same replication
+    story as :func:`pool_step_specs` — only the page windows are split;
+    the control-plane carries (lengths/budgets/tokens) are replicated
+    arithmetic, and the emitted token stack / final-step logits are
+    device-invariant because every node argmaxes the *merged* logits."""
     store = pool_store_spec()
     return ((P(), store, store, P(), P(), P(), P(), P()),
-            (P(), store, store))
+            (P(), P(), store, store))
 
 
 def to_shardings(mesh: Mesh, spec_tree):

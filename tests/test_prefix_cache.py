@@ -1,0 +1,309 @@
+"""Shared-prefix KV page cache tests.
+
+The contract: prompts whose token prefix matches an already-resident
+sequence share its physical pages (refcount++, zero prefill compute);
+any write into a shared page copy-on-writes a private split first;
+eviction refuses shared pages until every sharer releases; and warm
+(shared-prefix) admissions — one-shot or chunked, interleaved with
+decode under eviction pressure — produce greedy outputs token-identical
+to a cold start.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.kv_tier import PageStore, PageTableManager
+from repro.models.api import get_model
+from repro.runtime.scheduler import ContinuousBatcher, Request
+from repro.runtime.serve import PagedServer
+
+
+def _tiny_model():
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _store(hbm_pages, page=4):
+    return PageStore(n_layers=2, page_size=page, hbm_pages=hbm_pages,
+                     n_kv_heads=2, head_dim=8, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# refcount lifecycle: share -> CoW split -> free (table-manager unit level)
+# ---------------------------------------------------------------------------
+
+
+def test_share_cow_free_lifecycle():
+    t = PageTableManager(_store(16))
+    toks = np.arange(10, dtype=np.int32)        # 2.5 pages @ page=4
+    t.add_sequence(0)
+    t.ensure_resident(0, n_tokens=10)
+    t.set_length(0, 10)
+    t.register_prefix(0, toks)
+
+    # identical prompt: pages 0,1 shared full, tail page shared too
+    # (coverage capped at len-1 so admission still computes logits)
+    t.add_sequence(1)
+    assert t.match_prefix(1, toks) == 9
+    for pi in range(3):
+        assert t._resident[(1, pi)] == t._resident[(0, pi)]
+    assert t.resident_pages == 3                # shared pages count once
+    assert t.stats.prefix_hits == 3
+    assert t.stats.prefix_tokens == 9
+
+    # CoW: the sharer's first append lands mid-page in the shared tail
+    t.prepare_append(1)
+    t.unpin_all()
+    assert t._resident[(1, 2)] != t._resident[(0, 2)]
+    assert t.stats.cow_splits == 1
+    assert t.resident_pages == 4                # split added one page
+
+    # free the owner: shared pages stay with the sharer, the owner's
+    # private tail is retained as reclaimable cache (registered)
+    assert t.free_sequence(0) == 3
+    assert t.resident_pages == 3                # sharer still maps 0,1 + split
+    assert t.cached_pages == 1                  # owner's registered tail
+    # free the sharer: registered pages -> cache, the CoW split (never
+    # registered) -> free list; everything is allocatable again
+    t.free_sequence(1)
+    assert t.resident_pages == 0
+    assert t.free_pages == 16
+
+
+def test_partial_template_share_and_rehit_from_cache():
+    t = PageTableManager(_store(16))
+    template = np.arange(8, dtype=np.int32)     # exactly 2 full pages
+    a = np.concatenate([template, np.array([50, 51, 52], np.int32)])
+    b = np.concatenate([template, np.array([60, 61], np.int32)])
+    t.add_sequence(0)
+    t.ensure_resident(0, n_tokens=a.shape[0])
+    t.set_length(0, a.shape[0])
+    t.register_prefix(0, a)
+    t.add_sequence(1)
+    assert t.match_prefix(1, b) == 8            # template pages only
+    assert t._resident[(1, 0)] == t._resident[(0, 0)]
+    assert t._resident[(1, 1)] == t._resident[(0, 1)]
+    # after every sequence retires, the template persists as cache and
+    # a later identical prompt still hits warm
+    t.free_sequence(0)
+    t.free_sequence(1)
+    assert t.resident_pages == 0
+    t.add_sequence(2)
+    assert t.match_prefix(2, b) == 8
+
+
+# ---------------------------------------------------------------------------
+# eviction refuses shared pages until all sharers release
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_refuses_shared_pages():
+    t = PageTableManager(_store(6))
+    toks = np.arange(8, dtype=np.int32)         # 2 full pages
+    t.add_sequence(0)
+    t.ensure_resident(0, n_tokens=8)
+    t.set_length(0, 8)
+    t.register_prefix(0, toks)
+    t.add_sequence(1)
+    assert t.match_prefix(1, toks) == 7         # shares both pages
+    # window has 6 pages: 2 shared + 4 free.  A 5-page demand must spill
+    # only unshared pages; the shared ones never leave HBM.
+    shared_phys = {t._resident[(0, 0)], t._resident[(0, 1)]}
+    t.add_sequence(2)
+    t.ensure_resident(2, n_tokens=17)           # 5 pages -> one eviction
+    assert t.stats.page_outs >= 1
+    for pi in (0, 1):                           # both sharers intact
+        assert t._resident[(0, pi)] in shared_phys
+        assert t._resident[(1, pi)] in shared_phys
+    # the spilled page was the demanding sequence's own, never a shared
+    # one — shared pages are not evictable while any sharer holds them
+    assert all(k[0] == 2 for k in t._host)
+
+    # once every sharer releases, the pages become reclaimable again
+    t.free_sequence(0)
+    t.free_sequence(1)
+    t.add_sequence(3)
+    t.ensure_resident(3, n_tokens=4)            # reclaims cache slots
+    assert t.resident_pages == 5                # 4 of seq 2 + 1 of seq 3
+    assert t.host_pages == 1
+
+
+def test_eviction_error_when_only_shared_left():
+    t = PageTableManager(_store(2))
+    toks = np.arange(8, dtype=np.int32)
+    t.add_sequence(0)
+    t.ensure_resident(0, n_tokens=8)
+    t.set_length(0, 8)
+    t.register_prefix(0, toks)
+    t.add_sequence(1)
+    t.match_prefix(1, toks)                     # both pages shared
+    t.add_sequence(2)
+    with pytest.raises(RuntimeError, match="pinned working set"):
+        t.ensure_resident(2, n_tokens=4)
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix decode == cold start (server level)
+# ---------------------------------------------------------------------------
+
+
+def test_shared_prefix_decode_matches_cold_start():
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    prompts = [np.concatenate([template, rng.integers(
+        0, cfg.vocab_size, 5, dtype=np.int32)]) for _ in range(3)]
+    gen = 6
+
+    def run(prefix_cache, chunk):
+        srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                          dtype=jnp.float32, prefix_cache=prefix_cache)
+        outs = {}
+        for i, p in enumerate(prompts):
+            outs[i] = [int(jnp.argmax(srv.add_request(i, p, chunk=chunk)))]
+        for i, toks in srv.decode(gen).items():
+            outs[i] += toks
+        return outs, srv
+
+    cold, _ = run(False, None)
+    warm, srv = run(True, None)                 # in-run template sharing
+    assert warm == cold
+    assert srv.table.stats.prefix_hits > 0
+    assert srv.prefix_hit_rate() > 0.2
+    chunked, srv2 = run(True, 4)                # chunked warm admissions
+    assert chunked == cold
+    # warm re-admission on a live cache: whole prompt served from pages
+    srv2.free_sequence(0)
+    computed0 = srv2.prefill_tokens_computed
+    out = [int(jnp.argmax(srv2.add_request(0, prompts[0], chunk=4)))]
+    assert srv2.prefill_tokens_computed - computed0 == 1
+    out += srv2.decode(gen, seqs=[0])[0]
+    assert out == cold[0]
+
+
+def test_cow_isolates_sharers_decode():
+    """Two sequences sharing a partially-filled tail page must decode
+    independently: the first writer splits the page and neither sees
+    the other's appends."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 10, dtype=np.int32)
+    gen = 5
+
+    cold_srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                           dtype=jnp.float32, prefix_cache=False)
+    cold_srv.add_request(0, prompt)
+    cold = cold_srv.decode(gen, seqs=[0])[0]
+
+    srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                      dtype=jnp.float32)
+    srv.add_request(0, prompt)
+    srv.add_request(1, prompt)                  # shares the tail page
+    out0 = srv.decode(gen, seqs=[0])[0]         # writer 0 CoWs
+    out1 = srv.decode(gen, seqs=[1])[1]         # writer 1 CoWs its own
+    assert srv.table.stats.cow_splits >= 1
+    assert out0 == cold and out1 == cold
+
+
+# ---------------------------------------------------------------------------
+# eviction-pressure interleaving with chunked admission
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_admission_interleaves_under_eviction_pressure():
+    """A window smaller than two working sets, a shared template,
+    chunked warm admissions and fused decode horizons: the idle
+    sequence's unshared pages spill and page back, shared template
+    pages never leave HBM, and every output matches the cold roomy
+    run."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(1)
+    template = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    prompts = [np.concatenate([template, rng.integers(
+        0, cfg.vocab_size, 4, dtype=np.int32)]) for _ in range(2)]
+    gen = 4
+
+    ref = PagedServer(model, params, page_size=4, hbm_pages=64,
+                      dtype=jnp.float32, prefix_cache=False)
+    srv = PagedServer(model, params, page_size=4, hbm_pages=4,
+                      dtype=jnp.float32)
+    for i, p in enumerate(prompts):
+        la = ref.add_request(i, p)
+        lb = srv.add_request(i, p, chunk=4)     # chunked warm admission
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-4)
+    assert srv.table.stats.prefix_hits > 0      # template shared
+    o_ref1 = ref.decode(gen, seqs=[1])
+    o_srv1 = srv.decode(gen, seqs=[1], horizon=4)   # seq 0 spills
+    o_ref0 = ref.decode(gen, seqs=[0])
+    o_srv0 = srv.decode(gen, seqs=[0], horizon=4)   # seq 0 pages back
+    assert o_ref1 == o_srv1 and o_ref0 == o_srv0
+    assert srv.tier_stats()["page_outs"] > 0
+    assert srv.tier_stats()["page_ins"] > 0
+
+
+def test_batcher_chunked_matches_blocking_cold_schedule():
+    """ContinuousBatcher(prefill_chunk=C) — admissions advanced one
+    chunk per iteration between decode horizons — must finish every
+    request with output identical to the blocking per-token cold
+    schedule, and reclaim every page."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(4)
+    template = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    prompts = [np.concatenate([template, rng.integers(
+        0, cfg.vocab_size, 4, dtype=np.int32)]) for _ in range(4)]
+    gens = [5, 3, 6, 4]
+
+    def run(prefix_cache, chunk, horizon):
+        srv = PagedServer(model, params, page_size=4, hbm_pages=16,
+                          dtype=jnp.float32, prefix_cache=prefix_cache)
+        b = ContinuousBatcher(srv, max_active=2, horizon=horizon,
+                              prefill_chunk=chunk)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            b.submit(Request(rid=i, prompt=p, max_tokens=g))
+        stats = b.run_to_completion()
+        assert stats["requests"] == 4
+        assert srv.table.free_pages == srv.hbm_pages    # all reclaimed
+        assert len(srv.table._pinned) == 0
+        return {r.rid: r.output for r in b.finished}, srv
+
+    ref, _ = run(False, None, 1)                # cold, blocking
+    got, srv = run(True, 4, 4)                  # warm, chunked
+    assert got == ref
+    assert srv.table.stats.prefix_hits > 0      # sharing was real
+
+
+# ---------------------------------------------------------------------------
+# no-retrace: chunked prefill compiles once per pow2 (chunk, row) bucket
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_no_retrace_across_sizes():
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(2)
+    srv = PagedServer(model, params, page_size=4, hbm_pages=64,
+                      dtype=jnp.float32)
+    if not hasattr(srv._chunk_jit, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this jax")
+
+    def admit(seq, n_tokens, chunk):
+        srv.add_request(seq, rng.integers(0, cfg.vocab_size, n_tokens,
+                                          dtype=np.int32), chunk=chunk)
+
+    admit(0, 13, 4)          # chunks 4,4,4,1 -> buckets C=4, C=1
+    sig0 = srv._chunk_jit._cache_size()
+    admit(1, 11, 4)          # chunks 4,4,3 -> same buckets, same rows
+    assert srv._chunk_jit._cache_size() == sig0
+    admit(2, 9, 3)           # chunks 3,3,3 -> C=4 bucket again
+    assert srv._chunk_jit._cache_size() == sig0
+    admit(3, 16, None)       # one-shot: C=16 -> exactly one new trace
+    assert srv._chunk_jit._cache_size() == sig0 + 1
+    admit(4, 15, None)       # C bucket 16 again, shorter row
+    assert srv._chunk_jit._cache_size() == sig0 + 1
