@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--horizon", type=int, default=8,
                     help="fused decode-horizon length for the horizon "
                          "cell (0 disables)")
+    ap.add_argument("--page-dtype", choices=["fp32", "int8", "fp8"],
+                    default="fp32",
+                    help="KV page storage format (quantized pages "
+                         "decode through the fused-dequant kernel)")
     args = ap.parse_args()
 
     flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
@@ -64,19 +68,21 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
                             dtype=np.int32) for _ in range(args.requests)]
 
-    rec = {"nodes": args.nodes, "mode": args.mode}
+    rec = {"nodes": args.nodes, "mode": args.mode,
+           "page_dtype": args.page_dtype}
     if args.mode == "single":
         from repro.runtime.serve import PagedServer
         server = PagedServer(model, params, page_size=args.page_size,
                              hbm_pages=8 * args.requests,
-                             dtype=jnp.float32)
+                             dtype=jnp.float32,
+                             page_dtype=args.page_dtype)
         pool = None
     else:
         from repro.runtime.pool import PoolServer
         server = PoolServer(
             model, params, n_nodes=args.nodes, page_size=args.page_size,
             hbm_pages_per_node=-(-8 * args.requests // args.nodes),
-            dtype=jnp.float32)
+            dtype=jnp.float32, page_dtype=args.page_dtype)
         pool = StoragePool(args.nodes)
         pool.attach_server(server)
 

@@ -366,6 +366,88 @@ def _shared_prefix_cell(model, params, cfg, rng, quick=False):
     return cell
 
 
+def _capacity_cell(model, params, cfg, rng):
+    """Equal-HBM capacity cell (quantized KV page format): the window
+    is sized from one byte budget for both formats, so the cell
+    measures how many concurrent sequences fit *resident* (decode with
+    zero spill) in fp32 vs int8 pages — the acceptance floor is int8
+    >= 2x fp32.  Also records the per-spilled-page cold-tier bytes of
+    each format (a page_outs-forcing run) and decisive-logit argmax
+    agreement between the formats at admission."""
+    import jax.numpy as jnp
+    from repro.runtime.serve import PagedServer
+
+    prompt_len, gen = 16, 4
+    total = prompt_len + gen
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+               for _ in range(64)]
+
+    probe = PagedServer(model, params, page_size=8, hbm_pages=8,
+                        dtype=jnp.float32)
+    budget = 6 * probe.pages_needed(total) * probe.store.page_bytes()
+
+    cells = {}
+    for pd in ("fp32", "int8"):
+        srv = PagedServer(model, params, page_size=8, hbm_bytes=budget,
+                          dtype=jnp.float32, page_dtype=pd)
+        per_seq = srv.pages_needed(total)
+        cap = srv.table.free_pages // per_seq
+        logits = [np.asarray(srv.add_request(i, prompts[i]))
+                  for i in range(cap)]
+        srv.decode(gen - 1)
+        st = srv.tier_stats()
+        assert st["page_outs"] == 0, \
+            f"{pd}: capacity run spilled — window math is wrong"
+
+        # cold-tier sub-cell: force spills through a tiny window and
+        # read the per-page bytes the host tier actually received
+        tiny = PagedServer(model, params, page_size=8, hbm_pages=4,
+                           dtype=jnp.float32, page_dtype=pd)
+        for i in range(3):
+            tiny.add_request(i, prompts[i])
+        tst = tiny.tier_stats()
+        assert tst["page_outs"] > 0
+        cells[pd] = {
+            "max_resident_seqs": cap,
+            "window_pages": srv.table.free_pages + cap * per_seq,
+            "page_bytes": st["page_bytes"],
+            "spill_bytes_per_page": tst["bytes_out"] / tst["page_outs"],
+            "admission_argmax": [int(np.argmax(l)) for l in logits],
+            "admission_logits": logits,
+        }
+
+    # decisive-logit parity across formats on the shared admissions
+    n = min(cells["fp32"]["max_resident_seqs"],
+            cells["int8"]["max_resident_seqs"])
+    lf = np.stack(cells["fp32"].pop("admission_logits")[:n])
+    lq = np.stack(cells["int8"].pop("admission_logits")[:n])
+    srt = np.sort(lf, -1)
+    decisive = srt[:, -1] - srt[:, -2] > 0.05
+    agree = bool((lf.argmax(-1)[decisive] == lq.argmax(-1)[decisive]).all())
+
+    cap_ratio = (cells["int8"]["max_resident_seqs"] /
+                 cells["fp32"]["max_resident_seqs"])
+    byte_ratio = (cells["fp32"]["spill_bytes_per_page"] /
+                  cells["int8"]["spill_bytes_per_page"])
+    cell = {"hbm_byte_budget": budget, "prompt_len": prompt_len,
+            "gen": gen, "fp32": cells["fp32"], "int8": cells["int8"],
+            "capacity_ratio": cap_ratio,
+            "cold_tier_bytes_ratio": byte_ratio,
+            "decisive_positions": int(decisive.sum()),
+            "decisive_argmax_agree": agree}
+    print(f"  capacity @ equal HBM ({budget} B): fp32 "
+          f"{cells['fp32']['max_resident_seqs']} seqs | int8 "
+          f"{cells['int8']['max_resident_seqs']} seqs "
+          f"({cap_ratio:.1f}x) | cold-tier bytes/page "
+          f"{byte_ratio:.1f}x smaller | decisive argmax agree {agree}")
+    assert cap_ratio >= 2.0, \
+        f"int8 capacity {cap_ratio:.2f}x < 2x floor at equal HBM bytes"
+    assert byte_ratio >= 2.0, \
+        f"int8 cold-tier bytes only {byte_ratio:.2f}x smaller"
+    assert agree, "int8 flipped a decisive fp32 argmax at admission"
+    return cell
+
+
 def serve_decode(out_path="BENCH_serve.json", quick=False):
     """Decode-throughput micro-benchmark on the demo config
     (examples/serve_pool.py scale): tokens/s of the single jitted
@@ -398,6 +480,7 @@ def serve_decode(out_path="BENCH_serve.json", quick=False):
     # state (its ms-scale admission cells are the most noise-sensitive)
     shared_prefix = _shared_prefix_cell(model, params, cfg, rng,
                                         quick=quick)
+    capacity = _capacity_cell(model, params, cfg, rng)
     n_req, prompt_len, gen = 4, 24, (8 if quick else 16)
     horizons = [1, 8] if quick else [1, 2, 4, 8]
     prompts = [rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
@@ -498,6 +581,7 @@ def serve_decode(out_path="BENCH_serve.json", quick=False):
         "prefill_s": prefill_s,
         "prefill_batch_s": t_prefill,
         "shared_prefix": shared_prefix,
+        "capacity": capacity,
         "decode_tokens_per_s": tok_s,
         "reference_tokens_per_s": ref_tok_s,
         "speedup_vs_reference": speedup,
@@ -777,6 +861,47 @@ def isp_offload(out_path="BENCH_isp.json", quick=False):
         delta, bytes_scanned=nbytes * len(jobs), n_jobs=len(jobs))
     assert result["data_plane"]["reduction_ratio"] > 100, \
         "in-storage reduce must move orders of magnitude fewer bytes"
+    # quantized-extent cell: the same reduce over an int8 extent store
+    # (codes + per-row f32 scales).  The dequantizing in-storage fold
+    # must stay bit-identical to the host path (which now fetches
+    # codes+scales over the tunnel and dequantizes at the far end), and
+    # the planner must price the smaller reads
+    qpool = StoragePool(1, extent_cfg={
+        "n_pages": rows // page_rows + 2, "page_rows": page_rows,
+        "n_cols": cols, "page_dtype": "int8"})
+    qpool.broadcast_pull("isp-analytics", analytics_blob())
+    qip = qpool.alive_nodes()[0]
+    qdata = rng.normal(size=(rows, cols)).astype(np.float32)
+    qpool.nodes[qip].extents.put("q-ext", qdata)
+    qjob = AnalyticsJob(extent="q-ext", filter_col=0, filter_op="ge",
+                        threshold=0.0, job_id=0)
+    qplanner = OffloadPlanner(qpool)
+    qest = qplanner.estimate(qjob)
+    b0 = qpool.driver.stats.bytes_rx
+    qhost = np.asarray(ops.scan_filter_reduce_host(
+        jnp.asarray(qpool.driver.fetch_extent(qip, "q-ext")), 0.0,
+        page_rows=page_rows, filter_col=0, filter_op="ge"))
+    q_wire = qpool.driver.stats.bytes_rx - b0
+    qisp = from_jsonable(qpool.driver.submit_jobs(qip,
+                                                  [qjob.to_dict()]))[0]
+    q_identical = bool(np.array_equal(qhost, qisp))
+    result["quantized_extent"] = {
+        "page_dtype": "int8",
+        "bit_identical": q_identical,
+        "nbytes_fp32": nbytes, "nbytes_int8": qest.bytes_scanned,
+        "nbytes_ratio": nbytes / qest.bytes_scanned,
+        "host_fetch_wire_bytes": q_wire,
+        "wire_ratio": nbytes / q_wire,
+    }
+    print(f"  int8 extent: bit-identical {q_identical} | planner prices "
+          f"{nbytes / qest.bytes_scanned:.1f}x fewer bytes | host fetch "
+          f"moved {q_wire} B ({nbytes / q_wire:.1f}x less wire)")
+    assert q_identical, "quantized in-storage fold != host dequant fold"
+    assert nbytes / qest.bytes_scanned >= 2.0, \
+        "int8 extents must at least halve the planner's priced bytes"
+    assert nbytes / q_wire >= 2.0, \
+        "int8 extents must at least halve the host-fetch wire bytes"
+
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     mn = min(w["measured_speedup"] for w in result["workloads"].values())

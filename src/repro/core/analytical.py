@@ -92,12 +92,34 @@ class HW:
 # ---------------------------------------------------------------------------
 
 
-def kv_bytes_per_token(m: LLM, hw: HW) -> float:
-    return 2 * m.n_layers * m.d_model * hw.bytes_per
+# effective bytes per stored KV element by page format (runtime.serve's
+# ``page_dtype`` knob); quantized formats add the per-slot f32 scale,
+# amortized over the head_dim lanes it covers
+PAGE_DTYPE_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0, "fp8": 1.0}
+
+
+def page_dtype_bytes_per_elem(page_dtype: str, head_dim: int = 128) -> float:
+    base = PAGE_DTYPE_BYTES[page_dtype]
+    if page_dtype in ("int8", "fp8"):
+        base += 4.0 / max(head_dim, 1)
+    return base
+
+
+def kv_bytes_per_token(m: LLM, hw: HW, page_dtype: str = None) -> float:
+    """KV bytes per cached token.  Default prices at ``hw.bytes_per``
+    (the calibrated bf16 story); passing a page format prices at that
+    format's code+scale size — the knob the Fig-13 sensitivity sweeps
+    turn to see quantization shift the D/H crossover."""
+    if page_dtype is None:
+        return 2 * m.n_layers * m.d_model * hw.bytes_per
+    hd = max(m.d_model // max(m.n_heads, 1), 1)
+    return 2 * m.n_layers * m.d_model * page_dtype_bytes_per_elem(
+        page_dtype, hd)
 
 
 def step_time(m: LLM, *, t: int, batch: int, dp: int, tp: int, pp: int,
-              cache: bool, device: str, hw: HW = HW()) -> Dict[str, float]:
+              cache: bool, device: str, hw: HW = HW(),
+              page_dtype: str = None) -> Dict[str, float]:
     """Latency of generating token t (context length t), per microstep.
 
     Returns dict with compute/memory/comm components (seconds).
@@ -108,7 +130,7 @@ def step_time(m: LLM, *, t: int, batch: int, dp: int, tp: int, pp: int,
     attn = 4 * m.n_layers * m.d_model            # attention MACs/token/ctx
     if cache:
         flops = (2 * m.n_params + attn * t) * b_local   # one token forward
-        kv_read = kv_bytes_per_token(m, hw) * t * b_local
+        kv_read = kv_bytes_per_token(m, hw, page_dtype) * t * b_local
     else:
         # recompute the whole prefix: O(t) weight flops + O(t^2) attention
         flops = (2 * m.n_params * t + attn * t * t) * b_local
@@ -134,7 +156,8 @@ def step_time(m: LLM, *, t: int, batch: int, dp: int, tp: int, pp: int,
     # the latency-relevant read volume divides by tp only.
     if device == "host":
         if cache:
-            kv_total_gb = kv_bytes_per_token(m, hw) * t * b_local / (tp * pp) / 1e9
+            kv_total_gb = (kv_bytes_per_token(m, hw, page_dtype) * t *
+                           b_local / (tp * pp) / 1e9)
             # DP replicates weights; only tp*pp shrinks the footprint
             dram_free = max(hw.dram_gb - hw.weight_overhead * m.n_params *
                             hw.bytes_per / (tp * pp) / 1e9, 0.5)
@@ -164,6 +187,7 @@ def step_time(m: LLM, *, t: int, batch: int, dp: int, tp: int, pp: int,
 
 def generation_time(m: LLM, *, seq_len: int, batch: int, dp: int, tp: int,
                     pp: int, cache: bool, device: str, hw: HW = HW(),
+                    page_dtype: str = None,
                     sample_points: int = 24) -> Dict[str, float]:
     """Total time to generate ``seq_len`` tokens (trapezoidal sampling of
     the per-step cost over t)."""
@@ -173,7 +197,8 @@ def generation_time(m: LLM, *, seq_len: int, batch: int, dp: int, tp: int,
     prev_t = 0
     for t in ts:
         st = step_time(m, t=t, batch=batch, dp=dp, tp=tp, pp=pp,
-                       cache=cache, device=device, hw=hw)
+                       cache=cache, device=device, hw=hw,
+                       page_dtype=page_dtype)
         w = t - prev_t
         comp += st["compute"] * w
         mem += st["memory"] * w
@@ -202,7 +227,8 @@ def factorizations(n: int) -> List[Tuple[int, int, int]]:
 
 
 def best_parallelism(m: LLM, *, n_nodes: int, seq_len: int, batch: int,
-                     cache: bool, device: str, hw: HW = HW()):
+                     cache: bool, device: str, hw: HW = HW(),
+                     page_dtype: str = None):
     """Sweep (dp, tp, pp); return (best cfg, its time breakdown)."""
     best, best_t = None, None
     for dp, tp, pp in factorizations(n_nodes):
@@ -223,7 +249,8 @@ def best_parallelism(m: LLM, *, n_nodes: int, seq_len: int, batch: int,
             if w_gb > 400.0:
                 continue
         t = generation_time(m, seq_len=seq_len, batch=batch, dp=dp, tp=tp,
-                            pp=pp, cache=cache, device=device, hw=hw)
+                            pp=pp, cache=cache, device=device, hw=hw,
+                            page_dtype=page_dtype)
         if best_t is None or t["total"] < best_t["total"]:
             best, best_t = (dp, tp, pp), t
     return best, best_t
@@ -434,6 +461,27 @@ def fit_horizon_overheads(h_a: int, tok_s_a: float, h_b: int,
     # (host clamps to 0 -> dev falls back to the faster measured rate)
     dev = min(max(ta - host / h_a, 0.0), min(ta, tb))
     return host, dev
+
+
+def kv_tier_terms(tier_stats, hw: HW = HW()) -> Dict[str, float]:
+    """Tier-traffic terms from a serving run's ``tier_stats()``
+    aggregate: host<->HBM KV page movement, priced dtype-aware (a
+    quantized page ships its codes+scales, never an inflated f32 copy —
+    the counters already reflect that).  ``modeled_tier_s`` prices the
+    movement at the D-Cache λFS flash path, the tier the host window
+    spills to in the paper's placement."""
+    moved = float(tier_stats.get(
+        "kv_bytes_moved",
+        tier_stats.get("bytes_in", 0) + tier_stats.get("bytes_out", 0)))
+    page_bytes = float(tier_stats.get("page_bytes", 0) or 0)
+    return {
+        "kv_bytes_moved": moved,
+        "page_bytes": page_bytes,
+        "pages_moved": moved / page_bytes if page_bytes else 0.0,
+        "bytes_in": float(tier_stats.get("bytes_in", 0)),
+        "bytes_out": float(tier_stats.get("bytes_out", 0)),
+        "modeled_tier_s": moved / hw.flash_local_bw,
+    }
 
 
 def data_plane_terms(ether_stats, bytes_scanned: int,

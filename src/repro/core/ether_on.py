@@ -195,7 +195,10 @@ class EtherONDriver:
 
     def fetch_extent(self, dst_ip: str, name: str):
         """The host baseline: read a whole extent back over the tunnel
-        (every byte pays frame costs — the traffic ISP offload avoids)."""
+        (every byte pays frame costs — the traffic ISP offload avoids).
+        A quantized extent (``qscale`` in the header) arrives as codes
+        followed by per-row f32 scales; the host dequantizes here, so
+        the wire carried only the quantized bytes."""
         import numpy as np
         self.stats.extent_reads += 1
         self.transmit(EthernetFrame(self.host_ip, dst_ip,
@@ -205,8 +208,18 @@ class EtherONDriver:
         meta = json.loads(header)
         if "error" in meta:
             raise EtherONError(f"node {dst_ip}: {meta['error']}")
-        return np.frombuffer(raw, meta["dtype"]).reshape(
-            meta["rows"], meta["cols"]).copy()
+        rows, cols = meta["rows"], meta["cols"]
+        try:
+            dt = np.dtype(meta["dtype"])
+        except TypeError:
+            import ml_dtypes                       # fp8 codes (jax dep)
+            dt = np.dtype(getattr(ml_dtypes, meta["dtype"]))
+        if meta.get("qscale"):
+            nb = rows * cols * dt.itemsize
+            codes = np.frombuffer(raw[:nb], dt).reshape(rows, cols)
+            scales = np.frombuffer(raw[nb:nb + rows * 4], np.float32)
+            return codes.astype(np.float32) * scales[:, None]
+        return np.frombuffer(raw, dt).reshape(rows, cols).copy()
 
     def _collect_response(self, tag: bytes) -> bytes:
         frame = self.poll()

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.core.container import (ContainerError, ImageManifest, make_blob,
                                   register_app)
+from repro.core.kv_tier import (PAGE_DTYPES, _fp8_dtype, dequantize_page_kv,
+                                quantize_page_kv)
 from repro.kernels import ops
 from repro.kernels.isp_scan import FILTER_OPS, REDUCE_ROWS
 
@@ -48,10 +50,17 @@ class Extent:
     page_ids: List[int]
     n_rows: int
     n_cols: int                     # logical columns (<= store n_cols)
+    # stored bytes per row (codes + per-row scale for quantized
+    # stores); None falls back to f32 rows — keeping old pickles valid
+    row_bytes: Optional[int] = None
 
     @property
     def nbytes(self) -> int:
-        """Logical bytes the host baseline must move to read this."""
+        """Stored bytes the host baseline must move to read this —
+        dtype-aware, so the OffloadPlanner prices quantized extent
+        reads at their (smaller) real transfer size."""
+        if self.row_bytes is not None:
+            return self.n_rows * self.row_bytes
         return self.n_rows * self.n_cols * 4
 
 
@@ -65,19 +74,45 @@ class ExtentStore:
     """
 
     def __init__(self, *, n_pages: int = 64, page_rows: int = 128,
-                 n_cols: int = 128):
+                 n_cols: int = 128, page_dtype: str = "fp32"):
+        if page_dtype not in PAGE_DTYPES:
+            raise ValueError(f"page_dtype must be one of {PAGE_DTYPES}, "
+                             f"got {page_dtype!r}")
+        if page_dtype == "fp8" and _fp8_dtype() is None:
+            raise ValueError("page_dtype='fp8' needs jnp.float8_e4m3fn "
+                             "(unavailable on this jax build); use 'int8'")
         self.n_pages = n_pages
         self.page_rows = page_rows
         self.n_cols = n_cols
-        self.pages = jnp.zeros((n_pages, page_rows, n_cols), jnp.float32)
+        self.page_dtype = page_dtype
+        self.quantized = page_dtype in ("int8", "fp8")
+        if page_dtype == "int8":
+            self.code_dtype, self.qmax = jnp.int8, 127.0
+        elif page_dtype == "fp8":
+            self.code_dtype, self.qmax = _fp8_dtype(), 448.0
+        else:
+            self.code_dtype, self.qmax = jnp.float32, 0.0
+        self.pages = jnp.zeros((n_pages, page_rows, n_cols),
+                               self.code_dtype)
+        # per-row scales of a quantized pool (1.0 keeps untouched pages
+        # dequantizing to zero); None for full precision
+        self.scales = (jnp.ones((n_pages, page_rows), jnp.float32)
+                       if self.quantized else None)
         self.extents: Dict[str, Extent] = {}
         self._free: List[int] = list(range(n_pages))
 
     # -- capacity ------------------------------------------------------------
 
     @property
+    def row_nbytes(self) -> int:
+        """Stored bytes per row: codes (+ the row's f32 scale when
+        quantized)."""
+        per = self.n_cols * jnp.dtype(self.code_dtype).itemsize
+        return per + (4 if self.quantized else 0)
+
+    @property
     def page_nbytes(self) -> int:
-        return self.page_rows * self.n_cols * 4
+        return self.page_rows * self.row_nbytes
 
     def free_pages(self) -> int:
         return len(self._free)
@@ -106,20 +141,47 @@ class ExtentStore:
         padded = np.zeros((need * self.page_rows, self.n_cols), np.float32)
         padded[:rows, :cols] = arr
         blocks = padded.reshape(need, self.page_rows, self.n_cols)
-        self.pages = self.pages.at[jnp.asarray(ids, jnp.int32)].set(
-            jnp.asarray(blocks))
-        ext = Extent(name, ids, rows, cols)
+        idx = jnp.asarray(ids, jnp.int32)
+        if self.quantized:
+            # per-row symmetric quantization at ingest: the flash holds
+            # codes + a [page_rows] scale column per page
+            codes, scale = quantize_page_kv(jnp.asarray(blocks),
+                                            self.qmax, self.code_dtype)
+            self.pages = self.pages.at[idx].set(codes)
+            self.scales = self.scales.at[idx].set(scale)
+        else:
+            self.pages = self.pages.at[idx].set(jnp.asarray(blocks))
+        ext = Extent(name, ids, rows, cols, row_bytes=self.row_nbytes)
         self.extents[name] = ext
         return ext
 
     def get(self, name: str) -> np.ndarray:
         """Read a whole extent back to the host (the baseline's full
-        transfer; the ISP path never calls this)."""
+        transfer; the ISP path never calls this).  Quantized extents
+        dequantize host-side — the same elementwise f32 multiply the
+        kernel applies per page in VMEM, so a page-sequential fold over
+        this array is bit-identical to the in-storage path."""
         ext = self._extent(name)
-        flat = np.asarray(
-            self.pages[jnp.asarray(ext.page_ids, jnp.int32)]
-        ).reshape(-1, self.n_cols)
+        idx = jnp.asarray(ext.page_ids, jnp.int32)
+        pages = self.pages[idx]
+        if self.quantized:
+            pages = dequantize_page_kv(pages, self.scales[idx])
+        flat = np.asarray(pages).reshape(-1, self.n_cols)
         return flat[:ext.n_rows, :ext.n_cols]
+
+    def raw_extent(self, name: str):
+        """The extent as stored: ``(codes [n_rows, n_cols], scales
+        [n_rows] | None)`` — what crosses the wire on a remote read
+        (Ether-oN data frames ship the quantized bytes, never an
+        inflated f32 copy; the reader dequantizes at the far end)."""
+        ext = self._extent(name)
+        idx = jnp.asarray(ext.page_ids, jnp.int32)
+        codes = np.asarray(self.pages[idx]).reshape(-1, self.n_cols)
+        codes = codes[:ext.n_rows, :ext.n_cols]
+        if not self.quantized:
+            return codes, None
+        scales = np.asarray(self.scales[idx]).reshape(-1)[:ext.n_rows]
+        return codes, scales
 
     def drop(self, name: str):
         ext = self.extents.pop(name, None)
@@ -249,6 +311,7 @@ def isp_analytics(ctx, jobs=None, job_pages=None):
             block = ops.scan_filter_reduce(
                 store.pages, store.page_table(job.extent),
                 store.extents[job.extent].n_rows, job.threshold,
+                scales=store.scales,
                 filter_col=job.filter_col, filter_op=job.filter_op)
             results.append(np.asarray(jax.block_until_ready(block)))
         finally:

@@ -45,6 +45,45 @@ import jax
 import jax.numpy as jnp
 
 
+#: accepted values of the ``page_dtype`` knob.  ``fp32`` is shorthand
+#: for "full precision at the store's compute dtype" (the default and
+#: correctness baseline); ``int8``/``fp8`` store quantized codes with a
+#: parallel per-slot, per-head f32 scale array.
+PAGE_DTYPES = ("fp32", "int8", "fp8")
+
+#: version tag mixed into every prefix-cache digest: bump when the
+#: page layout changes so persisted/shared digests can never alias
+#: across incompatible formats
+PAGE_FORMAT_VERSION = 2
+
+
+def _fp8_dtype():
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def quantize_page_kv(x, qmax: float, code_dtype):
+    """Symmetric per-slot (per-token), per-head quantization of KV.
+
+    x: [..., D] float -> (codes [..., D] ``code_dtype``, scale [...]
+    f32).  Same semantics as ``models.layers.quantize_kv`` (scale =
+    amax/qmax clamped away from zero); usable inside jit — the serving
+    hot path quantizes at append time, on device.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / qmax
+    y = xf / scale[..., None]
+    if jnp.dtype(code_dtype) == jnp.int8:
+        codes = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:                                   # fp8: cast rounds, clip first
+        codes = jnp.clip(y, -qmax, qmax).astype(code_dtype)
+    return codes, scale
+
+
+def dequantize_page_kv(codes, scale):
+    """Exact inverse map: codes [..., D] x scale [...] -> f32 [..., D]."""
+    return codes.astype(jnp.float32) * scale[..., None]
+
+
 @dataclasses.dataclass
 class KVTierStats:
     page_ins: int = 0
@@ -69,63 +108,205 @@ class PageStore:
     feeds to the Pallas paged_attention kernel.  All mutation from the
     serving hot path happens *inside* jit (batched scatters); the
     manager only moves whole stacked pages across the HBM/host boundary.
+
+    **Quantized page format** (``page_dtype`` in {"int8", "fp8"}): the
+    page arrays hold codes and a parallel per-slot, per-head scale
+    array ``k_scale``/``v_scale`` [n_layers, hbm_pages, page,
+    n_kv_heads] f32 travels with them through the entire page
+    lifecycle — appends quantize on device at write time, CoW splits
+    copy codes AND scales, host-tier spill/prefetch moves the
+    quantized bytes, and attention dequantizes in-register (never a
+    materialized fp32 page).  Scales are per slot rather than per page
+    so decode appends never requantize already-written positions
+    (DESIGN.md §Quantized page format).
     """
 
     def __init__(self, *, n_layers: int, page_size: int, hbm_pages: int,
-                 n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+                 n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
+                 page_dtype: str = "fp32"):
+        if page_dtype not in PAGE_DTYPES:
+            raise ValueError(f"page_dtype must be one of {PAGE_DTYPES}, "
+                             f"got {page_dtype!r}")
+        if page_dtype == "fp8" and _fp8_dtype() is None:
+            raise ValueError("page_dtype='fp8' needs jnp.float8_e4m3fn "
+                             "(unavailable on this jax build); use 'int8'")
         self.n_layers = n_layers
         self.page = page_size
         self.hbm_pages = hbm_pages
         self.hkv = n_kv_heads
         self.hd = head_dim
         self.dtype = dtype
+        self.page_dtype = page_dtype
+        self.quantized = page_dtype in ("int8", "fp8")
+        if page_dtype == "int8":
+            self.code_dtype, self.qmax = jnp.int8, 127.0
+        elif page_dtype == "fp8":
+            self.code_dtype, self.qmax = _fp8_dtype(), 448.0
+        else:
+            self.code_dtype, self.qmax = dtype, 0.0
         shape = (n_layers, hbm_pages, page_size, n_kv_heads, head_dim)
-        self.k_pages = jnp.zeros(shape, dtype)
-        self.v_pages = jnp.zeros(shape, dtype)
+        self.k_pages = jnp.zeros(shape, self.code_dtype)
+        self.v_pages = jnp.zeros(shape, self.code_dtype)
+        if self.quantized:
+            sshape = (n_layers, hbm_pages, page_size, n_kv_heads)
+            self.k_scale = jnp.zeros(sshape, jnp.float32)
+            self.v_scale = jnp.zeros(sshape, jnp.float32)
+        else:
+            self.k_scale = self.v_scale = None
+
+    @property
+    def format_key(self) -> str:
+        """Identity of the page layout: page dtype + the full-precision
+        base dtype + format version.  Mixed into every prefix-cache
+        digest so pages of one format can never alias another's."""
+        return (f"kvpage:v{PAGE_FORMAT_VERSION}:{self.page_dtype}:"
+                f"{jnp.dtype(self.dtype).name}")
+
+    @staticmethod
+    def stacked_page_bytes(*, n_layers: int, page_size: int,
+                           n_kv_heads: int, head_dim: int,
+                           dtype=jnp.bfloat16,
+                           page_dtype: str = "fp32") -> int:
+        """Bytes of one stacked page (k+v, all layers, scales included)
+        without building a store — the capacity planner's constant for
+        sizing a window from a byte budget."""
+        if page_dtype == "int8":
+            code = jnp.dtype(jnp.int8)
+        elif page_dtype == "fp8":
+            fp8 = _fp8_dtype()
+            code = jnp.dtype(fp8 if fp8 is not None else jnp.int8)
+        else:
+            code = jnp.dtype(dtype)
+        n = n_layers * page_size * n_kv_heads
+        per = n * head_dim * code.itemsize
+        if page_dtype in ("int8", "fp8"):
+            per += n * 4                      # per-slot per-head f32 scale
+        return int(per) * 2
 
     def page_bytes(self) -> int:
-        """Bytes of one stacked page (k+v, all layers)."""
-        return int(self.n_layers * self.page * self.hkv * self.hd *
-                   jnp.dtype(self.dtype).itemsize) * 2
+        """Bytes of one stacked page (k+v, all layers) — dtype-aware:
+        quantized stores move code bytes plus scale bytes, so every
+        tier/wire counter derived from this reflects quantization."""
+        return self.stacked_page_bytes(
+            n_layers=self.n_layers, page_size=self.page,
+            n_kv_heads=self.hkv, head_dim=self.hd, dtype=self.dtype,
+            page_dtype=self.page_dtype)
 
     # -- host/device transfers (management path, between jitted steps) ------
 
-    def read_page(self, phys: int) -> Tuple[np.ndarray, np.ndarray]:
-        """HBM -> host: one stacked page [n_layers, page, hkv, hd] x2."""
-        return (np.asarray(self.k_pages[:, phys]),
-                np.asarray(self.v_pages[:, phys]))
+    def read_page(self, phys: int) -> Tuple[np.ndarray, ...]:
+        """HBM -> host: one stacked page [n_layers, page, hkv, hd] x2
+        (plus the scale slices when quantized — the spilled bytes ARE
+        the quantized bytes; the host tier never inflates to fp32).
+        The returned tuple is opaque to callers: pass it back to
+        :meth:`write_page` unchanged."""
+        out = [np.asarray(self.k_pages[:, phys]),
+               np.asarray(self.v_pages[:, phys])]
+        if self.quantized:
+            out += [np.asarray(self.k_scale[:, phys]),
+                    np.asarray(self.v_scale[:, phys])]
+        return tuple(out)
 
-    def write_page(self, phys: int, k: np.ndarray, v: np.ndarray):
-        """Host -> HBM: restore one stacked page."""
+    def write_page(self, phys: int, k: np.ndarray, v: np.ndarray,
+                   k_scale: Optional[np.ndarray] = None,
+                   v_scale: Optional[np.ndarray] = None):
+        """Host -> HBM: restore one stacked page (codes + scales)."""
         self.k_pages = self.k_pages.at[:, phys].set(
-            jnp.asarray(k, self.dtype))
+            jnp.asarray(k, self.code_dtype))
         self.v_pages = self.v_pages.at[:, phys].set(
-            jnp.asarray(v, self.dtype))
+            jnp.asarray(v, self.code_dtype))
+        if self.quantized:
+            self.k_scale = self.k_scale.at[:, phys].set(
+                jnp.asarray(k_scale, jnp.float32))
+            self.v_scale = self.v_scale.at[:, phys].set(
+                jnp.asarray(v_scale, jnp.float32))
+
+    def device_state(self) -> Dict[str, jnp.ndarray]:
+        """The store as the pytree the jitted serving steps consume and
+        return: {"k", "v"} plus {"ks", "vs"} when quantized.  Every
+        leaf's leading axis is layers, so a ``lax.scan`` over layers
+        slices the whole state at once."""
+        st = {"k": self.k_pages, "v": self.v_pages}
+        if self.quantized:
+            st["ks"] = self.k_scale
+            st["vs"] = self.v_scale
+        return st
 
     def place(self, sharding):
         """Lay the stacked pages out across a device mesh (pool serving:
         the pages axis sharded over ``model`` = one slice per DockerSSD
-        node).  All later adopts inherit the layout from the jitted
-        step's out_shardings."""
+        node).  ``sharding`` is either one sharding for the page arrays
+        or a dict keyed like :meth:`device_state` (required for
+        quantized stores — the scale arrays shard along pages too).
+        All later adopts inherit the layout from the jitted step's
+        out_shardings."""
+        if isinstance(sharding, dict):
+            self.k_pages = jax.device_put(self.k_pages, sharding["k"])
+            self.v_pages = jax.device_put(self.v_pages, sharding["v"])
+            if self.quantized:
+                self.k_scale = jax.device_put(self.k_scale, sharding["ks"])
+                self.v_scale = jax.device_put(self.v_scale, sharding["vs"])
+            return
+        if self.quantized:
+            raise ValueError("quantized stores need a dict sharding "
+                             "covering the scale arrays")
         self.k_pages = jax.device_put(self.k_pages, sharding)
         self.v_pages = jax.device_put(self.v_pages, sharding)
 
-    def adopt(self, k_pages: jnp.ndarray, v_pages: jnp.ndarray):
-        """Install the (possibly donated-and-returned) arrays a jitted
+    def adopt(self, state: Dict[str, jnp.ndarray]):
+        """Install the (possibly donated-and-returned) state a jitted
         serving step produced."""
-        self.k_pages = k_pages
-        self.v_pages = v_pages
+        self.k_pages = state["k"]
+        self.v_pages = state["v"]
+        if self.quantized:
+            self.k_scale = state["ks"]
+            self.v_scale = state["vs"]
+
+    def is_deleted(self) -> bool:
+        """Did a failed donated step consume the window arrays?"""
+        return getattr(self.k_pages, "is_deleted", lambda: False)()
 
     def copy_page(self, src: int, dst: int):
         """Device-side stacked-page copy (the copy-on-write split: a
         sharer about to append privatizes the shared page without the
-        KV ever crossing the host boundary)."""
+        KV ever crossing the host boundary).  Quantized pages split
+        codes AND scales — a CoW'd page dequantizes identically to its
+        original until the first divergent append."""
         self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
         self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+        if self.quantized:
+            self.k_scale = self.k_scale.at[:, dst].set(self.k_scale[:, src])
+            self.v_scale = self.v_scale.at[:, dst].set(self.v_scale[:, src])
+
+    def write_token(self, li: int, phys, off, k_tok, v_tok):
+        """Host-path single-position write (facade / eager reference):
+        quantizes first when the store is quantized.  k_tok/v_tok:
+        [hkv, hd] for one position of one layer."""
+        if self.quantized:
+            kq, ks = quantize_page_kv(k_tok, self.qmax, self.code_dtype)
+            vq, vs = quantize_page_kv(v_tok, self.qmax, self.code_dtype)
+            self.k_pages = self.k_pages.at[li, phys, off].set(kq)
+            self.v_pages = self.v_pages.at[li, phys, off].set(vq)
+            self.k_scale = self.k_scale.at[li, phys, off].set(ks)
+            self.v_scale = self.v_scale.at[li, phys, off].set(vs)
+            return
+        self.k_pages = self.k_pages.at[li, phys, off].set(
+            k_tok.astype(self.dtype))
+        self.v_pages = self.v_pages.at[li, phys, off].set(
+            v_tok.astype(self.dtype))
 
     def layer(self, li: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Per-layer view [hbm_pages, page, hkv, hd] (kernel convention)."""
         return self.k_pages[li], self.v_pages[li]
+
+    def layer_state(self, li: int) -> Dict[str, jnp.ndarray]:
+        """Per-layer slice of :meth:`device_state` (eager reference
+        paths; the jitted path slices via ``lax.scan``)."""
+        st = {"k": self.k_pages[li], "v": self.v_pages[li]}
+        if self.quantized:
+            st["ks"] = self.k_scale[li]
+            st["vs"] = self.v_scale[li]
+        return st
 
 
 class PageTableManager:
@@ -170,7 +351,10 @@ class PageTableManager:
         # to ONE physical page (prefix sharing); _rc counts the sharers.
         self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
         self._rc: Dict[int, int] = {}
-        self._host: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]] = {}
+        # host tier: lkey -> the opaque tuple store.read_page returned
+        # (codes + scales for quantized stores — spilled bytes stay
+        # quantized)
+        self._host: Dict[Tuple[int, int], Tuple[np.ndarray, ...]] = {}
         self._lengths: Dict[int, int] = {}
         self._prefetched: set = set()
         self._pinned: set = set()
@@ -183,6 +367,12 @@ class PageTableManager:
         # prompt later still hits warm.
         self._prefix_index: List[Dict[bytes, int]] = [
             {} for _ in range(n_shards)]
+        # every digest is keyed by the store's page-format identity
+        # (dtype + layout version): a server restarted with a different
+        # page_dtype computes disjoint digests, so match_prefix can
+        # never admit a share against pages of the wrong format
+        # (blake2b keys cap at 64 bytes)
+        self._format_key = store.format_key.encode()[:64]
         self._page_digest: Dict[int, bytes] = {}
         self._cached: "OrderedDict[int, None]" = OrderedDict()
         self.stats = KVTierStats()
@@ -366,8 +556,7 @@ class PageTableManager:
     def _page_in(self, lkey) -> int:
         """Bring a host-tier page into HBM."""
         phys = self._alloc(lkey)
-        k, v = self._host.pop(lkey)
-        self.store.write_page(phys, k, v)
+        self.store.write_page(phys, *self._host.pop(lkey))
         shard = self.shard_of_phys(phys)
         self._bump(shard, "page_ins")
         self._bump(shard, "bytes_in", self.store.page_bytes())
@@ -375,12 +564,20 @@ class PageTableManager:
 
     # -- prefix page cache (content-addressed sharing + CoW) -----------------
 
-    @staticmethod
-    def _digest(toks: np.ndarray) -> bytes:
+    def _hasher(self):
+        """Fresh format-keyed hasher: the page format (dtype + layout
+        version) participates in every content address, so fp32 and
+        int8 pages of identical tokens never share a digest."""
+        return hashlib.blake2b(digest_size=16, key=self._format_key)
+
+    def _digest(self, toks: np.ndarray) -> bytes:
         """Content address of a token prefix: one digest identifies the
         KV of every position it covers (params/config are fixed per
-        server, so token identity implies KV identity)."""
-        return hashlib.blake2b(toks.tobytes(), digest_size=16).digest()
+        server, so token identity implies KV identity; the format key
+        scopes it to this store's page layout)."""
+        h = self._hasher()
+        h.update(toks.tobytes())
+        return h.digest()
 
     @staticmethod
     def _probe_page(idx: Dict[bytes, int], toks: np.ndarray,
@@ -406,7 +603,7 @@ class PageTableManager:
         chain (positions after it belong to this sequence alone)."""
         cap = int(toks.shape[0]) - 1
         n, pi = 0, 0
-        hasher = hashlib.blake2b(digest_size=16)   # covers toks[:n]
+        hasher = self._hasher()                    # covers toks[:n]
         while n < cap:
             shard = shard_for(pi)
             if shard in self._dead_shards:
@@ -663,11 +860,7 @@ class PagedKVCache:
         # same invariant as every other write path: never write into a
         # shared physical page — split it first
         phys = self.table.make_writable(seq_id, pos // self.page)
-        st = self.store
-        st.k_pages = st.k_pages.at[0, phys, off].set(
-            k_tok.astype(st.dtype))
-        st.v_pages = st.v_pages.at[0, phys, off].set(
-            v_tok.astype(st.dtype))
+        self.store.write_token(0, phys, off, k_tok, v_tok)
         self.table.commit_append(seq_id)
 
     # -- read view for the kernel --------------------------------------------

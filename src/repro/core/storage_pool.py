@@ -115,10 +115,21 @@ class DockerSSDNode:
 
     def _read_extent(self, name: str) -> bytes:
         """Host-reads-everything: ship the whole extent back (the
-        baseline traffic the in-storage reduce eliminates)."""
+        baseline traffic the in-storage reduce eliminates).  A
+        quantized pool ships its stored codes plus the per-row f32
+        scales — never an inflated f32 copy — so the wire pays the
+        quantized byte count and the host dequantizes at the far end."""
         if name not in self.extents.extents:
             hdr = json.dumps({"error": f"no extent {name!r}"}).encode()
             body = hdr + b"\n"
+        elif self.extents.quantized:
+            codes, scales = self.extents.raw_extent(name)
+            hdr = json.dumps({"rows": codes.shape[0],
+                              "cols": codes.shape[1],
+                              "dtype": str(codes.dtype),
+                              "qscale": True}).encode()
+            body = (hdr + b"\n" + np.ascontiguousarray(codes).tobytes() +
+                    np.ascontiguousarray(scales).tobytes())
         else:
             arr = self.extents.get(name)
             hdr = json.dumps({"rows": arr.shape[0], "cols": arr.shape[1],

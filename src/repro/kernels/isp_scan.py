@@ -70,6 +70,38 @@ def _predicate(key, threshold, op: str):
     raise ValueError(f"filter_op must be one of {FILTER_OPS}, got {op!r}")
 
 
+def _init_acc(cnt_ref, sum_ref, min_ref, max_ref):
+    cnt_ref[...] = jnp.zeros_like(cnt_ref)
+    sum_ref[...] = jnp.zeros_like(sum_ref)
+    min_ref[...] = jnp.full_like(min_ref, POS_INF)
+    max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+
+
+def _fold_block(block, pi, n_rows, thresh, cnt_ref, sum_ref, min_ref,
+                max_ref, *, page_rows: int, filter_col: int,
+                filter_op: str):
+    """One page's f32 fold — identical ops and order on the fp and the
+    dequantizing pipelines (the bit-identity contract lives here)."""
+    pos = pi * page_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (page_rows, 1), 0)
+    key = block[:, filter_col:filter_col + 1]             # [page_rows, 1]
+    mask = (pos < n_rows) & _predicate(key, thresh, filter_op)
+    cnt_ref[0, 0] += jnp.sum(mask.astype(jnp.float32))
+    sum_ref[0, :] += jnp.sum(jnp.where(mask, block, 0.0), axis=0)
+    min_ref[0, :] = jnp.minimum(
+        min_ref[0, :], jnp.min(jnp.where(mask, block, POS_INF), axis=0))
+    max_ref[0, :] = jnp.maximum(
+        max_ref[0, :], jnp.max(jnp.where(mask, block, NEG_INF), axis=0))
+
+
+def _finish(o_ref, cnt_ref, sum_ref, min_ref, max_ref):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[0, :] = jnp.broadcast_to(cnt_ref[0, 0], o_ref[0, :].shape)
+    o_ref[1, :] = sum_ref[0, :]
+    o_ref[2, :] = min_ref[0, :]
+    o_ref[3, :] = max_ref[0, :]
+
+
 def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
                  buf_ref, sem_ref, cnt_ref, sum_ref, min_ref, max_ref, *,
                  page_rows: int, n_pages: int, filter_col: int,
@@ -80,10 +112,7 @@ def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
     n_valid = jnp.minimum(jnp.maximum((n_rows + page_rows - 1) // page_rows,
                                       1), n_pages)
 
-    cnt_ref[...] = jnp.zeros_like(cnt_ref)
-    sum_ref[...] = jnp.zeros_like(sum_ref)
-    min_ref[...] = jnp.full_like(min_ref, POS_INF)
-    max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+    _init_acc(cnt_ref, sum_ref, min_ref, max_ref)
 
     def page_dma(slot, idx):
         # one flash page HBM -> VMEM slot, physical id from the
@@ -106,31 +135,67 @@ def _scan_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, o_ref,
 
         page_dma(slot, pi).wait()
         block = buf_ref[slot].astype(jnp.float32)         # [page_rows, C]
-        pos = pi * page_rows + jax.lax.broadcasted_iota(
-            jnp.int32, (page_rows, 1), 0)
-        key = block[:, filter_col:filter_col + 1]         # [page_rows, 1]
-        mask = ((pos < n_rows) &
-                _predicate(key, thresh_ref[0], filter_op))
-        cnt_ref[0, 0] += jnp.sum(mask.astype(jnp.float32))
-        sum_ref[0, :] += jnp.sum(jnp.where(mask, block, 0.0), axis=0)
-        min_ref[0, :] = jnp.minimum(
-            min_ref[0, :], jnp.min(jnp.where(mask, block, POS_INF), axis=0))
-        max_ref[0, :] = jnp.maximum(
-            max_ref[0, :], jnp.max(jnp.where(mask, block, NEG_INF), axis=0))
+        _fold_block(block, pi, n_rows, thresh_ref[0], cnt_ref, sum_ref,
+                    min_ref, max_ref, page_rows=page_rows,
+                    filter_col=filter_col, filter_op=filter_op)
         return ()
 
     lax.fori_loop(0, n_valid, body, ())
+    _finish(o_ref, cnt_ref, sum_ref, min_ref, max_ref)
 
-    o_ref[...] = jnp.zeros_like(o_ref)
-    o_ref[0, :] = jnp.broadcast_to(cnt_ref[0, 0], o_ref[0, :].shape)
-    o_ref[1, :] = sum_ref[0, :]
-    o_ref[2, :] = min_ref[0, :]
-    o_ref[3, :] = max_ref[0, :]
+
+def _scan_q_kernel(pt_ref, nrows_ref, thresh_ref, pages_ref, scales_ref,
+                   o_ref, buf_ref, sbuf_ref, sem_ref, ssem_ref, cnt_ref,
+                   sum_ref, min_ref, max_ref, *, page_rows: int,
+                   n_pages: int, filter_col: int, filter_op: str):
+    """Dequantizing variant: quantized code pages ride the same
+    double-buffered DMA pipeline and their per-row scale pages ride a
+    second, much smaller one (1/n_cols the bytes).  Dequant happens in
+    VMEM right after the copies land — an elementwise f32 multiply, so
+    the fold below sees exactly the values the host baseline folds and
+    stays bit-identical, while HBM traffic is the quantized bytes."""
+    n_rows = nrows_ref[0]
+    n_valid = jnp.minimum(jnp.maximum((n_rows + page_rows - 1) // page_rows,
+                                      1), n_pages)
+
+    _init_acc(cnt_ref, sum_ref, min_ref, max_ref)
+
+    def page_dma(slot, idx):
+        return pltpu.make_async_copy(pages_ref.at[pt_ref[idx]],
+                                     buf_ref.at[slot], sem_ref.at[slot])
+
+    def scale_dma(slot, idx):
+        return pltpu.make_async_copy(scales_ref.at[pt_ref[idx]],
+                                     sbuf_ref.at[slot], ssem_ref.at[slot])
+
+    page_dma(0, 0).start()
+    scale_dma(0, 0).start()
+
+    def body(pi, _):
+        slot = lax.rem(pi, N_BUFFERS)
+        nxt = lax.rem(pi + 1, N_BUFFERS)
+
+        @pl.when(pi + 1 < n_valid)
+        def _prefetch():
+            page_dma(nxt, pi + 1).start()
+            scale_dma(nxt, pi + 1).start()
+
+        page_dma(slot, pi).wait()
+        scale_dma(slot, pi).wait()
+        # in-VMEM dequant: [page_rows, C] codes x [page_rows, 1] scales
+        block = buf_ref[slot].astype(jnp.float32) * sbuf_ref[slot]
+        _fold_block(block, pi, n_rows, thresh_ref[0], cnt_ref, sum_ref,
+                    min_ref, max_ref, page_rows=page_rows,
+                    filter_col=filter_col, filter_op=filter_op)
+        return ()
+
+    lax.fori_loop(0, n_valid, body, ())
+    _finish(o_ref, cnt_ref, sum_ref, min_ref, max_ref)
 
 
 def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
-                       filter_col: int = 0, filter_op: str = "all",
-                       interpret: bool = False):
+                       scales=None, filter_col: int = 0,
+                       filter_op: str = "all", interpret: bool = False):
     """Filtered aggregate over an extent's flash-resident pages.
 
     pages: [n_phys, page_rows, n_cols] (the whole ExtentStore pool —
@@ -138,6 +203,9 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
     page_table: [pps] int32 physical page ids of this extent (pow2-pad
     with any valid id — padded pages past ``n_rows`` cost nothing);
     n_rows: [1] int32 valid rows; threshold: [1] f32 filter operand.
+    ``scales`` ([n_phys, page_rows, 1] f32) marks a quantized pool:
+    pages hold codes and the kernel dequantizes each page in VMEM right
+    after its DMA lands (bit-identical fold, quantized HBM traffic).
     ``filter_col``/``filter_op`` are static (see FILTER_OPS).
     Returns [REDUCE_ROWS, n_cols] float32 (layout in the module doc).
     """
@@ -150,27 +218,43 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
                          f"[0, {n_cols})")
     pps = page_table.shape[0]
 
-    kernel = functools.partial(_scan_kernel, page_rows=page_rows,
-                               n_pages=pps, filter_col=filter_col,
-                               filter_op=filter_op)
+    scratch = [
+        pltpu.VMEM((N_BUFFERS, page_rows, n_cols), pages.dtype),
+        pltpu.SemaphoreType.DMA((N_BUFFERS,)),
+        pltpu.VMEM((1, 1), jnp.float32),          # count
+        pltpu.VMEM((1, n_cols), jnp.float32),     # sum
+        pltpu.VMEM((1, n_cols), jnp.float32),     # min
+        pltpu.VMEM((1, n_cols), jnp.float32),     # max
+    ]
+    # the page pool (and scale pool) stays in HBM; the kernel's own DMA
+    # pipeline pulls pages into the double buffer
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [pages]
+    if scales is None:
+        kernel = functools.partial(_scan_kernel, page_rows=page_rows,
+                                   n_pages=pps, filter_col=filter_col,
+                                   filter_op=filter_op)
+        name = "scan_filter_reduce"
+    else:
+        kernel = functools.partial(_scan_q_kernel, page_rows=page_rows,
+                                   n_pages=pps, filter_col=filter_col,
+                                   filter_op=filter_op)
+        name = "scan_filter_reduce_q"
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(scales.reshape(n_phys, page_rows, 1)
+                        .astype(jnp.float32))
+        # scale double buffer + its own DMA semaphores, spliced right
+        # after the code buffer's pair
+        scratch[1:1] = [pltpu.VMEM((N_BUFFERS, page_rows, 1), jnp.float32)]
+        scratch[3:3] = [pltpu.SemaphoreType.DMA((N_BUFFERS,))]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(1,),
-        in_specs=[
-            # the page pool stays in HBM; the kernel's own DMA pipeline
-            # pulls pages into the double buffer
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((REDUCE_ROWS, n_cols),
                                lambda pi, pt, nr, th: (0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((N_BUFFERS, page_rows, n_cols), pages.dtype),
-            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
-            pltpu.VMEM((1, 1), jnp.float32),          # count
-            pltpu.VMEM((1, n_cols), jnp.float32),     # sum
-            pltpu.VMEM((1, n_cols), jnp.float32),     # min
-            pltpu.VMEM((1, n_cols), jnp.float32),     # max
-        ],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
@@ -179,5 +263,5 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-        name="scan_filter_reduce",
-    )(page_table, n_rows, threshold, pages)
+        name=name,
+    )(page_table, n_rows, threshold, *operands)

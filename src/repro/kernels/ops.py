@@ -82,33 +82,36 @@ def _pow2_pad_table(page_table):
 
 @functools.partial(jax.jit, static_argnames=("filter_col", "filter_op",
                                              "interpret"))
-def _scan_reduce_jit(pages, page_table, n_rows, threshold, filter_col,
-                     filter_op, interpret):
+def _scan_reduce_jit(pages, page_table, n_rows, threshold, scales,
+                     filter_col, filter_op, interpret):
     # the double-buffered kernel DMAs exactly the extent's valid pages
     # out of the (HBM-resident) pool — no interpret-mode compaction
     # gather is needed anymore, and padded table entries cost nothing
     return _scan_reduce(pages, page_table, n_rows, threshold,
-                        filter_col=filter_col, filter_op=filter_op,
-                        interpret=interpret)
+                        scales=scales, filter_col=filter_col,
+                        filter_op=filter_op, interpret=interpret)
 
 
 def scan_filter_reduce(pages, page_table, n_rows, threshold=0.0, *,
-                       filter_col: int = 0, filter_op: str = "all",
+                       scales=None, filter_col: int = 0,
+                       filter_op: str = "all",
                        interpret: bool | None = None):
     """In-storage filtered aggregate over extent pages (jitted,
     double-buffered page pipeline, with the page table padded to a pow2
     bucket to bound recompiles).
 
     pages: [n_phys, page_rows, n_cols]; page_table: [pps] int32;
-    n_rows/threshold: python scalars or [1] arrays.
+    n_rows/threshold: python scalars or [1] arrays; scales: optional
+    [n_phys, page_rows] f32 per-row scales of a quantized pool (the
+    kernel dequantizes in VMEM — see ``kernels.isp_scan``).
     Returns [8, n_cols] f32 — see ``kernels.isp_scan`` for the layout."""
     if interpret is None:
         interpret = _interpret_default()
     pt = _pow2_pad_table(jnp.asarray(page_table, jnp.int32).reshape(-1))
     nr = jnp.asarray(n_rows, jnp.int32).reshape(1)
     th = jnp.asarray(threshold, jnp.float32).reshape(1)
-    return _scan_reduce_jit(pages, pt, nr, th, filter_col, filter_op,
-                            interpret)
+    return _scan_reduce_jit(pages, pt, nr, th, scales, filter_col,
+                            filter_op, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("page_rows", "filter_col",

@@ -51,6 +51,12 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--hbm-pages", type=int, default=32,
                     help="HBM window pages (per node with --pool)")
+    ap.add_argument("--page-dtype", choices=["fp32", "int8", "fp8"],
+                    default="fp32",
+                    help="KV page storage format (--paged / --pool): "
+                         "int8/fp8 store quantized codes + per-slot f32 "
+                         "scales (~3x smaller pages) and decode through "
+                         "the fused-dequant attention kernel")
     ap.add_argument("--horizon", type=int, default=1,
                     help="fused decode-horizon length: tokens generated "
                          "per host interaction (--paged / --pool; 1 = "
@@ -84,7 +90,8 @@ def main(argv=None):
         n = args.nodes or len(jax.devices())
         server = PoolServer(model, params, n_nodes=n,
                             page_size=args.page_size,
-                            hbm_pages_per_node=args.hbm_pages)
+                            hbm_pages_per_node=args.hbm_pages,
+                            page_dtype=args.page_dtype)
         pool = StoragePool(n)
         pool.attach_server(server)
         router = PoolRouter(server, pool, max_active=args.requests,
@@ -104,7 +111,8 @@ def main(argv=None):
         if cfg.block_type != "transformer":
             raise SystemExit("--paged demo path supports transformer archs")
         server = PagedServer(model, params, page_size=args.page_size,
-                             hbm_pages=args.hbm_pages)
+                             hbm_pages=args.hbm_pages,
+                             page_dtype=args.page_dtype)
         for i in range(args.requests):
             server.add_request(i, prompts[i],
                                chunk=args.prefill_chunk or None)

@@ -71,7 +71,9 @@ class PoolServer(PagedServer):
     def __init__(self, model, params, *, n_nodes: Optional[int] = None,
                  mesh: Optional[Mesh] = None, page_size: int = 16,
                  hbm_pages_per_node: int = 32, dtype=jnp.float32,
-                 policy: str = "placed", prefix_cache: bool = True):
+                 policy: str = "placed", prefix_cache: bool = True,
+                 page_dtype: str = "fp32",
+                 hbm_bytes_per_node: Optional[int] = None):
         if policy not in ("placed", "striped"):
             raise ValueError(f"unknown placement policy {policy!r}")
         if mesh is None:
@@ -88,18 +90,27 @@ class PoolServer(PagedServer):
             raise ValueError(f"pool mesh needs a {POOL_AXIS!r} axis")
         self.mesh = mesh
         self.n_nodes = int(mesh.shape[POOL_AXIS])
+        if hbm_bytes_per_node is not None:
+            # per-node byte budget -> dtype-aware page count (same
+            # capacity knob as PagedServer's hbm_bytes, per DockerSSD)
+            pb = PageStore.stacked_page_bytes(
+                n_layers=model.cfg.n_layers, page_size=page_size,
+                n_kv_heads=model.cfg.n_kv_heads, head_dim=model.cfg.hd,
+                dtype=dtype, page_dtype=page_dtype)
+            hbm_pages_per_node = max(1, int(hbm_bytes_per_node) // pb)
         self.pages_per_node = hbm_pages_per_node
         self.policy = policy
         self._placement: Dict[int, int] = {}
         self._dead: set = set()
         super().__init__(model, params, page_size=page_size,
                          hbm_pages=self.n_nodes * hbm_pages_per_node,
-                         dtype=dtype, prefix_cache=prefix_cache)
-        in_specs, out_specs = shd.pool_step_specs()
+                         dtype=dtype, prefix_cache=prefix_cache,
+                         page_dtype=page_dtype)
+        in_specs, out_specs = shd.pool_step_specs(self.quantized)
         self._sharded_decode = shard_map_unchecked(
             self._decode_body, mesh=mesh, in_specs=in_specs,
             out_specs=out_specs)
-        chunk_in, chunk_out = shd.pool_chunk_specs()
+        chunk_in, chunk_out = shd.pool_chunk_specs(self.quantized)
         self._sharded_chunk = shard_map_unchecked(
             self._chunk_body, mesh=mesh, in_specs=chunk_in,
             out_specs=chunk_out)
@@ -111,7 +122,8 @@ class PoolServer(PagedServer):
 
     def _new_store(self) -> PageStore:
         store = super()._new_store()
-        store.place(NamedSharding(self.mesh, shd.pool_store_spec()))
+        store.place({k: NamedSharding(self.mesh, s) for k, s in
+                     shd.pool_state_spec(store.quantized).items()})
         return store
 
     def _new_table(self) -> PageTableManager:
@@ -230,15 +242,14 @@ class PoolServer(PagedServer):
 
     # -- device programs (shard-local bodies) ---------------------------------
 
-    def decode_step(self, params, k_pages, v_pages, page_table, lengths,
-                    tokens):
-        return self._sharded_decode(params, k_pages, v_pages, page_table,
-                                    lengths, tokens)
+    def decode_step(self, params, state, page_table, lengths, tokens):
+        return self._sharded_decode(params, state, page_table, lengths,
+                                    tokens)
 
-    def prefill_chunk_step(self, params, k_pages, v_pages, page_row,
-                           tokens, start, n_valid):
-        return self._sharded_chunk(params, k_pages, v_pages, page_row,
-                                   tokens, start, n_valid)
+    def prefill_chunk_step(self, params, state, page_row, tokens, start,
+                           n_valid):
+        return self._sharded_chunk(params, state, page_row, tokens,
+                                   start, n_valid)
 
     def _pool_hooks(self, n_local: int, page_table):
         """The two scaffold hooks every pool body shares: rebase global
@@ -256,45 +267,47 @@ class PoolServer(PagedServer):
             owned = valid & (local_new >= 0) & (local_new < n_local)
             return jnp.where(owned, local_new, n_local)
 
-        def attention(q, kp, vp, new_lengths):
-            acc, m, l = paged_attention_partial(q, kp, vp, local_table,
-                                                col_owned, new_lengths)
+        def attention(q, st, new_lengths):
+            # quantized stores dequantize in the partial itself (the
+            # same multiply on every node), so the LSE merge stays
+            # device-invariant across pool shards
+            acc, m, l = paged_attention_partial(
+                q, st["k"], st["v"], local_table, col_owned, new_lengths,
+                k_scale=st.get("ks"), v_scale=st.get("vs"))
             return combine_partials(acc, m, l, POOL_AXIS).astype(self.dtype)
 
         return append_target, attention
 
-    def _decode_body(self, params, k_pages, v_pages, page_table, lengths,
-                     tokens):
+    def _decode_body(self, params, state, page_table, lengths, tokens):
         """Per-node slice of one pool decode step — the shared horizon
         scaffold at H=1 (same unification as ``PagedServer.decode_step``)
         with the pool hooks plugged in: physical page ids are global,
         each node maps them into its own window (append and attention
         masked to owned pages) and the attention partials are merged
         across the pool axis."""
-        append_target, attention = self._pool_hooks(k_pages.shape[1],
+        append_target, attention = self._pool_hooks(state["k"].shape[1],
                                                     page_table)
-        _, logits, k_pages, v_pages = self._fused_horizon_scan(
-            params, k_pages, v_pages, page_table, lengths, tokens,
+        _, logits, state = self._fused_horizon_scan(
+            params, state, page_table, lengths, tokens,
             (lengths > 0).astype(jnp.int32), jnp.int32(-1), horizon=1,
             append_target=append_target, attention=attention)
-        return logits, k_pages, v_pages
+        return logits, state
 
     # -- fused decode horizon (sharded) ---------------------------------------
 
-    def decode_horizon_step(self, params, k_pages, v_pages, page_table,
-                            lengths, tokens, budget, eos_id, *,
-                            horizon: int):
+    def decode_horizon_step(self, params, state, page_table, lengths,
+                            tokens, budget, eos_id, *, horizon: int):
         fn = self._sharded_horizons.get(horizon)
         if fn is None:
-            in_specs, out_specs = shd.pool_horizon_specs()
+            in_specs, out_specs = shd.pool_horizon_specs(self.quantized)
             fn = shard_map_unchecked(
                 lambda *a: self._horizon_body(*a, horizon=horizon),
                 mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
             self._sharded_horizons[horizon] = fn
-        return fn(params, k_pages, v_pages, page_table, lengths, tokens,
-                  budget, eos_id)
+        return fn(params, state, page_table, lengths, tokens, budget,
+                  eos_id)
 
-    def _horizon_body(self, params, k_pages, v_pages, page_table, lengths,
+    def _horizon_body(self, params, state, page_table, lengths,
                       tokens, budget, eos_id, *, horizon: int):
         """Per-node slice of one fused decode horizon.
 
@@ -312,15 +325,15 @@ class PoolServer(PagedServer):
         fixed for the whole horizon (the table covers the pre-reserved
         extent; only the append *target* advances).
         """
-        append_target, attention = self._pool_hooks(k_pages.shape[1],
+        append_target, attention = self._pool_hooks(state["k"].shape[1],
                                                     page_table)
         return self._fused_horizon_scan(
-            params, k_pages, v_pages, page_table, lengths, tokens,
+            params, state, page_table, lengths, tokens,
             budget, eos_id, horizon=horizon,
             append_target=append_target, attention=attention)
 
-    def _chunk_body(self, params, k_pages, v_pages, page_row, tokens,
-                    start, n_valid):
+    def _chunk_body(self, params, state, page_row, tokens, start,
+                    n_valid):
         """Per-node slice of one prefill chunk: the shared chunk
         scaffold with the pool hooks — every node runs the layer stack
         on the chunk (replicated; each DockerSSD stores the full model),
@@ -329,14 +342,14 @@ class PoolServer(PagedServer):
         chunk's queries see the whole cached prefix wherever its pages
         live in the pool."""
         append_target, attention = self._pool_hooks(
-            k_pages.shape[1], jnp.broadcast_to(
+            state["k"].shape[1], jnp.broadcast_to(
                 page_row[None, :], (tokens.shape[1], page_row.shape[0])))
 
         return self._prefill_chunk_scan(
-            params, k_pages, v_pages, page_row, tokens, start, n_valid,
+            params, state, page_row, tokens, start, n_valid,
             append_target=append_target,
-            attention=lambda q, kp, vp, table, lengths:
-                attention(q, kp, vp, lengths))
+            attention=lambda q, st, table, lengths:
+                attention(q, st, lengths))
 
     def step_reference(self, tokens):
         raise NotImplementedError(

@@ -46,9 +46,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.kv_tier import PageStore, PageTableManager
-from repro.kernels import ops
-from repro.kernels.paged_attention import paged_attention as _paged_inner
+from repro.core.kv_tier import (PAGE_DTYPES, PageStore, PageTableManager,
+                                quantize_page_kv)
+from repro.kernels import ops, ref as kref
+from repro.kernels.paged_attention import (
+    paged_attention as _paged_inner,
+    paged_attention_q8 as _paged_q8_inner)
 from repro.models import layers as L
 from repro.runtime import sharding as shd
 
@@ -56,7 +59,7 @@ NEG_INF = -1e30
 
 
 def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
-                            lengths):
+                            lengths, k_scale=None, v_scale=None):
     """Paged decode attention returning online-softmax partials.
 
     The device contract of distributed paged attention (the pool hot
@@ -72,6 +75,9 @@ def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
     local_table: [B, pps] local physical ids (garbage where not owned);
     col_owned: [B, pps] bool — does this node own that logical page;
     lengths: [B] post-append sequence lengths.
+    ``k_scale``/``v_scale`` ([P_node, page, Hkv] f32, quantized stores
+    only) dequantize in-register with the exact same multiply on every
+    node, so the LSE merge stays device-invariant across pool shards.
     Returns (acc [B, H, D] f32, m [B, H] f32, l [B, H] f32).
     """
     b, h, d = q.shape
@@ -83,6 +89,9 @@ def paged_attention_partial(q, k_pages, v_pages, local_table, col_owned,
     safe = jnp.where(col_owned, local_table, 0)
     k = k_pages[safe].astype(jnp.float32)        # [B, pps, page, Hkv, D]
     v = v_pages[safe].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[safe][..., None]         # fused dequant, no fp32
+        v = v * v_scale[safe][..., None]         # page materialization
     qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
     s = jnp.einsum("bkgd,bptkd->bkgpt", qg, k) * sm_scale
     pos = (jnp.arange(pps, dtype=jnp.int32)[:, None] * page +
@@ -168,15 +177,30 @@ class PagedServer:
     def __init__(self, model, params, *, page_size: int = 16,
                  hbm_pages: Optional[int] = None, dtype=jnp.float32,
                  hbm_pages_per_layer: Optional[int] = None,
-                 prefix_cache: bool = True):
-        if hbm_pages is None:
-            hbm_pages = (hbm_pages_per_layer
-                         if hbm_pages_per_layer is not None else 64)
+                 prefix_cache: bool = True, page_dtype: str = "fp32",
+                 hbm_bytes: Optional[int] = None):
+        if page_dtype not in PAGE_DTYPES:
+            raise ValueError(f"page_dtype must be one of {PAGE_DTYPES}, "
+                             f"got {page_dtype!r}")
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.dtype = dtype
         self.page = page_size
+        self.page_dtype = page_dtype
+        self.quantized = page_dtype in ("int8", "fp8")
+        if hbm_bytes is not None:
+            # capacity is a byte budget, not a page count: the window
+            # holds however many (dtype-aware) stacked pages fit — the
+            # quantized format's 2-4x page-count payoff at equal HBM
+            pb = PageStore.stacked_page_bytes(
+                n_layers=self.cfg.n_layers, page_size=page_size,
+                n_kv_heads=self.cfg.n_kv_heads, head_dim=self.cfg.hd,
+                dtype=dtype, page_dtype=page_dtype)
+            hbm_pages = max(1, int(hbm_bytes) // pb)
+        elif hbm_pages is None:
+            hbm_pages = (hbm_pages_per_layer
+                         if hbm_pages_per_layer is not None else 64)
         self.hbm_pages = hbm_pages
         # prefix_cache=False ablates the shared-prefix page cache (every
         # admission computes every prompt token — the cold baseline the
@@ -194,10 +218,10 @@ class PagedServer:
         self._prefill_unmatched: set = set()
         self.prefill_tokens_computed = 0
         self._interpret = jax.default_backend() != "tpu"
-        # donating the page arrays lets XLA update the store in place;
+        # donating the page state lets XLA update the store in place;
         # CPU jit ignores donation (with a warning), so only opt in on
         # accelerators.
-        donate = (1, 2) if not self._interpret else ()
+        donate = (1,) if not self._interpret else ()
         self._decode_jit = jax.jit(self.decode_step, donate_argnums=donate)
         self._chunk_jit = jax.jit(self.prefill_chunk_step,
                                   donate_argnums=donate)
@@ -212,7 +236,7 @@ class PagedServer:
         return PageStore(n_layers=cfg.n_layers, page_size=self.page,
                          hbm_pages=self.hbm_pages,
                          n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
-                         dtype=self.dtype)
+                         dtype=self.dtype, page_dtype=self.page_dtype)
 
     def _new_table(self) -> PageTableManager:
         """Table-manager factory (PoolServer overrides with a sharded
@@ -250,7 +274,7 @@ class PagedServer:
         unrecoverable.  Drop every sequence and reopen an empty window so
         the server stays usable (callers resubmit) instead of poisoning
         all later steps with deleted buffers."""
-        if not getattr(self.store.k_pages, "is_deleted", lambda: False)():
+        if not self.store.is_deleted():
             return
         stats, shard_stats = self.table.stats, self.table.shard_stats
         self.store = self._new_store()
@@ -290,8 +314,44 @@ class PagedServer:
 
     # -- jitted device programs ----------------------------------------------
 
-    def decode_step(self, params, k_pages, v_pages, page_table, lengths,
-                    tokens):
+    def _append_state(self, st, tgt, offs, k_new, v_new):
+        """Scatter one new KV position per row into a per-layer page
+        state dict (``tgt`` rows at the out-of-bounds sentinel are
+        dropped).  Quantized stores quantize **on device at write
+        time**: codes and their per-slot scales land in one step, so
+        the page arrays never hold full-precision data.
+        k_new/v_new: [N, Hkv, D]; tgt/offs: [N]."""
+        st = dict(st)
+        if self.quantized:
+            kq, ks = quantize_page_kv(k_new, self.store.qmax,
+                                      self.store.code_dtype)
+            vq, vs = quantize_page_kv(v_new, self.store.qmax,
+                                      self.store.code_dtype)
+            st["k"] = st["k"].at[tgt, offs].set(kq, mode="drop")
+            st["v"] = st["v"].at[tgt, offs].set(vq, mode="drop")
+            st["ks"] = st["ks"].at[tgt, offs].set(ks, mode="drop")
+            st["vs"] = st["vs"].at[tgt, offs].set(vs, mode="drop")
+            return st
+        st["k"] = st["k"].at[tgt, offs].set(k_new.astype(st["k"].dtype),
+                                            mode="drop")
+        st["v"] = st["v"].at[tgt, offs].set(v_new.astype(st["v"].dtype),
+                                            mode="drop")
+        return st
+
+    def _kernel_attention(self, q, st, page_table, lengths):
+        """The Pallas paged-attention kernel over one layer's page
+        state: the fp kernel for full-precision stores, the fused-
+        dequant ``paged_attention_q8`` for quantized ones (codes stream
+        HBM->VMEM, scales ride the scalar-prefetch page table, dequant
+        happens in-register — HBM traffic is the quantized bytes)."""
+        if self.quantized:
+            return _paged_q8_inner(q, st["k"], st["v"], st["ks"], st["vs"],
+                                   page_table, lengths,
+                                   interpret=self._interpret)
+        return _paged_inner(q, st["k"], st["v"], page_table, lengths,
+                            interpret=self._interpret)
+
+    def decode_step(self, params, state, page_table, lengths, tokens):
         """One fused decode step for the whole active batch — the
         horizon scaffold run at H=1, so per-token/horizon token identity
         holds by construction rather than by test-enforced parallel
@@ -299,26 +359,26 @@ class PagedServer:
         (it stays the benchmark baseline); longer horizons swap in the
         LSE-partial form via their own hook.
 
-        k_pages/v_pages: [L, P, page, Hkv, D] stacked store; page_table:
-        [B, pps] int32 physical ids; lengths: [B] int32 committed length
-        per sequence (0 marks a padding slot); tokens: [B] int32.
-        Returns (logits [B, V] f32, k_pages, v_pages).
+        state: the :meth:`PageStore.device_state` pytree ({"k","v"}
+        [L, P, page, Hkv, D] plus {"ks","vs"} [L, P, page, Hkv] when
+        quantized); page_table: [B, pps] int32 physical ids; lengths:
+        [B] int32 committed length per sequence (0 marks a padding
+        slot); tokens: [B] int32.  Returns (logits [B, V] f32, state).
         """
-        n_phys = k_pages.shape[1]
-        _, logits, k_pages, v_pages = self._fused_horizon_scan(
-            params, k_pages, v_pages, page_table, lengths, tokens,
+        n_phys = state["k"].shape[1]
+        _, logits, state = self._fused_horizon_scan(
+            params, state, page_table, lengths, tokens,
             (lengths > 0).astype(jnp.int32), jnp.int32(-1), horizon=1,
             # out-of-bounds sentinel => scatter drops padding slots
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
-            attention=lambda q, kp, vp, new_lengths:
-                _paged_inner(q, kp, vp, page_table, new_lengths,
-                             interpret=self._interpret))
-        return logits, k_pages, v_pages
+            attention=lambda q, st, new_lengths:
+                self._kernel_attention(q, st, page_table, new_lengths))
+        return logits, state
 
     # -- fused decode horizon -------------------------------------------------
 
-    def _horizon_attention(self, q, kp, vp, page_table, lengths):
+    def _horizon_attention(self, q, st, page_table, lengths):
         """Per-step decode attention inside the fused horizon loop.
 
         Uses the LSE-partial formulation — the same device contract the
@@ -327,19 +387,20 @@ class PagedServer:
         ``paged_attention`` kernel takes this seam per layer slice; in
         CPU interpret mode the jnp partial path is the realistic fast
         path (the Pallas emulation's per-call cost would otherwise
-        dominate the very overhead the horizon amortizes).
+        dominate the very overhead the horizon amortizes).  Both close
+        the same fused-dequant contract on quantized states.
         q: [B, H, D] f32; returns [B, H, D]."""
         if not self._interpret:
-            return _paged_inner(q, kp, vp, page_table, lengths,
-                                interpret=False)
+            return self._kernel_attention(q, st, page_table, lengths)
         owned = jnp.ones(page_table.shape, bool)
-        acc, m, l = paged_attention_partial(q, kp, vp, page_table, owned,
-                                            lengths)
+        acc, m, l = paged_attention_partial(
+            q, st["k"], st["v"], page_table, owned, lengths,
+            k_scale=st.get("ks"), v_scale=st.get("vs"))
         return normalize_partials(acc, m, l).astype(q.dtype)
 
-    def _fused_horizon_scan(self, params, k_pages, v_pages, page_table,
-                            lengths, tokens, budget, eos_id, *,
-                            horizon: int, append_target, attention):
+    def _fused_horizon_scan(self, params, state, page_table, lengths,
+                            tokens, budget, eos_id, *, horizon: int,
+                            append_target, attention):
         """The fused-step scaffold shared by the single-node and pool
         horizon bodies: one ``lax.scan`` over ``horizon`` decode steps
         where the on-device argmax feeds the next step, page slots
@@ -349,19 +410,20 @@ class PagedServer:
 
         ``append_target(phys, valid) -> [B]`` maps each sequence's tail
         physical page to the scatter row (out-of-bounds sentinel drops
-        finished/padding/non-owned appends); ``attention(q, kp, vp,
+        finished/padding/non-owned appends); ``attention(q, st,
         new_lengths) -> [B, H, D]`` closes the paged-attention contract
-        (locally normalized, or ownership-masked + pool-merged).
+        over the per-layer state slice (locally normalized, or
+        ownership-masked + pool-merged).
 
-        Returns (emitted [H, B], last step's logits [B, V] f32, k_pages,
-        v_pages) — the logits make H=1 *be* the per-token decode step
-        (one scaffold, token identity by construction).
+        Returns (emitted [H, B], last step's logits [B, V] f32, state)
+        — the logits make H=1 *be* the per-token decode step (one
+        scaffold, token identity by construction).
         """
         cfg = self.cfg
         b = tokens.shape[0]
 
         def step(carry, _):
-            k_pages, v_pages, lengths, tokens, budget = carry
+            state, lengths, tokens, budget = carry
             valid = (budget > 0) & (lengths > 0)
             pos = lengths[:, None]
             pidx = lengths // self.page
@@ -374,19 +436,16 @@ class PagedServer:
             h = L.embed_tokens(params["embed"], tokens[:, None], self.dtype)
 
             def body(hh, xs):
-                lp, kp, vp = xs
+                # the scan slices every state leaf's leading layer axis,
+                # so st is this layer's {"k","v"[,"ks","vs"]} pages
+                lp, st = xs
                 q, k, v = self._attn_inputs(lp, hh, pos)
-                kp = kp.at[tgt, offs].set(k[:, 0].astype(kp.dtype),
-                                          mode="drop")
-                vp = vp.at[tgt, offs].set(v[:, 0].astype(vp.dtype),
-                                          mode="drop")
-                o = attention(q[:, 0].astype(self.dtype), kp, vp,
-                              new_lengths)
+                st = self._append_state(st, tgt, offs, k[:, 0], v[:, 0])
+                o = attention(q[:, 0].astype(self.dtype), st, new_lengths)
                 return (self._attn_out_ffn(lp, hh, o.reshape(b, 1, -1)),
-                        (kp, vp))
+                        st)
 
-            h, (k_pages, v_pages) = lax.scan(
-                body, h, (params["layers"], k_pages, v_pages))
+            h, state = lax.scan(body, h, (params["layers"], state))
             h = L.apply_norm(params["final_norm"], h, cfg.norm)
             logits = L.unembed(params["embed"], params.get("lm_head"), h,
                                cfg.tie_embeddings)[:, 0]
@@ -397,17 +456,16 @@ class PagedServer:
             budget = jnp.where(valid & (nxt == eos_id), 0,
                                budget - valid.astype(jnp.int32))
             tokens = jnp.where(valid, nxt, tokens)
-            return (k_pages, v_pages, new_lengths, tokens, budget), \
+            return (state, new_lengths, tokens, budget), \
                 (emitted, logits.astype(jnp.float32))
 
-        (k_pages, v_pages, lengths, tokens, budget), (emitted, logits) = \
-            lax.scan(step, (k_pages, v_pages, lengths, tokens, budget),
+        (state, lengths, tokens, budget), (emitted, logits) = \
+            lax.scan(step, (state, lengths, tokens, budget),
                      None, length=horizon)
-        return emitted, logits[-1], k_pages, v_pages
+        return emitted, logits[-1], state
 
-    def decode_horizon_step(self, params, k_pages, v_pages, page_table,
-                            lengths, tokens, budget, eos_id, *,
-                            horizon: int):
+    def decode_horizon_step(self, params, state, page_table, lengths,
+                            tokens, budget, eos_id, *, horizon: int):
         """``horizon`` fused decode steps in ONE device program.
 
         A single ``lax.scan`` over the horizon: each step appends the
@@ -428,22 +486,20 @@ class PagedServer:
         eos_id: [] int32, -1 disables EOS stopping.
 
         Returns (emitted [horizon, B] int32, last step's logits [B, V],
-        k_pages, v_pages).
+        state).
         """
-        n_phys = k_pages.shape[1]
+        n_phys = state["k"].shape[1]
         return self._fused_horizon_scan(
-            params, k_pages, v_pages, page_table, lengths, tokens,
+            params, state, page_table, lengths, tokens,
             budget, eos_id, horizon=horizon,
             # out-of-bounds sentinel => scatter drops finished/padding
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
-            attention=lambda q, kp, vp, new_lengths:
-                self._horizon_attention(q, kp, vp, page_table,
-                                        new_lengths))
+            attention=lambda q, st, new_lengths:
+                self._horizon_attention(q, st, page_table, new_lengths))
 
-    def _prefill_chunk_scan(self, params, k_pages, v_pages, page_row,
-                            tokens, start, n_valid, *, append_target,
-                            attention):
+    def _prefill_chunk_scan(self, params, state, page_row, tokens, start,
+                            n_valid, *, append_target, attention):
         """The prefill-chunk scaffold shared by the single-node and pool
         chunk bodies (the chunk-shaped sibling of
         :meth:`_fused_horizon_scan`, with the same two hooks): append
@@ -454,8 +510,9 @@ class PagedServer:
 
         ``append_target(phys, valid) -> [C]`` maps each position's
         destination page to the scatter row (sentinel drops padding /
-        non-owned writes); ``attention(q, kp, vp, table, lengths) ->
-        [C, H, D]`` closes the paged-attention contract.
+        non-owned writes); ``attention(q, st, table, lengths) ->
+        [C, H, D]`` closes the paged-attention contract over the
+        per-layer state slice.
         """
         cfg = self.cfg
         c = tokens.shape[1]
@@ -474,38 +531,32 @@ class PagedServer:
         h = L.embed_tokens(params["embed"], tokens, self.dtype)
 
         def body(hh, xs):
-            lp, kp, vp = xs
+            lp, st = xs
             q, k, v = self._attn_inputs(lp, hh, positions)
-            kp = kp.at[phys_w, offs].set(k[0].astype(kp.dtype),
-                                         mode="drop")
-            vp = vp.at[phys_w, offs].set(v[0].astype(vp.dtype),
-                                         mode="drop")
-            o = attention(q[0].astype(self.dtype), kp, vp, table,
-                          lengths_q)
-            return self._attn_out_ffn(lp, hh, o.reshape(1, c, -1)), \
-                (kp, vp)
+            st = self._append_state(st, phys_w, offs, k[0], v[0])
+            o = attention(q[0].astype(self.dtype), st, table, lengths_q)
+            return self._attn_out_ffn(lp, hh, o.reshape(1, c, -1)), st
 
-        h, (k_pages, v_pages) = lax.scan(
-            body, h, (params["layers"], k_pages, v_pages))
+        h, state = lax.scan(body, h, (params["layers"], state))
         h = L.apply_norm(params["final_norm"], h, cfg.norm)
         last = lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
         logits = L.unembed(params["embed"], params.get("lm_head"), last,
                            cfg.tie_embeddings)[0, 0]
-        return logits.astype(jnp.float32), k_pages, v_pages
+        return logits.astype(jnp.float32), state
 
-    def prefill_chunk_step(self, params, k_pages, v_pages, page_row,
-                           tokens, start, n_valid):
+    def prefill_chunk_step(self, params, state, page_row, tokens, start,
+                           n_valid):
         """One jitted prefill chunk on one device.
 
         page_row: [pps] int32 physical ids covering positions
         [0, start + n_valid); tokens: [1, C] int32 (C a pow2 bucket,
         garbage past n_valid); start: [] int32 committed tokens before
         this chunk; n_valid: [] int32 true chunk length.  Returns
-        (last-valid-position logits [V] f32, k_pages, v_pages).
+        (last-valid-position logits [V] f32, state).
         """
-        n_phys = k_pages.shape[1]
+        n_phys = state["k"].shape[1]
         return self._prefill_chunk_scan(
-            params, k_pages, v_pages, page_row, tokens, start, n_valid,
+            params, state, page_row, tokens, start, n_valid,
             # out-of-bounds sentinel => the scatter drops chunk padding
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
@@ -579,8 +630,8 @@ class PagedServer:
             row[:len(rows)] = rows
             tokens = np.zeros((1, _pow2(c)), np.int32)
             tokens[0, :c] = prompt[start:start + c]
-            logits, k_pages, v_pages = self._chunk_jit(
-                self.params, self.store.k_pages, self.store.v_pages,
+            logits, state = self._chunk_jit(
+                self.params, self.store.device_state(),
                 jnp.asarray(row), jnp.asarray(tokens),
                 jnp.asarray(start, jnp.int32), jnp.asarray(c, jnp.int32))
         except Exception:
@@ -590,7 +641,7 @@ class PagedServer:
             self.free_sequence(seq_id)
             self._recover_store()
             raise
-        self.store.adopt(k_pages, v_pages)
+        self.store.adopt(state)
         self.table.set_length(seq_id, start + c)
         self.prefill_tokens_computed += c
         if start + c < s:
@@ -653,10 +704,10 @@ class PagedServer:
         try:
             toks = np.zeros((lengths.shape[0],), np.int32)
             toks[:len(seqs)] = [tokens[s] for s in seqs]
-            logits, k_pages, v_pages = self._decode_jit(
-                self.params, self.store.k_pages, self.store.v_pages,
+            logits, state = self._decode_jit(
+                self.params, self.store.device_state(),
                 page_table, lengths, jnp.asarray(toks))
-            self.store.adopt(k_pages, v_pages)
+            self.store.adopt(state)
             for s in seqs:
                 self.table.commit_append(s)
         except Exception:
@@ -691,21 +742,29 @@ class PagedServer:
                                self.dtype)
             for li in range(cfg.n_layers):
                 lp = jax.tree.map(lambda a: a[li], self.params["layers"])
-                kp, vp = self.store.layer(li)
+                st = self.store.layer_state(li)
                 q, k, v = self._attn_inputs(lp, h, pos)
                 # seed schedule: one scalar append per sequence
                 for bi, (l, row) in enumerate(zip(lengths, rows)):
-                    kp = kp.at[row[l // self.page], l % self.page].set(
-                        k[bi, 0].astype(kp.dtype))
-                    vp = vp.at[row[l // self.page], l % self.page].set(
-                        v[bi, 0].astype(vp.dtype))
+                    st = self._append_state(
+                        st, jnp.asarray([row[l // self.page]], jnp.int32),
+                        jnp.asarray([l % self.page], jnp.int32),
+                        k[bi:bi + 1, 0], v[bi:bi + 1, 0])
                 # seed schedule: page table rebuilt per layer
                 max_pages = max(len(r) for r in rows)
                 page_table = jnp.asarray(
                     [r + [0] * (max_pages - len(r)) for r in rows],
                     jnp.int32)
-                o = ops.paged_attention(q[:, 0].astype(self.dtype), kp, vp,
-                                        page_table, new_lengths)
+                if self.quantized:
+                    # pure-jnp dequantizing oracle — the reference the
+                    # fused-dequant Pallas kernel is held to (<=1e-4)
+                    o = kref.paged_attention_q8_ref(
+                        q[:, 0].astype(self.dtype), st["k"], st["v"],
+                        st["ks"], st["vs"], page_table, new_lengths)
+                else:
+                    o = ops.paged_attention(q[:, 0].astype(self.dtype),
+                                            st["k"], st["v"], page_table,
+                                            new_lengths)
                 h = self._attn_out_ffn(lp, h, o.reshape(b, 1, -1))
             h = L.apply_norm(self.params["final_norm"], h, cfg.norm)
             logits = L.unembed(self.params["embed"],
@@ -768,13 +827,13 @@ class PagedServer:
             toks = np.zeros((lengths.shape[0],), np.int32)
             toks[:len(seqs)] = [tokens[s] for s in seqs]
             eos = np.int32(eos_id if eos_id is not None else -1)
-            emitted, _, k_pages, v_pages = self._horizon_jit(
-                self.params, self.store.k_pages, self.store.v_pages,
+            emitted, _, state = self._horizon_jit(
+                self.params, self.store.device_state(),
                 page_table, lengths, jnp.asarray(toks), buds,
                 jnp.asarray(eos), horizon=h_run)
             # THE one transfer of the horizon: [h_run, B] int32 tokens
             emitted = np.asarray(emitted)
-            self.store.adopt(k_pages, v_pages)
+            self.store.adopt(state)
             out = {}
             for i, s in enumerate(seqs):
                 got = [int(t) for t in emitted[:, i] if t >= 0]
@@ -865,4 +924,9 @@ class PagedServer:
     def tier_stats(self) -> Dict[str, int]:
         agg = dict(vars(self.table.stats))
         agg["residency"] = self.table.residency()
+        # dtype-aware: bytes counters already price quantized pages at
+        # their code+scale size; expose the per-page constant and the
+        # total tier traffic for the analytical model's wire/tier terms
+        agg["page_bytes"] = self.store.page_bytes()
+        agg["kv_bytes_moved"] = agg["bytes_in"] + agg["bytes_out"]
         return agg

@@ -234,42 +234,56 @@ def pool_store_spec() -> P:
     return P(None, "model", None, None, None)
 
 
-def pool_step_specs():
+def pool_state_spec(quantized: bool = False) -> dict:
+    """Spec dict for the ``PageStore.device_state`` pytree the jitted
+    pool steps carry: the page arrays shard over ``model`` along the
+    pages axis, and for quantized stores the per-slot scale arrays
+    ``[n_layers, hbm_pages, page, Hkv]`` shard along the *same* pages
+    axis — a node owns its pages' codes AND their scales, so dequant is
+    entirely node-local."""
+    st = {"k": pool_store_spec(), "v": pool_store_spec()}
+    if quantized:
+        st["ks"] = P(None, "model", None, None)
+        st["vs"] = P(None, "model", None, None)
+    return st
+
+
+def pool_step_specs(quantized: bool = False):
     """(in_specs, out_specs) for the shard_mapped pool decode step
-    ``(params, k_pages, v_pages, page_table, lengths, tokens) ->
-    (logits, k_pages, v_pages)``.  Params and the control tensors are
-    replicated — every node runs the full layer stack (each DockerSSD
-    stores the whole model in its flash; the pool parallelism is over
-    the KV extent, per DESIGN.md), only the page windows are split."""
-    store = pool_store_spec()
-    return ((P(), store, store, P(), P(), P()),
-            (P(), store, store))
+    ``(params, state, page_table, lengths, tokens) -> (logits, state)``.
+    Params and the control tensors are replicated — every node runs the
+    full layer stack (each DockerSSD stores the whole model in its
+    flash; the pool parallelism is over the KV extent, per DESIGN.md),
+    only the page windows (and their scale windows) are split."""
+    store = pool_state_spec(quantized)
+    return ((P(), store, P(), P(), P()),
+            (P(), store))
 
 
-def pool_chunk_specs():
+def pool_chunk_specs(quantized: bool = False):
     """(in_specs, out_specs) for the shard_mapped prefill chunk
-    ``(params, k_pages, v_pages, page_row, tokens, start, n_valid) ->
-    (logits, k_pages, v_pages)``.  Same replication story as
+    ``(params, state, page_row, tokens, start, n_valid) ->
+    (logits, state)``.  Same replication story as
     :func:`pool_step_specs`: the chunk's page row / tokens / scalars are
     replicated control, the logits come out identical on every node
     (each merges the same LSE partials), only the page windows are
     split."""
-    store = pool_store_spec()
-    return ((P(), store, store, P(), P(), P(), P()),
-            (P(), store, store))
+    store = pool_state_spec(quantized)
+    return ((P(), store, P(), P(), P(), P()),
+            (P(), store))
 
 
-def pool_horizon_specs():
+def pool_horizon_specs(quantized: bool = False):
     """(in_specs, out_specs) for the shard_mapped fused decode horizon
-    ``(params, k_pages, v_pages, page_table, lengths, tokens, budget,
-    eos_id) -> (emitted, logits, k_pages, v_pages)``.  Same replication
-    story as :func:`pool_step_specs` — only the page windows are split;
-    the control-plane carries (lengths/budgets/tokens) are replicated
+    ``(params, state, page_table, lengths, tokens, budget, eos_id) ->
+    (emitted, logits, state)``.  Same replication story as
+    :func:`pool_step_specs` — only the page windows are split; the
+    control-plane carries (lengths/budgets/tokens) are replicated
     arithmetic, and the emitted token stack / final-step logits are
     device-invariant because every node argmaxes the *merged* logits."""
-    store = pool_store_spec()
-    return ((P(), store, store, P(), P(), P(), P(), P()),
-            (P(), P(), store, store))
+    store = pool_state_spec(quantized)
+    return ((P(), store, P(), P(), P(), P(), P()),
+            (P(), P(), store))
 
 
 def to_shardings(mesh: Mesh, spec_tree):

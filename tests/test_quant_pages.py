@@ -1,0 +1,301 @@
+"""Quantized KV page format tests (int8/fp8 codes + per-slot f32 scales).
+
+The contract: a quantized PageStore carries scales through the entire
+page lifecycle (append, CoW split, host-tier spill, prefix digest);
+the fused-dequant decode path matches the pure-jnp oracle to 1e-4 and
+agrees with the fp32 server's greedy argmax wherever the fp32 logits
+are decisive; fused horizons, chunked prefill and the 1-node pool all
+produce outputs identical to the per-token quantized path; and the
+quantized in-storage reduce stays bit-identical to the
+host-reads-everything baseline.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.extent_store import ExtentStore
+from repro.core.kv_tier import (PageStore, PageTableManager,
+                                dequantize_page_kv, quantize_page_kv)
+from repro.kernels import ops
+from repro.models.api import get_model
+from repro.runtime.pool import PoolServer
+from repro.runtime.serve import PagedServer
+
+QDTYPES = ["int8"] + (["fp8"] if hasattr(jnp, "float8_e4m3fn") else [])
+
+
+def _tiny_model():
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _store(page_dtype, hbm_pages=16, page=4):
+    return PageStore(n_layers=2, page_size=page, hbm_pages=hbm_pages,
+                     n_kv_heads=2, head_dim=8, dtype=jnp.float32,
+                     page_dtype=page_dtype)
+
+
+# ---------------------------------------------------------------------------
+# PageStore: quantized lifecycle at the unit level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("page_dtype", QDTYPES)
+def test_quantize_roundtrip_error_bound(page_dtype):
+    st = _store(page_dtype)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, 2, 8)).astype(np.float32) * 3)
+    codes, scale = quantize_page_kv(x, st.qmax, st.code_dtype)
+    back = dequantize_page_kv(codes, scale)
+    # symmetric per-slot quantization: error bounded by scale/2 per elem
+    # (int8) and ~6% relative (fp8 e4m3); both well inside 1.5*scale
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(scale)[..., None] * (0.5 if page_dtype == "int8"
+                                            else 32.0)
+    assert (err <= bound + 1e-6).all()
+    assert codes.dtype == st.code_dtype and scale.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("page_dtype", QDTYPES)
+def test_page_write_copy_spill_carry_scales(page_dtype):
+    """write_token quantizes; copy_page and the read/write_page spill
+    path carry codes AND scales, so a restored or CoW'd page
+    dequantizes identically to its original."""
+    st = _store(page_dtype)
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    for li in range(2):
+        st.write_token(li, 3, 1, k, v)
+    assert float(jnp.abs(st.k_scale[0, 3, 1]).min()) > 0
+
+    def deq(phys):
+        return np.asarray(dequantize_page_kv(st.k_pages[:, phys],
+                                             st.k_scale[:, phys]))
+
+    orig = deq(3)
+    st.copy_page(3, 7)                        # CoW split
+    np.testing.assert_array_equal(deq(7), orig)
+
+    spilled = st.read_page(3)                 # HBM -> host tier
+    assert len(spilled) == 4                  # codes x2 + scales x2
+    st.write_token(0, 3, 1, 2 * k, 2 * v)     # clobber
+    st.write_page(3, *spilled)                # host tier -> HBM
+    np.testing.assert_array_equal(deq(3), orig)
+
+
+def test_prefix_digest_keyed_by_page_format():
+    """Prefix-cache digests mix in the page format: an fp32 tree and an
+    int8 tree of the same tokens can never alias, so a warm admission
+    never adopts pages written in another format."""
+    toks = np.arange(8, dtype=np.int32)
+    t32 = PageTableManager(_store("fp32"))
+    t8 = PageTableManager(_store("int8"))
+    assert t32.store.format_key != t8.store.format_key
+    assert t32._digest(toks) != t8._digest(toks)
+    # registration in one format is invisible to the other
+    for t in (t32, t8):
+        t.add_sequence(0)
+        t.ensure_resident(0, n_tokens=8)
+        t.set_length(0, 8)
+    t32.register_prefix(0, toks)
+    t8.add_sequence(1)
+    assert t8.match_prefix(1, toks) == 0      # no cross-format hit
+    t8.register_prefix(0, toks)
+    t8.add_sequence(2)
+    assert t8.match_prefix(2, toks) == 7      # same-format hit intact
+
+
+def test_capacity_doubles_at_equal_byte_budget():
+    """The acceptance floor: at an equal HBM byte budget the int8
+    window admits >= 2x the pages (hence >= 2x the sequences) of the
+    fp32 window."""
+    kw = dict(n_layers=2, page_size=4, n_kv_heads=2, head_dim=8,
+              dtype=jnp.float32)
+    budget = 64 * PageStore.stacked_page_bytes(page_dtype="fp32", **kw)
+    pages32 = budget // PageStore.stacked_page_bytes(page_dtype="fp32",
+                                                     **kw)
+    pages8 = budget // PageStore.stacked_page_bytes(page_dtype="int8",
+                                                    **kw)
+    assert pages8 >= 2 * pages32
+
+    # and end to end on a real server: same byte budget, >= 2x window
+    _, model, params = _tiny_model()
+    srv32 = PagedServer(model, params, page_size=4, hbm_pages=16,
+                        dtype=jnp.float32)
+    budget = 16 * srv32.store.page_bytes()
+    srv8 = PagedServer(model, params, page_size=4, hbm_bytes=budget,
+                       dtype=jnp.float32, page_dtype="int8")
+    assert srv8.table.free_pages >= 2 * srv32.table.free_pages
+
+
+# ---------------------------------------------------------------------------
+# decode parity: fused-dequant kernel vs oracle vs fp32
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("page_dtype", QDTYPES)
+def test_decode_step_matches_quantized_reference(page_dtype):
+    """The jitted fused-dequant step must reproduce the per-layer
+    python loop over the same quantized pages (the jnp q8 oracle) to
+    1e-4 — a kernel-vs-specification check, not a quantization-error
+    check."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(3)
+    B, S = 2, 9
+    prompts = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+    server = PagedServer(model, params, page_size=4, hbm_pages=32,
+                         dtype=jnp.float32, page_dtype=page_dtype)
+    for i in range(B):
+        server.add_request(i, prompts[i])
+    for _ in range(2):
+        toks = {i: server._pending[i] for i in range(B)}
+        ref = np.asarray(server.step_reference(toks))
+        got = server.step(toks)
+        got = np.stack([np.asarray(got[i]) for i in range(B)])
+        np.testing.assert_allclose(got, ref, atol=1e-4)
+        server._pending = {i: int(np.argmax(got[i])) for i in range(B)}
+
+
+def _greedy(server, prompts, gen):
+    B = prompts.shape[0]
+    lasts = [server.add_request(i, prompts[i]) for i in range(B)]
+    first = [int(jnp.argmax(l)) for l in lasts]
+    out = server.decode(gen - 1)
+    return (np.stack(lasts),
+            np.stack([[first[i]] + out[i] for i in range(B)]))
+
+
+def _forced_logits(model, params, prompts, page_dtype, token_stream):
+    """Admit, then teacher-force ``token_stream`` ([n_steps][B]) through
+    the jitted decode step; returns all logits [1+n_steps, B, vocab]."""
+    B = prompts.shape[0]
+    srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                      dtype=jnp.float32, page_dtype=page_dtype)
+    out = [np.stack([np.asarray(srv.add_request(i, prompts[i]))
+                     for i in range(B)])]
+    for toks in token_stream:
+        got = srv.step({i: int(toks[i]) for i in range(B)})
+        out.append(np.stack([np.asarray(got[i]) for i in range(B)]))
+    return np.concatenate(out, 0)
+
+
+def test_int8_matches_fp32_on_decisive_logits():
+    """Quantized greedy decode agrees with fp32 wherever the fp32
+    logits are decisive (top-2 gap > 0.05) — quantization may only flip
+    near-ties.  Both servers are teacher-forced with the fp32 greedy
+    stream so every compared position saw identical context."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(5)
+    B, S, gen = 2, 7, 5
+    prompts = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+    _, toks = _greedy(PagedServer(model, params, page_size=4, hbm_pages=32,
+                                  dtype=jnp.float32), prompts, gen)
+    stream = [toks[:, t] for t in range(gen - 1)]
+    lf = _forced_logits(model, params, prompts, "fp32", stream)
+    lq = _forced_logits(model, params, prompts, "int8", stream)
+    srt = np.sort(lf, -1)
+    decisive = srt[:, -1] - srt[:, -2] > 0.05
+    assert decisive.any()
+    np.testing.assert_array_equal(lf.argmax(-1)[decisive],
+                                  lq.argmax(-1)[decisive])
+
+
+def test_int8_horizon_and_chunked_prefill_match_per_token():
+    """Within the int8 format: the fused H=8 horizon and a chunked
+    admission produce tokens identical to per-token decode with
+    one-shot admission (same pages, same kernel, different schedule)."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(11)
+    B, S, gen = 2, 9, 8
+    prompts = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+
+    def run(horizon=None, chunk=None):
+        srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                          dtype=jnp.float32, page_dtype="int8")
+        lasts = [srv.add_request(i, prompts[i], chunk=chunk)
+                 for i in range(B)]
+        first = [int(jnp.argmax(l)) for l in lasts]
+        out = srv.decode(gen - 1, horizon=horizon)
+        return np.stack([[first[i]] + out[i] for i in range(B)])
+
+    base = run()
+    np.testing.assert_array_equal(run(horizon=8), base)
+    np.testing.assert_array_equal(run(chunk=4), base)
+
+
+def test_int8_cow_split_then_write_keeps_sharer_output():
+    """Two admissions sharing a quantized prefix: the sharer's decode
+    CoW-splits the shared tail (codes+scales) and both sequences decode
+    exactly as they would without sharing."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(13)
+    # S=10 @ page=4: the share covers S-1=9 tokens, so the tail page is
+    # shared *partially* and the sharer's first append must CoW-split it
+    S, gen = 10, 5
+    prompt = rng.integers(0, cfg.vocab_size, S, dtype=np.int32)
+
+    solo = PagedServer(model, params, page_size=4, hbm_pages=32,
+                       dtype=jnp.float32, page_dtype="int8")
+    first = int(jnp.argmax(solo.add_request(0, prompt)))
+    base = [first] + solo.decode(gen - 1, seqs=[0])[0]
+
+    shared = PagedServer(model, params, page_size=4, hbm_pages=32,
+                         dtype=jnp.float32, page_dtype="int8")
+    f0 = int(jnp.argmax(shared.add_request(0, prompt)))
+    f1 = int(jnp.argmax(shared.add_request(1, prompt)))  # prefix share
+    assert shared.tier_stats()["prefix_hits"] > 0
+    out = shared.decode(gen - 1)
+    assert shared.tier_stats()["cow_splits"] > 0
+    np.testing.assert_array_equal([f0] + out[0], base)
+    np.testing.assert_array_equal([f1] + out[1], base)
+
+
+def test_pool_one_node_int8_matches_paged_server():
+    """The shard_mapped fused-dequant path (LSE partials + scale-aware
+    gather) on one node equals the PagedServer int8 path exactly."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(17)
+    B, S, gen = 2, 7, 5
+    prompts = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+    _, base = _greedy(PagedServer(model, params, page_size=4,
+                                  hbm_pages=32, dtype=jnp.float32,
+                                  page_dtype="int8"), prompts, gen)
+    pool = PoolServer(model, params, n_nodes=1, page_size=4,
+                      hbm_pages_per_node=32, dtype=jnp.float32,
+                      page_dtype="int8")
+    _, got = _greedy(pool, prompts, gen)
+    np.testing.assert_array_equal(got, base)
+
+
+# ---------------------------------------------------------------------------
+# quantized analytics extents: dequant-fold bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("page_dtype", QDTYPES)
+def test_quantized_scan_bit_identical_to_host_fold(page_dtype):
+    """The dequantizing in-storage reduce over quantized extent pages
+    is bit-identical to reading the extent back (host-side dequant) and
+    folding page-sequentially — same per-page fold order, same
+    elementwise f32 dequant."""
+    store = ExtentStore(n_pages=8, page_rows=16, n_cols=16,
+                        page_dtype=page_dtype)
+    rng = np.random.default_rng(19)
+    data = rng.normal(size=(70, 12)).astype(np.float32) * 7
+    ext = store.put("t", data)
+    assert ext.nbytes < data.nbytes           # planner prices smaller reads
+    dev = np.asarray(ops.scan_filter_reduce(
+        store.pages, store.page_table("t"), ext.n_rows, 0.25,
+        scales=store.scales, filter_col=1, filter_op="ge"))
+    host = np.asarray(ops.scan_filter_reduce_host(
+        jnp.asarray(np.pad(store.get("t"), ((0, 0), (0, 4)))), 0.25,
+        page_rows=16, filter_col=1, filter_op="ge"))
+    np.testing.assert_array_equal(dev, host)
