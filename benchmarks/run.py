@@ -448,6 +448,112 @@ def _capacity_cell(model, params, cfg, rng):
     return cell
 
 
+def _speculative_cell(model, params, cfg, quick=False):
+    """Speculative draft-verify cell: decode throughput of
+    ``speculative=True`` (lookup drafter + one chunk-shaped verify
+    pass per draft) against the plain H=8 fused horizon, on two
+    workloads.  The repetitive workload is constant-token prompts —
+    the demo model's greedy continuation of a constant stream is
+    itself constant, the regime the lookup drafter is built for
+    (alpha -> 1, every pass commits a full draft).  The adversarial
+    workload is i.i.d. random prompts: drafts can't land, the alpha
+    EMA closes the gate, and throughput must hold near the plain
+    horizon.  Outputs must be token-identical to the non-speculative
+    path on both.  Two spec horizons on the repetitive workload feed
+    ``fit_speculation_overheads`` (per-pass host cost + per-position
+    verify cost), mirrored against ``speculative_terms``."""
+    import jax.numpy as jnp
+    from repro.core import analytical as A
+    from repro.runtime.serve import PagedServer
+
+    n_req, plen, gen = 4, 40, 48
+    base_h, spec_h = 8, 16
+    rng = np.random.default_rng(7)
+    # prompt-lookup's paying regime: the prompt tail already carries
+    # the stream the model will emit (here: constant runs the demo
+    # model self-sustains for >= gen tokens), so the drafter copies
+    # successors out of the prompt from the very first pass
+    rep_prompts = [np.asarray([c] * (24 + i % 2) + [t] * 16, np.int32)
+                   for i, (c, t) in enumerate([(41, 49), (500, 259)] * 2)]
+    adv_prompts = [rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+                   for _ in range(n_req)]
+    srv = PagedServer(model, params, page_size=16, hbm_pages=64,
+                      dtype=jnp.float32)
+
+    def timed(prompts, horizon, speculative):
+        """Untimed same-shape warm-up on the warm server, then
+        best-of-3 timed decodes from identical re-admitted states
+        (the serve_decode discipline — jit caches are per-instance)."""
+        def readmit():
+            for s in list(srv.sequence_ids()):
+                srv.free_sequence(s)
+            for i, p in enumerate(prompts):
+                srv.add_request(i, p)
+        readmit()
+        srv.decode(gen, horizon=horizon, speculative=speculative)
+        best, out, stats = None, None, None
+        for _ in range(3):
+            readmit()
+            srv.reset_speculation_stats()
+            t0 = time.perf_counter()
+            o = srv.decode(gen, horizon=horizon, speculative=speculative)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best, out, stats = dt, o, srv.speculation_stats()
+        toks = sum(len(v) for v in out.values())
+        return toks / best, out, stats
+
+    cell = {"config": {"n_req": n_req, "prompt_len": plen, "gen": gen,
+                       "base_horizon": base_h, "spec_horizon": spec_h}}
+    fit_in = {}
+    for name, prompts in (("repetitive", rep_prompts),
+                          ("adversarial", adv_prompts)):
+        base_tps, base_out, _ = timed(prompts, base_h, False)
+        spec_tps, spec_out, st = timed(prompts, spec_h, True)
+        assert spec_out == base_out, \
+            f"speculative {name} decode diverged from the greedy path"
+        ratio = spec_tps / base_tps
+        cell[name] = {
+            "base_tokens_per_s": base_tps,
+            "spec_tokens_per_s": spec_tps,
+            "speedup_vs_h8": ratio,
+            "alpha": st["alpha"],
+            "passes": st["passes"],
+            "fallback_passes": st["fallback_passes"],
+            "accepted_len_hist": {str(k): v for k, v
+                                  in st["accepted_len_hist"].items()},
+        }
+        if name == "repetitive" and st["passes"]:
+            fit_in[spec_h] = (st["emitted"] / st["passes"], spec_tps)
+    # second spec horizon on the repetitive workload -> overhead fit
+    tps8, _, st8 = timed(rep_prompts, base_h, True)
+    if st8["passes"] and fit_in:
+        fit_in[base_h] = (st8["emitted"] / st8["passes"], tps8)
+        (ha, (tpa, sa)), (hb, (tpb, sb)) = sorted(fit_in.items())
+        host_s, pos_s = A.fit_speculation_overheads(ha, tpa, sa,
+                                                    hb, tpb, sb)
+        modeled = A.speculative_terms(
+            n_req * gen, spec_h, cell["repetitive"]["alpha"],
+            host_s, pos_s)
+        cell["fitted"] = {"host_overhead_s": host_s,
+                          "verify_pos_s": pos_s}
+        cell["modeled"] = modeled
+    rep, adv = cell["repetitive"], cell["adversarial"]
+    print(f"  speculative (vs H={base_h} greedy): repetitive "
+          f"{rep['speedup_vs_h8']:.2f}x (alpha={rep['alpha']:.2f}) | "
+          f"adversarial {adv['speedup_vs_h8']:.2f}x "
+          f"(alpha={adv['alpha']:.2f}, "
+          f"fallback {adv['fallback_passes']} passes)")
+    # conservative floors: the repetitive regime must pay for the
+    # draft-verify machinery outright; the adversarial regime must
+    # stay within noise of the plain horizon (the gate's whole job)
+    assert rep["speedup_vs_h8"] >= 2.0, \
+        f"speculative repetitive {rep['speedup_vs_h8']:.2f}x < 2x floor"
+    assert adv["speedup_vs_h8"] >= 0.9, \
+        f"speculative adversarial {adv['speedup_vs_h8']:.2f}x < 0.9x"
+    return cell
+
+
 def serve_decode(out_path="BENCH_serve.json", quick=False):
     """Decode-throughput micro-benchmark on the demo config
     (examples/serve_pool.py scale): tokens/s of the single jitted
@@ -572,6 +678,10 @@ def serve_decode(out_path="BENCH_serve.json", quick=False):
     ref_tok_s = n_req / t_ref
 
     speedup = tok_s / ref_tok_s
+    # speculative draft-verify cell (own server instance; floors
+    # asserted inside — a spec regression fails the build through the
+    # same bench-smoke step as the decode floors)
+    speculative = _speculative_cell(model, params, cfg, quick=quick)
     result = {
         "config": {"n_req": n_req, "prompt_len": prompt_len, "gen": gen,
                    "n_layers": cfg.n_layers, "d_model": cfg.d_model,
@@ -594,6 +704,7 @@ def serve_decode(out_path="BENCH_serve.json", quick=False):
             "fitted": {"host_overhead_s": host_s, "device_step_s": dev_s},
             "modeled": modeled,
         },
+        "speculative": speculative,
         "tier": tier,
     }
     with open(out_path, "w") as f:
@@ -693,6 +804,7 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
             "control_plane": rec["control_plane"],
             "node_tier": rec["node_tier"],
             "shared_prefix": sp,
+            "speculative": rec.get("speculative"),
         }
         _csv(f"pool_serving_{n}", rec["decode_s"] / wl["gen"] * 1e6,
              f"tok_s={rec['tokens_per_s']:.1f},"
@@ -707,6 +819,14 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
               f"cold | hit rate {sp['prefix_hit_rate']:.2f} | hits on "
               f"owner node {sp['owner_node']}: "
               f"{sp['node_prefix_hits'][sp['owner_node']]}")
+        spec = rec.get("speculative")
+        if spec and "skipped" not in spec:
+            print(f"    speculative: {spec['speedup_vs_horizon']:.2f}x vs "
+                  f"plain H={wl['horizon']} | alpha={spec['alpha']:.2f} | "
+                  f"{spec['passes']} passes + {spec['fallback_passes']} "
+                  f"fallback — outputs identical")
+        elif spec:
+            print(f"    speculative: skipped ({spec['skipped']})")
         # conservative floors (CI bench-smoke): on multi-node pools the
         # per-token path pays collectives + dispatch per token, so the
         # fused horizon must win structurally; the 1-node cell's

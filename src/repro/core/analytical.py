@@ -463,6 +463,75 @@ def fit_horizon_overheads(h_a: int, tok_s_a: float, h_b: int,
     return host, dev
 
 
+def speculative_terms(n_tokens: int, horizon: int, alpha: float,
+                      host_overhead_s: float,
+                      verify_pos_s: float) -> Dict[str, float]:
+    """Amortized model of speculative decoding on the fused-horizon
+    scaffold (the draft-verify loop of ``spec_horizon_batch``).
+
+    One pass drafts ``horizon - 1`` candidates and verifies them in a
+    single chunk-shaped forward (``horizon`` query positions through
+    one layer scan), then commits the longest accepted prefix plus the
+    bonus token.  With per-candidate acceptance rate ``alpha`` the
+    expected tokens per pass is the truncated geometric sum::
+
+        E[tokens/pass] = 1 + alpha + alpha^2 + ... + alpha^(H-1)
+                       = (1 - alpha^H) / (1 - alpha)
+
+    (H at alpha=1 — every candidate lands; 1 at alpha=0 — every pass
+    still nets its bonus token).  A pass costs one host interaction
+    (``host_overhead_s`` — planning, dispatch, the packed transfer)
+    plus ``horizon * verify_pos_s`` of device compute (every position
+    runs the full stack whether accepted or not), so::
+
+        t(n) = passes * (host_overhead_s + horizon * verify_pos_s),
+        passes = ceil(n / E[tokens/pass])
+
+    ``modeled_speedup_vs_horizon`` compares against the plain fused
+    horizon at the same H (one forward per token, one host interaction
+    per H tokens) — the BENCH_serve cell's baseline.  Above ~1/H
+    effective acceptance the pass wins; at alpha=0 it degrades toward
+    1/H, which is why ``spec_horizon_batch`` falls back to the plain
+    horizon when no sequence can draft."""
+    toks = max(int(n_tokens), 1)
+    h = max(int(horizon), 1)
+    a = min(max(float(alpha), 0.0), 1.0)
+    exp_tokens = float(h) if a >= 1.0 else (1.0 - a ** h) / (1.0 - a)
+    passes = -(-toks // max(exp_tokens, 1e-9))
+    total = passes * (host_overhead_s + h * verify_pos_s)
+    # plain fused horizon on the same budget: one forward per token,
+    # one host interaction per H tokens
+    plain = (-(-toks // h)) * host_overhead_s + toks * verify_pos_s
+    return {
+        "horizon": float(h),
+        "alpha": a,
+        "expected_tokens_per_pass": exp_tokens,
+        "passes": float(passes),
+        "modeled_tokens_per_s": toks / max(total, 1e-12),
+        "modeled_speedup_vs_horizon": plain / max(total, 1e-12),
+    }
+
+
+def fit_speculation_overheads(h_a: int, tokens_per_pass_a: float,
+                              tok_s_a: float, h_b: int,
+                              tokens_per_pass_b: float,
+                              tok_s_b: float) -> Tuple[float, float]:
+    """Solve (host_overhead_s, verify_pos_s) from two measured
+    speculative runs with different draft lengths: per-pass time
+    t(H) = host_overhead_s + H * verify_pos_s, and the measured
+    tokens/s gives t(H) = tokens_per_pass / tok_s (two equations, two
+    unknowns — the speculation sibling of
+    :func:`fit_horizon_overheads`, with the same clamping discipline
+    when noise inverts the cells)."""
+    if h_a == h_b:
+        raise ValueError("need two distinct draft lengths to fit")
+    ta = tokens_per_pass_a / tok_s_a        # measured seconds per pass
+    tb = tokens_per_pass_b / tok_s_b
+    pos = max((ta - tb) / float(h_a - h_b), 0.0)
+    host = min(max(ta - h_a * pos, 0.0), min(ta, tb))
+    return host, pos
+
+
 def kv_tier_terms(tier_stats, hw: HW = HW()) -> Dict[str, float]:
     """Tier-traffic terms from a serving run's ``tier_stats()``
     aggregate: host<->HBM KV page movement, priced dtype-aware (a

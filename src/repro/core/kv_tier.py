@@ -97,6 +97,9 @@ class KVTierStats:
     prefix_hits: int = 0        # pages mapped by sharing, not prefill
     prefix_tokens: int = 0      # prompt tokens whose KV was never computed
     cow_splits: int = 0         # shared pages privatized before a write
+    # fused-horizon / speculative partial commit: reserved pages whose
+    # appends were rejected (draft mismatch, EOS, budget) and returned
+    horizon_pages_rolled_back: int = 0
 
 
 class PageStore:
@@ -795,7 +798,9 @@ class PageTableManager:
         rolled = 0
         for lkey in [k for k in self._resident
                      if k[0] == seq_id and k[1] >= used]:
+            shard = self.shard_of(lkey[0], lkey[1])
             self._unmap(lkey)
+            self._bump(shard, "horizon_pages_rolled_back")
             rolled += 1
         return rolled
 

@@ -1,7 +1,8 @@
 """Serving launcher — batched-request decode with the D-Cache runtime.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-      --reduced --requests 4 --prompt-len 16 --gen 32 [--paged | --pool]
+      --reduced --requests 4 --prompt-len 16 --gen 32 [--paged | --pool] \
+      [--horizon 8 --speculative] [--temperature 0.8 --top-p 0.9]
 
 Three paths:
 
@@ -61,6 +62,23 @@ def main(argv=None):
                     help="fused decode-horizon length: tokens generated "
                          "per host interaction (--paged / --pool; 1 = "
                          "classic per-token scheduling)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify decoding on the fused-horizon "
+                         "scaffold (--paged / --pool, needs --horizon "
+                         ">= 2): a device-side prompt-lookup drafter "
+                         "proposes up to horizon-1 tokens, one "
+                         "chunk-shaped pass verifies them, and the "
+                         "accepted prefix + bonus token commit; "
+                         "outputs are token-identical to the plain "
+                         "horizon (greedy) or distribution-correct "
+                         "(rejection sampling, temperature > 0)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax); "
+                         "sampling runs on-device, seeded, so reruns "
+                         "and pool nodes reproduce the same tokens")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with "
+                         "--temperature > 0)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill size: admissions run at most "
                          "this many prompt tokens per scheduler "
@@ -69,6 +87,17 @@ def main(argv=None):
                          "admission).  Prompts sharing a cached prefix "
                          "skip the covered pages entirely")
     args = ap.parse_args(argv)
+
+    if args.speculative and not (args.paged or args.pool):
+        raise SystemExit("--speculative needs --paged or --pool")
+    if args.speculative and args.horizon < 2:
+        raise SystemExit("--speculative needs --horizon >= 2 (the "
+                         "draft rides the fused-horizon scaffold)")
+    sampling = None
+    if args.temperature > 0:
+        from repro.runtime.serve import SamplingConfig
+        sampling = SamplingConfig(temperature=args.temperature,
+                                  top_p=args.top_p)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -96,6 +125,8 @@ def main(argv=None):
         pool.attach_server(server)
         router = PoolRouter(server, pool, max_active=args.requests,
                             horizon=args.horizon,
+                            speculative=args.speculative,
+                            sampling=sampling,
                             prefill_chunk=args.prefill_chunk or None)
         for i in range(args.requests):
             router.submit(Request(rid=i, prompt=prompts[i],
@@ -118,8 +149,16 @@ def main(argv=None):
                                chunk=args.prefill_chunk or None)
         out = server.decode(args.gen,
                             horizon=args.horizon if args.horizon > 1
-                            else None)
+                            else None,
+                            sampling=sampling,
+                            speculative=args.speculative)
         toks = sum(len(v) for v in out.values())
+        if args.speculative:
+            st = server.speculation_stats()
+            print(f"speculation: alpha={st['alpha']:.2f} "
+                  f"passes={st['passes']} "
+                  f"(fallback {st['fallback_passes']}) "
+                  f"accepted-length hist {st['accepted_len_hist']}")
         print("tier stats:", server.tier_stats())
         print(f"prefix hit rate: {server.prefix_hit_rate():.2f} "
               f"(prompt tokens served from the shared-prefix cache)")
@@ -134,11 +173,24 @@ def main(argv=None):
                                  [(0, 0)] * 3 + [(0, pad), (0, 0)])
             cache["v"] = jnp.pad(cache["v"],
                                  [(0, 0)] * 3 + [(0, pad), (0, 0)])
+        if sampling is not None:
+            from repro.runtime.serve import sampling_log_probs
+            key = jax.random.PRNGKey(sampling.seed)
+
+        def pick(lg, step):
+            if sampling is None:
+                return jnp.argmax(lg, -1).astype(jnp.int32)
+            lp = sampling_log_probs(lg, jnp.float32(sampling.temperature),
+                                    jnp.float32(sampling.top_p))
+            g = jax.random.gumbel(jax.random.fold_in(key, step),
+                                  lp.shape, jnp.float32)
+            return jnp.argmax(lp + g, -1).astype(jnp.int32)
+
         toks = 0
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)
-        for _ in range(args.gen):
+        cur = pick(logits, 0)
+        for step in range(args.gen):
             logits, cache = decode(params, cache, cur)
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            cur = pick(logits, step + 1)
             toks += args.requests
     dt = time.monotonic() - t0
     print(f"served {args.requests} requests, {toks} tokens "

@@ -114,9 +114,11 @@ class PoolServer(PagedServer):
         self._sharded_chunk = shard_map_unchecked(
             self._chunk_body, mesh=mesh, in_specs=chunk_in,
             out_specs=chunk_out)
-        # shard_map'd horizon bodies, one per (static) horizon length —
-        # bounded by the pow2 bucketing in ``horizon_batch``
+        # shard_map'd horizon / speculative bodies, one per (static)
+        # horizon length — bounded by the pow2 bucketing in
+        # ``horizon_batch`` / ``spec_horizon_batch``
         self._sharded_horizons: Dict[int, object] = {}
+        self._sharded_specs: Dict[int, object] = {}
 
     # -- store / table factories ---------------------------------------------
 
@@ -296,7 +298,16 @@ class PoolServer(PagedServer):
     # -- fused decode horizon (sharded) ---------------------------------------
 
     def decode_horizon_step(self, params, state, page_table, lengths,
-                            tokens, budget, eos_id, *, horizon: int):
+                            tokens, budget, eos_id, key=None,
+                            temperature=None, top_p=None, *,
+                            horizon: int):
+        if key is None:
+            # shard_map specs are positional: materialize the sampling
+            # triple (greedy ignores the values inside the traced
+            # switch, so this costs nothing and keeps one spec set)
+            key = jax.random.PRNGKey(0)
+            temperature = jnp.float32(0.0)
+            top_p = jnp.float32(1.0)
         fn = self._sharded_horizons.get(horizon)
         if fn is None:
             in_specs, out_specs = shd.pool_horizon_specs(self.quantized)
@@ -305,10 +316,11 @@ class PoolServer(PagedServer):
                 mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
             self._sharded_horizons[horizon] = fn
         return fn(params, state, page_table, lengths, tokens, budget,
-                  eos_id)
+                  eos_id, key, temperature, top_p)
 
     def _horizon_body(self, params, state, page_table, lengths,
-                      tokens, budget, eos_id, *, horizon: int):
+                      tokens, budget, eos_id, key, temperature, top_p,
+                      *, horizon: int):
         """Per-node slice of one fused decode horizon.
 
         The shared ``_fused_horizon_scan`` scaffold with the pool's two
@@ -329,7 +341,44 @@ class PoolServer(PagedServer):
                                                     page_table)
         return self._fused_horizon_scan(
             params, state, page_table, lengths, tokens,
-            budget, eos_id, horizon=horizon,
+            budget, eos_id, key, temperature, top_p, horizon=horizon,
+            append_target=append_target, attention=attention)
+
+    # -- speculative draft-verify (sharded) -----------------------------------
+
+    def decode_spec_step(self, params, state, page_table, lengths,
+                         tokens, budget, eos_id, hist, hist_len, key,
+                         temperature, top_p, *, horizon: int):
+        fn = self._sharded_specs.get(horizon)
+        if fn is None:
+            in_specs, out_specs = shd.pool_spec_specs(self.quantized)
+            fn = shard_map_unchecked(
+                lambda *a: self._spec_body(*a, horizon=horizon),
+                mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
+            self._sharded_specs[horizon] = fn
+        return fn(params, state, page_table, lengths, tokens, budget,
+                  eos_id, hist, hist_len, key, temperature, top_p)
+
+    def _spec_body(self, params, state, page_table, lengths, tokens,
+                   budget, eos_id, hist, hist_len, key, temperature,
+                   top_p, *, horizon: int):
+        """Per-node slice of one speculative draft-verify pass.
+
+        The shared ``_spec_verify_scan`` scaffold with the pool hooks:
+        the drafter reads the replicated history table (every node
+        computes the identical candidates — no cross-node traffic for
+        drafting), each node appends/attends only its owned pages with
+        the per-position causal lengths, the LSE partials merge across
+        the pool axis, and acceptance + sampling run on the *merged*
+        logits with the replicated key — so the packed emission block
+        is bit-identical on every node (the determinism
+        tests/test_speculative.py pins against a 1-node PagedServer).
+        """
+        append_target, attention = self._pool_hooks(
+            state["k"].shape[1], jnp.repeat(page_table, horizon, axis=0))
+        return self._spec_verify_scan(
+            params, state, page_table, lengths, tokens, budget, eos_id,
+            hist, hist_len, key, temperature, top_p, horizon=horizon,
             append_target=append_target, attention=attention)
 
     def _chunk_body(self, params, state, page_row, tokens, start,

@@ -66,18 +66,32 @@ class ContinuousBatcher:
     device via budgets (plus host-side truncation when active requests
     disagree on ``eos_id``), so greedy outputs are token-for-token
     identical to the per-token schedule.
+
+    ``speculative=True`` runs each horizon iteration as a draft-verify
+    pass (``decode(speculative=True)``): an iteration now yields a
+    *variable* number of tokens per request — whatever the acceptance
+    mask kept — and budgets re-derive from actual output lengths, so
+    the loop needs no other change.  ``sampling`` threads an on-device
+    :class:`~repro.runtime.serve.SamplingConfig` through every decode
+    call (greedy when None).
     """
 
     def __init__(self, server, *, max_active: int = 8, horizon: int = 1,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 speculative: bool = False, sampling=None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
+        if speculative and horizon < 2:
+            raise ValueError(
+                f"speculative scheduling needs horizon >= 2, got {horizon}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.server = server
         self.max_active = max_active
         self.horizon = horizon
+        self.speculative = speculative
+        self.sampling = sampling
         # chunked admission: an admitted request prefills at most
         # ``prefill_chunk`` tokens per scheduler iteration (one jitted
         # chunk), interleaved with the active set's decode horizons, so
@@ -174,7 +188,8 @@ class ContinuousBatcher:
         if not self.active:
             return 0
         if self.horizon <= 1:
-            out = self.server.decode(1, seqs=list(self.active))
+            out = self.server.decode(1, seqs=list(self.active),
+                                     sampling=self.sampling)
             n = 0
             for rid, toks in out.items():
                 self.active[rid].output.extend(toks)
@@ -190,14 +205,22 @@ class ContinuousBatcher:
         capped by the horizon) and — when every active request agrees
         on one ``eos_id`` — at EOS; with mixed eos ids the surplus
         tokens are truncated host-side, so outputs match the per-token
-        schedule either way."""
+        schedule either way.
+
+        Speculative iterations return variable accepted lengths per
+        request; budgets re-derive from output lengths each iteration,
+        so variable progress needs no special accounting."""
         budgets = {rid: req.max_tokens - len(req.output)
                    for rid, req in self.active.items()}
         h = min(self.horizon, max(budgets.values()))
         eos_ids = {req.eos_id for req in self.active.values()}
         eos = eos_ids.pop() if len(eos_ids) == 1 else None
         out = self.server.decode(h, seqs=list(self.active), horizon=h,
-                                 eos_id=eos, budgets=budgets)
+                                 eos_id=eos, budgets=budgets,
+                                 sampling=self.sampling,
+                                 # a 1-token tail horizon has no room
+                                 # for candidates: run it plain
+                                 speculative=self.speculative and h >= 2)
         n = 0
         for rid, toks in out.items():
             req = self.active[rid]
@@ -263,9 +286,11 @@ class PoolRouter(ContinuousBatcher):
     """
 
     def __init__(self, server, pool=None, *, max_active: int = 8,
-                 horizon: int = 1, prefill_chunk: Optional[int] = None):
+                 horizon: int = 1, prefill_chunk: Optional[int] = None,
+                 speculative: bool = False, sampling=None):
         super().__init__(server, max_active=max_active, horizon=horizon,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk,
+                         speculative=speculative, sampling=sampling)
         self.pool = pool
         self.requeues = 0
         self._target_node: Optional[int] = None

@@ -34,10 +34,27 @@ stop finished sequences mid-horizon, and exactly one [H, B] token
 transfer crosses the boundary per horizon — greedy outputs are
 token-for-token identical to the per-token path (DESIGN.md §Decode
 horizon).
+
+**Speculative decoding** (``decode(speculative=True)``) turns the same
+scaffold into a draft-verify loop: an n-gram / prompt-lookup drafter
+(``draft_ngram`` — suffix-match over the sequence's own
+prompt+generated history, a device-side table so drafting adds no host
+round-trip) proposes up to H-1 candidate tokens per sequence, ONE
+chunk-shaped pass verifies every candidate (per-step query positions
+against the pre-reserved pages), the on-device acceptance mask keeps
+the longest matched prefix plus the bonus token from the first
+mismatch, and ``commit_horizon`` rolls the rest of the reservation
+back.  Token selection is on-device throughout — greedy argmax or
+temperature/top-p Gumbel sampling on a per-step PRNG key
+(``SamplingConfig``), with rejection-sampling acceptance so
+speculative sampling stays distribution-correct (DESIGN.md
+§Speculative decoding).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -163,6 +180,114 @@ def _pow2_floor(n: int) -> int:
     return 1 << (max(n, 1).bit_length() - 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """On-device token selection, threaded through ``decode`` /
+    ``horizon_batch`` / ``spec_horizon_batch``.
+
+    ``temperature <= 0`` is greedy argmax — the default, bit-identical
+    to the historical ``greedy=True`` path.  ``temperature > 0``
+    samples on device via Gumbel-max over the temperature-scaled,
+    top-p-filtered distribution; the PRNG key derives from ``seed``
+    (folded with the pass index host-side, the step index on device),
+    so every pool node draws the identical sample from the merged
+    logits and tokens stay device-invariant across shards."""
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingConfig()
+
+
+def sampling_log_probs(logits, temperature, top_p):
+    """Log-probs of the temperature/top-p target distribution.
+
+    ``logits`` [..., V]; ``temperature``/``top_p`` [] f32 arrays
+    (traced, so toggling sampling never retraces).  Tokens outside the
+    nucleus — the smallest probability-sorted set with mass >=
+    ``top_p`` (cutoff ties all kept) — go to NEG_INF and the rest
+    renormalize.  This IS the distribution speculative acceptance must
+    be correct against, so the verify pass scores drafted tokens with
+    exactly these probabilities."""
+    t = jnp.maximum(temperature.astype(jnp.float32), 1e-6)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32) / t, axis=-1)
+    p = jnp.exp(lp)
+    srt = jnp.sort(p, axis=-1)[..., ::-1]
+    mass_before = jnp.cumsum(srt, axis=-1) - srt
+    cut = jnp.min(jnp.where(mass_before < top_p, srt, jnp.inf),
+                  axis=-1, keepdims=True)
+    lp = jnp.where(p >= cut, lp, NEG_INF)
+    return lp - jax.nn.logsumexp(lp, axis=-1, keepdims=True)
+
+
+# n-gram drafter tuning: a candidate site must match at least
+# SPEC_MIN_MATCH trailing history tokens (a bigram minimum drowns in
+# spurious matches on non-repetitive text — every false draft burns a
+# verify position), and match quality is scored up to SPEC_MAX_MATCH
+# trailing tokens (longer suffix agreement disambiguates cycles whose
+# bigrams recur with different successors)
+SPEC_MIN_MATCH = 3
+SPEC_MAX_MATCH = 8
+
+
+def draft_ngram(hist, hist_len, n_draft: int):
+    """Device-side n-gram / prompt-lookup drafter.
+
+    Suffix-match over the sequence's own prompt+generated token
+    history: find the earlier site whose trailing tokens agree with the
+    history's suffix on the longest run (scored up to
+    ``SPEC_MAX_MATCH``, required >= ``SPEC_MIN_MATCH``; ties prefer a
+    site with a full ``n_draft`` of successor tokens, then the latest
+    one) and propose the tokens that followed it.  The history rides in
+    as a replicated device table, so drafting costs zero host
+    round-trips and every pool shard derives the identical candidates.
+
+    hist: [B, T] int32 (prompt + generated incl. the pending token,
+    garbage past ``hist_len``); hist_len: [B] int32.  Returns
+    [B, n_draft] int32 candidates, -1 where nothing matched (a -1
+    candidate can never equal a real token, so the verify pass rejects
+    it for free)."""
+    b, t = hist.shape
+    ar = jnp.arange(t, dtype=jnp.int32)
+    k = int(min(SPEC_MAX_MATCH, t))
+    # suffix tokens newest-first: last_js[:, j] = hist[hl - 1 - j]
+    idx = jnp.clip(hist_len[:, None] - 1 - jnp.arange(k)[None, :],
+                   0, t - 1)
+    last_js = jnp.take_along_axis(hist, idx, axis=1)         # [B, K]
+    run = jnp.ones((b, t), bool)
+    mlen = jnp.zeros((b, t), jnp.int32)
+    for j in range(k):
+        # hj[:, i] = hist[:, i - j] (the token j back from site i)
+        hj = (jnp.pad(hist, ((0, 0), (j, 0)),
+                      constant_values=-1)[:, :t] if j else hist)
+        e = ((hj == last_js[:, j:j + 1]) & (ar[None, :] >= j) &
+             ((hist_len[:, None] - 1 - j) >= 0))
+        run = run & e
+        mlen = mlen + run.astype(jnp.int32)
+    valid = ((mlen >= SPEC_MIN_MATCH) & (ar[None, :] >= 1) &
+             (ar[None, :] < (hist_len - 1)[:, None]))
+    # successor tokens actually available after site i — the draft
+    # length this site can fill.  Ranked FIRST: on a repeating stream
+    # the deepest matches crowd the history tail where there is nothing
+    # left to copy, so runway (how much we can draft) outranks match
+    # depth (how sure we are), with depth and recency as tiebreaks
+    runway = jnp.clip((hist_len[:, None] - 1) - ar[None, :], 0, n_draft)
+    score = jnp.where(
+        valid,
+        (runway * (SPEC_MAX_MATCH + 1) + mlen) * t + ar[None, :], -1)
+    best = jnp.max(score, axis=1)                            # [B]
+    match = jnp.where(best >= 0, best % t, -1)
+    di = match[:, None] + 1 + jnp.arange(n_draft, dtype=jnp.int32)[None]
+    ok = (match >= 1)[:, None] & (di < hist_len[:, None])
+    cand = jnp.take_along_axis(hist, jnp.clip(di, 0, t - 1), axis=1)
+    return jnp.where(ok, cand, -1).astype(jnp.int32)
+
+
 class PagedServer:
     """Tiered-KV serving for a TransformerLM on one device.
 
@@ -228,6 +353,24 @@ class PagedServer:
         self._horizon_jit = jax.jit(self.decode_horizon_step,
                                     static_argnames=("horizon",),
                                     donate_argnums=donate)
+        self._spec_jit = jax.jit(self.decode_spec_step,
+                                 static_argnames=("horizon",),
+                                 donate_argnums=donate)
+        # prompt + generated (incl. pending) tokens per live sequence —
+        # the drafter's lookup corpus; uploaded per spec pass like the
+        # page table, never read back
+        self._history: Dict[int, List[int]] = {}
+        self.spec_lookup_window = 256
+        # adaptive gate: speculation pays only while drafts land, so a
+        # rolling acceptance-rate EMA below the floor routes passes to
+        # the plain horizon, with periodic probe passes to reopen
+        # the break-even acceptance rate rises with the draft depth (a
+        # mostly-rejected H=16 verify costs the same device time as a
+        # fallback pass that commits all 16), so the gate closes early
+        self.spec_alpha_floor = 0.7
+        self.spec_probe_every = 16
+        self.spec_stats: Dict[str, object] = {}
+        self.reset_speculation_stats()
 
     def _new_store(self) -> PageStore:
         """The store the config prescribes (used at init and when a failed
@@ -265,6 +408,7 @@ class PagedServer:
         self._pending.pop(seq_id, None)
         self._prefill_state.pop(seq_id, None)
         self._prefill_unmatched.discard(seq_id)
+        self._history.pop(seq_id, None)
         return freed
 
     def _recover_store(self):
@@ -285,6 +429,7 @@ class PagedServer:
         self._pending.clear()
         self._prefill_state.clear()
         self._prefill_unmatched.clear()
+        self._history.clear()
 
     # -- shared transformer-block halves (used by the jitted decode /
     #    prefill bodies and the eager reference; only the attention
@@ -399,7 +544,8 @@ class PagedServer:
         return normalize_partials(acc, m, l).astype(q.dtype)
 
     def _fused_horizon_scan(self, params, state, page_table, lengths,
-                            tokens, budget, eos_id, *, horizon: int,
+                            tokens, budget, eos_id, key=None,
+                            temperature=None, top_p=None, *, horizon: int,
                             append_target, attention):
         """The fused-step scaffold shared by the single-node and pool
         horizon bodies: one ``lax.scan`` over ``horizon`` decode steps
@@ -418,11 +564,18 @@ class PagedServer:
         Returns (emitted [H, B], last step's logits [B, V] f32, state)
         — the logits make H=1 *be* the per-token decode step (one
         scaffold, token identity by construction).
+
+        ``key``/``temperature``/``top_p`` enable on-device sampling:
+        each step folds its index into the key and Gumbel-samples from
+        the temperature/top-p target; ``temperature <= 0`` falls
+        through to the greedy argmax *inside* the traced switch, so
+        toggling sampling never retraces and greedy outputs stay
+        bit-identical to the key-free program.
         """
         cfg = self.cfg
         b = tokens.shape[0]
 
-        def step(carry, _):
+        def step(carry, i):
             state, lengths, tokens, budget = carry
             valid = (budget > 0) & (lengths > 0)
             pos = lengths[:, None]
@@ -450,6 +603,18 @@ class PagedServer:
             logits = L.unembed(params["embed"], params.get("lm_head"), h,
                                cfg.tie_embeddings)[:, 0]
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if key is not None:
+                # lax.cond (not where): greedy passes must not pay the
+                # top-p sort + Gumbel draw at runtime
+                def _sample(lg):
+                    lp = sampling_log_probs(lg, temperature, top_p)
+                    g = jax.random.gumbel(jax.random.fold_in(key, i),
+                                          lp.shape, jnp.float32)
+                    return jnp.argmax(lp + g, axis=-1).astype(jnp.int32)
+                nxt = lax.cond(temperature > 0, _sample,
+                               lambda lg: jnp.argmax(
+                                   lg, axis=-1).astype(jnp.int32),
+                               logits)
             emitted = jnp.where(valid, nxt, -1)
             # the token just emitted consumed one budget slot; EOS zeroes
             # what's left so the next step goes inactive
@@ -461,11 +626,13 @@ class PagedServer:
 
         (state, lengths, tokens, budget), (emitted, logits) = \
             lax.scan(step, (state, lengths, tokens, budget),
-                     None, length=horizon)
+                     jnp.arange(horizon, dtype=jnp.int32))
         return emitted, logits[-1], state
 
     def decode_horizon_step(self, params, state, page_table, lengths,
-                            tokens, budget, eos_id, *, horizon: int):
+                            tokens, budget, eos_id, key=None,
+                            temperature=None, top_p=None, *,
+                            horizon: int):
         """``horizon`` fused decode steps in ONE device program.
 
         A single ``lax.scan`` over the horizon: each step appends the
@@ -491,12 +658,164 @@ class PagedServer:
         n_phys = state["k"].shape[1]
         return self._fused_horizon_scan(
             params, state, page_table, lengths, tokens,
-            budget, eos_id, horizon=horizon,
+            budget, eos_id, key, temperature, top_p, horizon=horizon,
             # out-of-bounds sentinel => scatter drops finished/padding
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
             attention=lambda q, st, new_lengths:
                 self._horizon_attention(q, st, page_table, new_lengths))
+
+    # -- speculative decoding (draft-verify on the horizon scaffold) ----------
+
+    def _spec_verify_scan(self, params, state, page_table, lengths,
+                          tokens, budget, eos_id, hist, hist_len, key,
+                          temperature, top_p, *, horizon: int,
+                          append_target, attention):
+        """The draft-verify scaffold shared by the single-node and pool
+        speculative bodies (the hooks mirror
+        :meth:`_prefill_chunk_scan`'s — speculation verifies a
+        *chunk-shaped* batch of candidate positions, not a sequential
+        horizon).
+
+        One pass: ``draft_ngram`` proposes ``horizon-1`` candidates per
+        sequence from the device-resident history table; the fed block
+        ``[pending, d_1 .. d_{H-1}]`` runs the layer stack as ``horizon``
+        decode-shaped queries with per-position causal lengths (one
+        ``lax.scan`` over layers — the H-position forward costs one
+        model pass, which is the entire speedup); position ``j``'s
+        logits then judge candidate ``d_{j+1}``.  Acceptance on device:
+        greedy mode accepts while ``argmax == candidate``; sampling
+        mode does point-mass rejection sampling (accept ``d`` w.p.
+        ``p(d)``, else Gumbel-sample the ``d``-masked residual — the
+        emitted stream is distributed exactly as non-speculative
+        sampling).  The longest ok-prefix plus the bonus token from the
+        first mismatch is emitted; everything downstream of the first
+        break is masked to -1 so ``commit_horizon`` rolls its pages
+        back.
+
+        Returns (packed [horizon+1, B] int32 — emitted rows then the
+        per-sequence drafted-count row, ONE device->host transfer —
+        and the page state).
+        """
+        cfg = self.cfg
+        b = tokens.shape[0]
+        pps = page_table.shape[1]
+        hzn = horizon
+        hkv, hd, nh = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+
+        draft = draft_ngram(hist, hist_len, hzn - 1)          # [B, H-1]
+        n_drafted = jnp.sum((draft >= 0).astype(jnp.int32), axis=1)
+        fed = jnp.concatenate([tokens[:, None], jnp.maximum(draft, 0)],
+                              axis=1)                          # [B, H]
+        steps = jnp.arange(hzn, dtype=jnp.int32)[None, :]      # [1, H]
+        pos = lengths[:, None] + steps                         # [B, H]
+        # appends stay inside the reservation: a position past the
+        # budget was never reserved a page, so it must not scatter
+        append_ok = (steps < budget[:, None]) & (lengths[:, None] > 0)
+        pidx = jnp.clip(pos // self.page, 0, pps - 1)
+        offs = (pos % self.page).reshape(-1)
+        phys = jnp.take_along_axis(page_table, pidx, axis=1)
+        tgt = append_target(phys.reshape(-1), append_ok.reshape(-1))
+        # per-position causal extent; 0 fully masks dead positions
+        row_lengths = jnp.where(append_ok, pos + 1, 0).reshape(-1)
+
+        h = L.embed_tokens(params["embed"], fed, self.dtype)
+
+        def body(hh, xs):
+            lp, st = xs
+            q, k, v = self._attn_inputs(lp, hh, pos)
+            st = self._append_state(st, tgt, offs,
+                                    k.reshape(b * hzn, hkv, hd),
+                                    v.reshape(b * hzn, hkv, hd))
+            o = attention(q.reshape(b * hzn, nh, hd).astype(self.dtype),
+                          st, row_lengths)
+            return self._attn_out_ffn(lp, hh, o.reshape(b, hzn, -1)), st
+
+        h, state = lax.scan(body, h, (params["layers"], state))
+        h = L.apply_norm(params["final_norm"], h, cfg.norm)
+        logits = L.unembed(params["embed"], params.get("lm_head"), h,
+                           cfg.tie_embeddings).astype(jnp.float32)
+        v_sz = logits.shape[-1]
+
+        greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # candidate that position j's logits verify: d_{j+1}; the last
+        # position has none (its emission is the bonus token)
+        d_next = jnp.concatenate(
+            [draft, jnp.full((b, 1), -1, jnp.int32)], axis=1)  # [B, H]
+
+        has_draft = d_next >= 0
+
+        def _greedy_sel(lg):
+            return greedy_tok == d_next, greedy_tok
+
+        def _sample_sel(lg):
+            # three independent streams per step position, derived on
+            # device from the pass key — every pool node draws the same
+            pos_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(hzn, dtype=jnp.int32))
+            sub = jax.vmap(lambda k: jax.random.split(k, 3))(pos_keys)
+            u = jax.vmap(
+                lambda k: jax.random.uniform(k, (b,)))(sub[:, 0]).T
+            g_res = jnp.swapaxes(jax.vmap(
+                lambda k: jax.random.gumbel(k, (b, v_sz)))(sub[:, 1]),
+                0, 1)
+            g_full = jnp.swapaxes(jax.vmap(
+                lambda k: jax.random.gumbel(k, (b, v_sz)))(sub[:, 2]),
+                0, 1)
+            lp = sampling_log_probs(lg, temperature, top_p)
+            p_d = jnp.take_along_axis(
+                jnp.exp(lp), jnp.clip(d_next, 0, v_sz - 1)[..., None],
+                axis=-1)[..., 0]                               # [B, H]
+            acc_sample = u < p_d
+            vi = jnp.arange(v_sz, dtype=jnp.int32)
+            resid_lp = jnp.where(vi[None, None, :] == d_next[..., None],
+                                 NEG_INF, lp)
+            resid_tok = jnp.argmax(resid_lp + g_res,
+                                   axis=-1).astype(jnp.int32)
+            full_tok = jnp.argmax(lp + g_full, axis=-1).astype(jnp.int32)
+            samp_out = jnp.where(acc_sample & has_draft, d_next,
+                                 jnp.where(has_draft, resid_tok,
+                                           full_tok))
+            return acc_sample, samp_out
+
+        # lax.cond (not where): a greedy pass must not pay the top-p
+        # sort + three Gumbel/uniform draws at runtime
+        accept_raw, out_tok = lax.cond(temperature > 0, _sample_sel,
+                                       _greedy_sel, logits)
+        accept = accept_raw & has_draft                        # [B, H]
+
+        # longest ok-prefix: position j emits iff every earlier position
+        # accepted its candidate, stayed under budget, and did not EOS
+        live0 = (budget > 0) & (lengths > 0)
+        cont = accept & (out_tok != eos_id) & (steps + 1 < budget[:, None])
+        chain = jnp.cumprod(cont.astype(jnp.int32), axis=1)
+        ok = live0[:, None] & jnp.concatenate(
+            [jnp.ones((b, 1), bool), chain[:, :-1].astype(bool)], axis=1)
+        emitted = jnp.where(ok, out_tok, -1).astype(jnp.int32)
+        packed = jnp.concatenate([emitted.T, n_drafted[None, :]], axis=0)
+        return packed, state
+
+    def decode_spec_step(self, params, state, page_table, lengths,
+                         tokens, budget, eos_id, hist, hist_len, key,
+                         temperature, top_p, *, horizon: int):
+        """One jitted speculative draft-verify pass on one device.
+
+        Arguments as :meth:`decode_horizon_step` plus ``hist``
+        [B, T] int32 / ``hist_len`` [B] (the drafter's history table),
+        ``key`` (the pass PRNG key) and ``temperature``/``top_p`` []
+        f32.  Returns (packed [horizon+1, B] int32, state) — see
+        :meth:`_spec_verify_scan`.
+        """
+        n_phys = state["k"].shape[1]
+        # every flattened query row attends over its sequence's table
+        rows_table = jnp.repeat(page_table, horizon, axis=0)
+        return self._spec_verify_scan(
+            params, state, page_table, lengths, tokens, budget, eos_id,
+            hist, hist_len, key, temperature, top_p, horizon=horizon,
+            append_target=lambda phys, valid:
+                jnp.where(valid, phys, n_phys),
+            attention=lambda q, st, row_lengths:
+                self._horizon_attention(q, st, rows_table, row_lengths))
 
     def _prefill_chunk_scan(self, params, state, page_row, tokens, start,
                             n_valid, *, append_target, attention):
@@ -577,6 +896,7 @@ class PagedServer:
         self.table.add_sequence(seq_id)
         self._seqs.append(seq_id)
         self._prefill_state[seq_id] = prompt
+        self._history[seq_id] = [int(t) for t in prompt]
         if not self.prefix_cache:
             return 0
         self._prefill_unmatched.add(seq_id)
@@ -651,6 +971,10 @@ class PagedServer:
         if self.prefix_cache:
             self.table.register_prefix(seq_id, prompt)
         self._pending[seq_id] = int(jnp.argmax(logits))
+        if seq_id in self._history:
+            # the pending token is the first generated one: it will be
+            # fed (and is thus drafter-visible) before it is re-emitted
+            self._history[seq_id].append(self._pending[seq_id])
         return logits
 
     def add_request(self, seq_id: int, prompt: np.ndarray, *,
@@ -807,11 +1131,16 @@ class PagedServer:
 
     def horizon_batch(self, tokens: Dict[int, int],
                       budgets: Dict[int, int], horizon: int,
-                      eos_id: Optional[int] = None) -> Dict[int, List[int]]:
+                      eos_id: Optional[int] = None,
+                      sampling: Optional[SamplingConfig] = None,
+                      _key=None) -> Dict[int, List[int]]:
         """Run one fused decode horizon over ``tokens`` ({seq: pending
         token}) and commit the appends.  ``budgets[s]`` caps how many
         tokens sequence ``s`` may produce (<= horizon); ``eos_id`` stops
-        a sequence on device when it emits that token.  Returns
+        a sequence on device when it emits that token.  ``sampling``
+        selects on-device greedy argmax (default) or temperature/top-p
+        Gumbel sampling; ``_key`` overrides the pass PRNG key (the
+        ``decode`` loop threads one per pass).  Returns
         {seq_id: emitted tokens} — one device->host transfer total.
 
         The traced horizon length is bucketed DOWN to a power of two
@@ -819,7 +1148,11 @@ class PagedServer:
         pow2 horizons), so mixed tails neither retrace the program nor
         burn masked full-model steps.
         """
+        sampling = sampling or GREEDY
         seqs = list(tokens)
+        if _key is None:
+            _key = jax.random.fold_in(
+                jax.random.PRNGKey(sampling.seed), 0)
         h_run = _pow2_floor(min(horizon, max(budgets[s] for s in seqs)))
         page_table, lengths, buds = self._plan_horizon(
             seqs, {s: min(budgets[s], h_run) for s in seqs})
@@ -830,7 +1163,9 @@ class PagedServer:
             emitted, _, state = self._horizon_jit(
                 self.params, self.store.device_state(),
                 page_table, lengths, jnp.asarray(toks), buds,
-                jnp.asarray(eos), horizon=h_run)
+                jnp.asarray(eos), _key,
+                jnp.float32(sampling.temperature),
+                jnp.float32(sampling.top_p), horizon=h_run)
             # THE one transfer of the horizon: [h_run, B] int32 tokens
             emitted = np.asarray(emitted)
             self.store.adopt(state)
@@ -838,6 +1173,8 @@ class PagedServer:
             for i, s in enumerate(seqs):
                 got = [int(t) for t in emitted[:, i] if t >= 0]
                 out[s] = got
+                if s in self._history:
+                    self._history[s].extend(got)
                 # committed appends == emitted tokens (each fused step
                 # feeds one token and emits one); rollback the unused
                 # tail of the reservation
@@ -855,14 +1192,171 @@ class PagedServer:
             self.table.unpin_all()
         return out
 
+    # -- one committed speculative pass ---------------------------------------
+
+    def _host_can_draft(self, seq_id: int) -> bool:
+        """Host-side mirror of the device drafter's match predicate:
+        does the lookup window contain an earlier occurrence of the
+        history's final ``SPEC_MIN_MATCH``-gram?  Used only for the
+        adaptive fallback — when NO live sequence can draft, a
+        speculative pass would burn an H-position forward for one token
+        each, so the pass routes through the plain fused horizon
+        instead."""
+        h = self._history.get(seq_id)
+        if h is None or len(h) < SPEC_MIN_MATCH + 1:
+            return False
+        a = np.asarray(h[-self.spec_lookup_window:], np.int64)
+        if a.shape[0] < SPEC_MIN_MATCH + 1:
+            return False
+        m = np.ones((a.shape[0] - SPEC_MIN_MATCH,), bool)
+        for j in range(SPEC_MIN_MATCH):
+            lo, hi = SPEC_MIN_MATCH - 1 - j, a.shape[0] - 1 - j
+            m &= a[lo:hi] == a[-1 - j]
+        return bool(m.any())
+
+    def spec_horizon_batch(self, tokens: Dict[int, int],
+                           budgets: Dict[int, int], horizon: int,
+                           eos_id: Optional[int] = None,
+                           sampling: Optional[SamplingConfig] = None,
+                           _key=None) -> Dict[int, List[int]]:
+        """Run one speculative draft-verify pass (arguments as
+        :meth:`horizon_batch`) and commit the accepted prefixes.
+
+        The reservation is the same ``reserve_horizon`` ask the plain
+        horizon makes; ``commit_horizon`` keeps only the accepted
+        tokens + bonus and rolls the rejected tail's pages back, so
+        accepted-length variance never changes device shapes (the jit
+        cache is keyed on the pow2 horizon/batch/table buckets only).
+        Two adaptive fallbacks hold adversarial (non-repetitive)
+        workloads near plain-horizon throughput, both counted in
+        ``spec_stats``: when no live sequence's history can produce a
+        draft — or the bucketed horizon degenerates below 2 — the pass
+        routes to :meth:`horizon_batch`; and when the rolling
+        acceptance-rate EMA drops below ``spec_alpha_floor`` the gate
+        closes and only every ``spec_probe_every``-th pass still
+        speculates (a probe — if the workload turns repetitive the EMA
+        recovers and the gate reopens).
+        """
+        sampling = sampling or GREEDY
+        seqs = list(tokens)
+        if _key is None:
+            _key = jax.random.fold_in(
+                jax.random.PRNGKey(sampling.seed), 0)
+        h_run = _pow2_floor(min(horizon, max(budgets[s] for s in seqs)))
+        gated = self.spec_alpha_ema < self.spec_alpha_floor
+        if gated:
+            self._spec_probe_tick += 1
+        if (h_run < 2 or
+                (gated and self._spec_probe_tick % self.spec_probe_every)
+                or not any(self._host_can_draft(s) for s in seqs)):
+            self.spec_stats["fallback_passes"] += 1
+            if gated:
+                self.spec_stats["gated_passes"] += 1
+            return self.horizon_batch(tokens, budgets, horizon,
+                                      eos_id=eos_id, sampling=sampling,
+                                      _key=_key)
+        page_table, lengths, buds = self._plan_horizon(
+            seqs, {s: min(budgets[s], h_run) for s in seqs})
+        b2 = int(lengths.shape[0])
+        w = self.spec_lookup_window
+        hists = [self._history.get(s, [])[-w:] for s in seqs]
+        # fixed-width table (pow2 of the lookup window): history growth
+        # must never retrace mid-run, and the upload is a few KB anyway
+        t2 = _pow2(w)
+        hist = np.full((b2, t2), -1, np.int32)
+        hlen = np.zeros((b2,), np.int32)
+        for i, hh in enumerate(hists):
+            hist[i, :len(hh)] = hh
+            hlen[i] = len(hh)
+        try:
+            toks = np.zeros((b2,), np.int32)
+            toks[:len(seqs)] = [tokens[s] for s in seqs]
+            eos = np.int32(eos_id if eos_id is not None else -1)
+            packed, state = self._spec_jit(
+                self.params, self.store.device_state(), page_table,
+                lengths, jnp.asarray(toks), buds, jnp.asarray(eos),
+                jnp.asarray(hist), jnp.asarray(hlen), _key,
+                jnp.float32(sampling.temperature),
+                jnp.float32(sampling.top_p), horizon=h_run)
+            # THE one transfer of the pass: [h_run + 1, B] int32
+            # (emitted rows + the drafted-count telemetry row)
+            packed = np.asarray(packed)
+            self.store.adopt(state)
+            emitted, n_drafted = packed[:-1], packed[-1]
+            out = {}
+            st = self.spec_stats
+            st["passes"] += 1
+            for i, s in enumerate(seqs):
+                got = [int(t) for t in emitted[:, i] if t >= 0]
+                out[s] = got
+                if s in self._history:
+                    self._history[s].extend(got)
+                # committed appends == accepted prefix + bonus; the
+                # rejected tail of the reservation rolls back here
+                self.table.commit_horizon(s, len(got))
+                drafted = int(n_drafted[i])
+                st["drafted"] += drafted
+                st["accepted"] += max(0, min(len(got) - 1, drafted))
+                st["emitted"] += len(got)
+                hist_k = len(got)
+                st["accepted_len_hist"][hist_k] = \
+                    st["accepted_len_hist"].get(hist_k, 0) + 1
+            # rolling acceptance EMA drives the adaptive gate: a pass
+            # whose drafts mostly miss pushes the EMA toward closing it
+            pass_drafted = int(n_drafted[:len(seqs)].sum())
+            if pass_drafted:
+                pass_acc = sum(
+                    max(0, min(len(out[s]) - 1, int(n_drafted[i])))
+                    for i, s in enumerate(seqs)) / pass_drafted
+                # fast EMA: a hostile workload must close the gate
+                # within a couple of failed passes, not a dozen
+                self.spec_alpha_ema = (0.5 * self.spec_alpha_ema +
+                                       0.5 * pass_acc)
+        except Exception:
+            self._recover_store()
+            # store intact (the failure was not a donated-buffer loss):
+            # roll back every surviving sequence's unused reservation so
+            # no data-less pages stay resident
+            for s in seqs:
+                if s in self._seqs:
+                    self.table.commit_horizon(s, 0)
+            raise
+        finally:
+            self.table.unpin_all()
+        return out
+
+    def speculation_stats(self) -> Dict[str, object]:
+        """Speculative telemetry: pass/fallback counts, drafted vs
+        accepted candidates (``alpha`` = acceptance rate), and the
+        emitted-length histogram {tokens_per_pass: passes}."""
+        st = dict(self.spec_stats)
+        st["accepted_len_hist"] = dict(st["accepted_len_hist"])
+        st["alpha"] = (st["accepted"] / st["drafted"]
+                       if st["drafted"] else 0.0)
+        return st
+
+    def reset_speculation_stats(self) -> None:
+        """Zero the speculative counters and reopen the adaptive gate
+        (EMA back to its optimistic start) — benchmark reps and tests
+        that re-admit sequences on a warm server call this so one rep's
+        acceptance history never gates the next."""
+        self.spec_stats = {
+            "passes": 0, "fallback_passes": 0, "gated_passes": 0,
+            "drafted": 0, "accepted": 0, "emitted": 0,
+            "accepted_len_hist": {}}
+        self.spec_alpha_ema = 1.0
+        self._spec_probe_tick = 0
+
     # -- decode loop ----------------------------------------------------------
 
-    def decode(self, n_tokens: int, greedy: bool = True,
+    def decode(self, n_tokens: int, greedy: Optional[bool] = None,
                seqs: Optional[List[int]] = None, *,
                horizon: Optional[int] = None,
                eos_id: Optional[int] = None,
-               budgets: Optional[Dict[int, int]] = None) -> Dict[int, list]:
-        """Batched greedy decode across live sequences (or a subset — the
+               budgets: Optional[Dict[int, int]] = None,
+               sampling: Optional[SamplingConfig] = None,
+               speculative: bool = False) -> Dict[int, list]:
+        """Batched decode across live sequences (or a subset — the
         HBM window only needs to hold the *active* batch's working set;
         idle sequences spill to the flash tier).
 
@@ -870,10 +1364,38 @@ class PagedServer:
         (plan, jitted step, argmax transfer) per generated token.
         ``horizon=H`` runs the fused path: H tokens per host
         interaction, greedy outputs token-for-token identical.
+        ``speculative=True`` runs draft-verify passes on the fused
+        scaffold (defaults ``horizon`` to 8): up to H tokens per model
+        forward, greedy outputs still token-identical.
         ``budgets``/``eos_id`` stop individual sequences early on both
         paths (on device inside a fused horizon; host-side between
         per-token steps); a sequence's entry stops growing once its
-        budget is spent or it emits ``eos_id``."""
+        budget is spent or it emits ``eos_id``.
+
+        ``sampling`` is the token-selection config (``GREEDY`` when
+        omitted).  ``greedy=`` is deprecated: it was the only selection
+        switch before on-device sampling existed and survives as a
+        shim."""
+        if greedy is not None:
+            warnings.warn(
+                "decode(greedy=) is deprecated; pass "
+                "sampling=SamplingConfig(temperature=...) instead",
+                DeprecationWarning, stacklevel=2)
+            if not greedy and sampling is None:
+                raise ValueError(
+                    "greedy=False no longer selects a sampler; pass "
+                    "sampling=SamplingConfig(temperature=..., top_p=...)")
+        sampling = sampling or GREEDY
+        if speculative:
+            if horizon is None:
+                horizon = 8
+            if horizon < 2:
+                raise ValueError("speculative decoding needs horizon >= 2 "
+                                 "(one fed token + >=1 draft candidate)")
+        elif not sampling.greedy and horizon is None:
+            # on-device sampling lives in the fused scaffold; run it at
+            # H=1 (the per-token path's host argmax can't sample)
+            horizon = 1
         active = self._seqs if seqs is None else seqs
         out = {s: [] for s in active}
         # page-in overlap model: pull any spilled pages of the activating
@@ -897,17 +1419,29 @@ class PagedServer:
                 for i, s in enumerate(seqs):
                     cur[s] = int(nxt_arr[i])
                     out[s].append(cur[s])
+                    if s in self._history:
+                        self._history[s].append(cur[s])
                     remaining[s] -= 1
                     if eos_id is not None and cur[s] == eos_id:
                         remaining[s] = 0
                 live = [s for s in live if remaining[s] > 0]
             self._pending.update(cur)
             return out
+        # one PRNG key per pass, folded from the sampling seed — the
+        # same derivation on every pool node, so sampled tokens are
+        # device-invariant (and reproducible per decode() call)
+        base_key = jax.random.PRNGKey(sampling.seed)
+        pass_idx = 0
+        batch_fn = (self.spec_horizon_batch if speculative
+                    else self.horizon_batch)
         while live:
-            got = self.horizon_batch(
+            pass_key = jax.random.fold_in(base_key, pass_idx)
+            pass_idx += 1
+            got = batch_fn(
                 {s: cur[s] for s in live},
                 {s: remaining[s] for s in live},
-                min(horizon, max(remaining[s] for s in live)), eos_id)
+                min(horizon, max(remaining[s] for s in live)),
+                eos_id=eos_id, sampling=sampling, _key=pass_key)
             for s in live:
                 out[s].extend(got[s])
                 remaining[s] -= len(got[s])

@@ -1,0 +1,426 @@
+"""Speculative draft-verify decoding tests.
+
+The contract: ``decode(horizon=H, speculative=True)`` — n-gram drafts
+verified in one chunk-shaped pass, on-device acceptance, partial
+``commit_horizon`` — must produce greedy outputs token-for-token
+identical to the non-speculative paths at every acceptance rate (the
+drafter never changes *what* is emitted, only how many passes it
+takes), leave the page table exactly where the plain horizon leaves
+it, keep the no-retrace guarantee across accepted-length variance, and
+derive bit-identical samples on every pool shard.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models.api import get_model
+from repro.runtime.pool import PoolServer
+from repro.runtime.scheduler import ContinuousBatcher, Request
+from repro.runtime.serve import (GREEDY, PagedServer, SamplingConfig,
+                                 draft_ngram, sampling_log_probs)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny_model():
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _serve(model, params, prompts, **kw):
+    srv = PagedServer(model, params, page_size=4, hbm_pages=64,
+                      dtype=jnp.float32, **kw)
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    return srv
+
+
+# repetitive prompts: a constant stream is the drafter's best case
+# (the history's suffix recurs everywhere with full runway), so greedy
+# decode accepts near-everything — the alpha~1 regime
+def _const_prompts(n=3, length=12):
+    return [np.full(length + i, c, np.int32)
+            for i, c in enumerate((5, 9, 13)[:n])]
+
+
+# ---------------------------------------------------------------------------
+# drafter unit level
+# ---------------------------------------------------------------------------
+
+
+def test_draft_ngram_copies_matched_successors():
+    # history 1 2 3 1 2 3 1 2 3 | suffix ..1 2 3 matches at site 5
+    # (runway 3) and site 2 (runway 6) — runway-first scoring picks the
+    # earlier site and drafts the continuation 1 2 3 1 ...
+    hist = jnp.asarray([[1, 2, 3, 1, 2, 3, 1, 2, 3, -1, -1, -1]],
+                       jnp.int32)
+    d = np.asarray(draft_ngram(hist, jnp.asarray([9], jnp.int32), 4))
+    assert d.tolist() == [[1, 2, 3, 1]]
+
+
+def test_draft_ngram_requires_min_match():
+    # final trigram (7 8 9) appears nowhere earlier: no draft, even
+    # though the final bigram-of-one (9) recurs
+    hist = jnp.asarray([[9, 1, 2, 9, 5, 7, 8, 9]], jnp.int32)
+    d = np.asarray(draft_ngram(hist, jnp.asarray([8], jnp.int32), 3))
+    assert (d == -1).all()
+
+
+def test_draft_ngram_short_history_is_silent():
+    hist = jnp.asarray([[4, 4, -1, -1]], jnp.int32)
+    d = np.asarray(draft_ngram(hist, jnp.asarray([2], jnp.int32), 3))
+    assert (d == -1).all()
+
+
+def test_sampling_log_probs_top_p_masks_tail():
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    lp = np.asarray(sampling_log_probs(logits, jnp.float32(1.0),
+                                       jnp.float32(0.6)))
+    p = np.exp(lp[0])
+    # nucleus keeps 0.5 and the 0.3 that crosses the 0.6 mass line;
+    # the 0.15/0.05 tail is masked and the survivors renormalize
+    assert p[2] < 1e-6 and p[3] < 1e-6
+    np.testing.assert_allclose(p[:2], [0.625, 0.375], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# greedy token identity at every acceptance rate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("regime", ["alpha0", "partial", "alpha1"])
+def test_spec_greedy_identity(regime):
+    """Speculative greedy decode must emit token-for-token what the
+    per-token (H=1) and fused (H=8) paths emit, whether drafts never
+    land (random text), partially land, or nearly always land
+    (constant stream)."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(0)
+    prompts = {
+        "alpha0": [rng.integers(0, cfg.vocab_size, 9, dtype=np.int32)
+                   for _ in range(3)],
+        "partial": [rng.integers(0, cfg.vocab_size, 9, dtype=np.int32),
+                    np.full(12, 5, np.int32),
+                    np.full(13, 9, np.int32)],
+        "alpha1": _const_prompts(),
+    }[regime]
+    gen = 24
+
+    def run(**kw):
+        return _serve(model, params, prompts).decode(gen, **kw)
+
+    ref = run(horizon=1)
+    assert run(horizon=8) == ref
+    srv = _serve(model, params, prompts)
+    assert srv.decode(gen, horizon=8, speculative=True) == ref
+    st = srv.speculation_stats()
+    if regime == "alpha1":
+        assert st["alpha"] > 0.7 and st["accepted"] > gen
+
+
+def test_spec_eos_and_budgets_match_non_spec():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    probe = _serve(model, params, prompts)
+    eos = int(probe.decode(8)[0][3])
+    budgets = {0: 3, 1: 8, 2: 6}
+
+    def run(spec):
+        srv = _serve(model, params, prompts)
+        out = srv.decode(8, horizon=8, eos_id=eos, budgets=budgets,
+                         speculative=spec)
+        return out, {s: srv.table.length(s) for s in (0, 1, 2)}
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# partial commit: rejected drafts leave no trace in the page table
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rollback_leaves_table_identical():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+
+    def run(spec):
+        srv = _serve(model, params, prompts)
+        srv.decode(16, horizon=8, speculative=spec)
+        return srv
+
+    a, b = run(False), run(True)
+    assert {s: a.table.length(s) for s in a.sequence_ids()} == \
+           {s: b.table.length(s) for s in b.sequence_ids()}
+    assert a.table.resident_pages == b.table.resident_pages
+    assert len(b.table._pinned) == 0
+    # the speculative run really did roll rejected pages back
+    assert b.tier_stats()["horizon_pages_rolled_back"] > 0 or \
+        b.speculation_stats()["alpha"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# no-retrace: accepted-length variance shares one compiled program
+# ---------------------------------------------------------------------------
+
+
+def test_spec_no_retrace_across_accepted_lengths():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    srv = _serve(model, params, prompts)
+    if not hasattr(srv._spec_jit, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this jax")
+    # the first run compiles every (b2, pps, h) bucket its passes hit;
+    # within it the accepted lengths vary from warm-up 1s to full
+    # horizons, all through those same programs
+    srv.decode(16, horizon=8, speculative=True)
+    sig = srv._spec_jit._cache_size()
+    assert sig > 0                        # speculative passes really ran
+    for i in range(len(prompts)):
+        srv.free_sequence(i)
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    srv.decode(16, horizon=8, speculative=True)
+    assert srv._spec_jit._cache_size() == sig
+
+
+# ---------------------------------------------------------------------------
+# sampling: deterministic, seed-sensitive, spec == non-spec stream
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_deterministic_and_seeded():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    sc = SamplingConfig(temperature=0.8, top_p=0.9, seed=42)
+
+    def run(s):
+        return _serve(model, params, prompts).decode(
+            12, horizon=4, sampling=s)
+
+    assert run(sc) == run(sc)
+    assert run(sc) != run(dataclasses.replace(sc, seed=7))
+
+
+def test_spec_sampling_runs_and_is_deterministic():
+    """Speculative sampling (rejection-accept on device) must be
+    reproducible under a fixed seed, and must actually exercise the
+    draft path — a greedy priming phase seeds the history with repeats
+    so the sampled phase has something to draft."""
+    cfg, model, params = _tiny_model()
+    sc = SamplingConfig(temperature=0.05, top_p=0.95, seed=3)
+
+    def run():
+        srv = _serve(model, params, _const_prompts(2))
+        srv.decode(12, horizon=8)                  # greedy priming
+        out = srv.decode(16, horizon=8, speculative=True, sampling=sc)
+        return out, srv.speculation_stats()
+
+    o1, st1 = run()
+    o2, st2 = run()
+    assert o1 == o2
+    assert st1["passes"] > 0 and st1["drafted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# pool: every shard derives identical tokens (greedy and sampled)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_spec_one_node_matches_paged_greedy():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    ref = _serve(model, params, prompts)
+    srv = PoolServer(model, params, n_nodes=1, page_size=4,
+                     hbm_pages_per_node=64, dtype=jnp.float32)
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    assert srv.decode(16, horizon=8, speculative=True) == \
+        ref.decode(16, horizon=8)
+    assert srv.speculation_stats()["passes"] > 0
+
+
+def test_pool_spec_one_node_matches_paged_sampled():
+    """temperature>0: the pool path must draw the identical Gumbel /
+    uniform streams from the replicated pass key — bit-exact tokens vs
+    the single-node server."""
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    sc = SamplingConfig(temperature=0.7, top_p=0.95, seed=11)
+
+    def run(cls, **kw):
+        srv = cls(model, params, **kw)
+        for i, p in enumerate(prompts):
+            srv.add_request(i, p)
+        srv.decode(8, horizon=8)                   # greedy priming
+        return srv.decode(16, horizon=8, speculative=True, sampling=sc)
+
+    assert run(PoolServer, n_nodes=1, page_size=4,
+               hbm_pages_per_node=64, dtype=jnp.float32) == \
+        run(PagedServer, page_size=4, hbm_pages=64, dtype=jnp.float32)
+
+
+def _run(code: str, devices: int = 2) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_pool_spec_multi_node_matches_paged():
+    """2 simulated nodes: shard-mapped draft-verify (replicated
+    history/key, sharded pages) must emit exactly the single-node
+    stream, greedy and sampled."""
+    stdout = _run("""
+    import dataclasses, numpy as np
+    import jax, jax.numpy as jnp
+    from repro.configs.base import get_arch
+    from repro.models.api import get_model
+    from repro.runtime.pool import PoolServer
+    from repro.runtime.serve import PagedServer, SamplingConfig
+
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [np.full(12 + i, c, np.int32)
+               for i, c in enumerate((5, 9, 13))]
+    sc = SamplingConfig(temperature=0.5, top_p=0.9, seed=2)
+
+    def run(cls, **kw):
+        srv = cls(model, params, **kw)
+        for i, p in enumerate(prompts):
+            srv.add_request(i, p)
+        g = srv.decode(12, horizon=8, speculative=True)
+        s = srv.decode(8, horizon=8, speculative=True, sampling=sc)
+        return g, s
+
+    ref = run(PagedServer, page_size=4, hbm_pages=64,
+              dtype=jnp.float32)
+    got = run(PoolServer, n_nodes=2, page_size=4,
+              hbm_pages_per_node=32, dtype=jnp.float32)
+    assert got == ref, (got, ref)
+    print("POOL_SPEC_OK")
+    """)
+    assert "POOL_SPEC_OK" in stdout
+
+
+# ---------------------------------------------------------------------------
+# scheduler: speculative batcher matches the per-token schedule
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_speculative_matches_per_token_schedule():
+    """ContinuousBatcher(speculative=True) — mixed join/evict at
+    horizon boundaries, 1-token tails running plain — must finish every
+    request with output identical to the per-token schedule."""
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts() + [
+        np.random.default_rng(1).integers(0, cfg.vocab_size, 7,
+                                          dtype=np.int32)]
+    gens = [5, 9, 3, 7]
+
+    def run(h, spec):
+        srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                          dtype=jnp.float32)
+        b = ContinuousBatcher(srv, max_active=2, horizon=h,
+                              speculative=spec)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            b.submit(Request(rid=i, prompt=p, max_tokens=g))
+        stats = b.run_to_completion()
+        assert stats["requests"] == len(prompts)
+        assert srv.table.free_pages == srv.hbm_pages
+        return {r.rid: r.output for r in b.finished}
+
+    assert run(8, True) == run(1, False)
+
+
+def test_batcher_speculative_requires_horizon():
+    cfg, model, params = _tiny_model()
+    srv = PagedServer(model, params, page_size=4, hbm_pages=32,
+                      dtype=jnp.float32)
+    with pytest.raises(ValueError, match="speculative"):
+        ContinuousBatcher(srv, max_active=2, horizon=1, speculative=True)
+
+
+# ---------------------------------------------------------------------------
+# sampling= config threading and the greedy= shim
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_shim_deprecated_but_equivalent():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    ref = _serve(model, params, prompts).decode(8)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = _serve(model, params, prompts).decode(8, greedy=True)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert out == ref
+    with pytest.raises(ValueError, match="greedy=False"):
+        _serve(model, params, prompts).decode(8, greedy=False)
+
+
+def test_greedy_sampling_config_is_argmax():
+    cfg, model, params = _tiny_model()
+    prompts = _const_prompts()
+    ref = _serve(model, params, prompts).decode(8, horizon=4)
+    out = _serve(model, params, prompts).decode(
+        8, horizon=4, sampling=GREEDY)
+    assert out == ref
+
+
+def test_decode_speculative_requires_fusable_horizon():
+    cfg, model, params = _tiny_model()
+    srv = _serve(model, params, _const_prompts())
+    with pytest.raises(ValueError, match="speculative"):
+        srv.decode(4, horizon=1, speculative=True)
+
+
+# ---------------------------------------------------------------------------
+# analytical: speculation model + overhead fit
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_terms_expected_tokens():
+    from repro.core.analytical import speculative_terms
+    t = speculative_terms(n_tokens=256, horizon=8, alpha=1.0,
+                          host_overhead_s=1e-3, verify_pos_s=1e-4)
+    assert t["expected_tokens_per_pass"] == pytest.approx(8.0)
+    t0 = speculative_terms(n_tokens=256, horizon=8, alpha=0.0,
+                           host_overhead_s=1e-3, verify_pos_s=1e-4)
+    assert t0["expected_tokens_per_pass"] == pytest.approx(1.0)
+    # alpha=1 emits H tokens for one pass's host cost: strictly faster
+    assert t["modeled_tokens_per_s"] > t0["modeled_tokens_per_s"]
+
+
+def test_fit_speculation_overheads_recovers_terms():
+    from repro.core.analytical import (fit_speculation_overheads,
+                                       speculative_terms)
+    host, pos = 2e-3, 3e-4
+    a = speculative_terms(512, 4, 0.9, host, pos)
+    b = speculative_terms(512, 16, 0.9, host, pos)
+    fh, fp = fit_speculation_overheads(
+        4, a["expected_tokens_per_pass"], a["modeled_tokens_per_s"],
+        16, b["expected_tokens_per_pass"], b["modeled_tokens_per_s"])
+    # speculative_terms rounds passes up to a whole pass (149 vs the
+    # exact 148.88 at H=4), so the modeled tok/s it hands back carries
+    # ~1/passes of quantization — the fit recovers to that resolution
+    assert fh == pytest.approx(host, rel=2e-2)
+    assert fp == pytest.approx(pos, rel=2e-2)
