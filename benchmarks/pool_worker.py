@@ -249,22 +249,31 @@ def main():
     spec_prompts = [np.asarray([c] * (24 + i % 2) + [t] * 16, np.int32)
                     for i, (c, t) in
                     enumerate([(41, 49), (500, 259)] * 2)]
-    # the cell inherits the main workload's window; skip when one
-    # node's share cannot pin a spec sequence's full reservation
-    # (prompt + gen pages, all pinned at the last pass)
-    page_need = -(-(max(len(p) for p in spec_prompts) + spec_gen)
-                  // args.page_size)
+    # the cell inherits the main workload's window, and a spec
+    # sequence's whole reservation (prompt + gen pages) is resident and
+    # pinned by the last pass.  Size the reservation against the
+    # per-shard window: when the default gen doesn't fit one node's
+    # share, fall back to the largest gen (and a matching horizon) that
+    # does, instead of skipping the cell (capacity-guarded placement
+    # disperses sharers once the prefix node's window fills, so a shard
+    # holds at most its even cohort share).
+    max_plen = max(len(p) for p in spec_prompts)
     if pool is None:
-        spec_fits = 8 * args.requests >= len(spec_prompts) * page_need
+        window = 8 * args.requests
+        seqs_here = len(spec_prompts)
     else:
-        per_node = -(-8 * args.requests // args.nodes)
-        spec_fits = per_node >= \
-            -(-len(spec_prompts) // args.nodes) * page_need
-    if args.horizon > 0 and not spec_fits:
+        window = -(-8 * args.requests // args.nodes)       # one shard
+        seqs_here = -(-len(spec_prompts) // args.nodes)
+    gen_fit = (window // seqs_here) * args.page_size - max_plen
+    spec_window_limited = gen_fit < spec_gen
+    if spec_window_limited:
+        spec_gen = gen_fit
+        spec_h = max(1, min(spec_h, spec_gen))
+    if args.horizon > 0 and spec_gen < 2:
         rec["speculative"] = {"skipped":
                               "per-node window below one sequence's "
-                              "pinned reservation"}
-    if args.horizon > 0 and spec_fits:
+                              "prompt pages — no gen fits"}
+    if args.horizon > 0 and spec_gen >= 2:
 
         def spec_admit():
             sp_free()
@@ -300,6 +309,7 @@ def main():
             "speculative decode diverged from the plain horizon"
         rec["speculative"] = {
             "gen": spec_gen, "spec_horizon": spec_h,
+            "window_limited": spec_window_limited,
             "base_tokens_per_s": base_tps,
             "spec_tokens_per_s": spec_tps,
             "speedup_vs_horizon": spec_tps / base_tps,
@@ -311,6 +321,35 @@ def main():
             "outputs_identical": True,
         }
         sp_free()
+
+    # -- latency percentiles: the main workload through the continuous
+    # batcher (iteration-level admission) — per-request p50/p99 TTFT
+    # and TPOT, the traffic-facing face of the aggregate tok/s above
+    from repro.runtime.scheduler import (ContinuousBatcher, PoolRouter,
+                                         Request)
+
+    def lat_run():
+        sp_free()
+        kw = dict(max_active=args.requests,
+                  horizon=max(args.horizon, 1),
+                  prefill_chunk=2 * args.page_size)
+        sched = (PoolRouter(server, pool, **kw) if pool is not None
+                 else ContinuousBatcher(server, **kw))
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=p, max_tokens=args.gen))
+        return sched.run_to_completion()
+
+    # two untimed warm-ups: the first traces cache-cold buckets and
+    # seeds the prefix cache, the second traces the warm-hit buckets
+    # the steady-state (timed) run actually uses
+    lat_run()
+    lat_run()
+    lat = lat_run()
+    rec["latency"] = {k: lat[k] for k in
+                      ("requests", "mean_ttft_s", "p50_ttft_s",
+                       "p99_ttft_s", "mean_tpot_s", "p50_tpot_s",
+                       "p99_tpot_s", "mean_latency_s", "p99_latency_s")}
+    sp_free()
     print(json.dumps(rec))
 
 

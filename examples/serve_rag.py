@@ -1,0 +1,115 @@
+"""RAG on the computing-enabled storage pool: in-storage top-k
+retrieval feeding prefix-cached serving, end to end.
+
+The corpus's embedding matrix lives as an ExtentStore extent on a
+DockerSSD.  Each query becomes an ``AnalyticsJob(reduce="topk")`` —
+the scored scan runs *inside* the storage node (double-buffered Pallas
+kernel over the extent pages) and only k (id, score) pairs ride the
+RESULTS frame back, instead of the whole embedding matrix crossing the
+tunnel.  Top-k ids map to context token blocks through one batched
+``embed_gather``, the assembled prompt (template ++ retrieved chunks ++
+question) goes to the paged server, and the shared-prefix cache absorbs
+the repeated template + chunks across requests — the second wave of
+admissions computes only each question's tail.
+
+The demo asserts the two load-bearing invariants:
+  * device retrieval is bit-identical to the host fold, so decode
+    outputs are token-identical to a host-side retrieval baseline;
+  * warm (prefix-cached) admission beats the cache-ablated cold path.
+
+  PYTHONPATH=src python examples/serve_rag.py
+"""
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import StoragePool, analytics_blob
+from repro.models.api import get_model
+from repro.runtime.retrieval import RetrievalFrontend
+from repro.runtime.serve import PagedServer
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_arch("granite-3-2b"),
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+        vocab_size=512)
+    model = get_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # corpus: 16 documents, each a 16-token context chunk with a
+    # 32-dim embedding row; one shared instruction template
+    n_docs, d_emb, chunk_tok, k = 16, 32, 16, 3
+    n_req, tail, gen = 4, 8, 8
+    template = rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+    corpus = rng.integers(0, cfg.vocab_size, (n_docs, chunk_tok),
+                          dtype=np.int32)
+    emb = rng.normal(size=(n_docs, d_emb)).astype(np.float32)
+
+    pool = StoragePool(1, extent_cfg={"n_pages": n_docs // 4 + 2,
+                                      "page_rows": 4, "n_cols": d_emb})
+    pool.broadcast_pull("isp-analytics", analytics_blob())
+
+    warm = PagedServer(model, params, page_size=8, hbm_pages=64,
+                       dtype=jnp.float32)
+    cold = PagedServer(model, params, page_size=8, hbm_pages=64,
+                       dtype=jnp.float32, prefix_cache=False)
+    fe = RetrievalFrontend(pool, warm, corpus_tokens=corpus,
+                           template=template, k=k)
+    fe_cold = RetrievalFrontend(pool, cold, corpus_tokens=corpus,
+                                template=template, k=k)
+    ip = fe.ingest(emb)
+    print(f"corpus extent: {n_docs}x{d_emb} embeddings on node {ip}")
+
+    # every request asks about one topic (same query vector), with its
+    # own question tail — the RAG shape the prefix cache pays off on
+    query = rng.normal(size=(d_emb,)).astype(np.float32)
+
+    def qtails():
+        return [rng.integers(0, cfg.vocab_size, tail, dtype=np.int32)
+                for _ in range(n_req)]
+
+    def wave(fe_, tails, force):
+        t0 = time.perf_counter()
+        for i, qt in enumerate(tails):
+            fe_.submit(i, query, qt, force=force)
+        dt = time.perf_counter() - t0
+        out = fe_.server.decode(gen)
+        got = {i: out[i] for i in range(n_req)}
+        for i in range(n_req):
+            fe_.server.free_sequence(i)
+        return dt, got
+
+    # host-retrieval baseline on the cache-ablated server = the oracle
+    tails = qtails()
+    _, base = wave(fe_cold, tails, "host")
+    # device retrieval on the warm server: first wave seeds the cache
+    _, first = wave(fe, tails, "device")
+    assert first == base, "device retrieval diverged from host baseline"
+    hit = fe.retrieve([query], force="device")[0]
+    print(f"top-{k} in storage: ids {hit['ids']} (scores "
+          f"{[round(s, 3) for s in hit['scores']]})")
+
+    # second wave: fresh questions, same topic — template + retrieved
+    # chunks ride the prefix cache
+    wave(fe, qtails(), "device")                 # bucket warm-up
+    t_warm, second = wave(fe, qtails(), "device")
+    t_cold, _ = wave(fe_cold, qtails(), "device")
+    print(f"admission wave: cold {t_cold*1e3:.1f} ms | warm "
+          f"{t_warm*1e3:.1f} ms ({t_cold / t_warm:.1f}x)")
+    print(f"retrieval placement: {fe.stats}")
+    assert t_warm < t_cold, "prefix-cached admission should be faster"
+    print("outputs token-identical to host-side retrieval baseline; "
+          "warm admissions rode the shared prefix")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,14 +30,16 @@ from repro.core.container import (ContainerError, ImageManifest, make_blob,
 from repro.core.kv_tier import (PAGE_DTYPES, _fp8_dtype, dequantize_page_kv,
                                 quantize_page_kv)
 from repro.kernels import ops
-from repro.kernels.isp_scan import FILTER_OPS, REDUCE_ROWS
+from repro.kernels.isp_scan import (BIG_ID, FILTER_OPS, MAX_TOPK,
+                                    REDUCE_ROWS, TOPK_METRICS, topk_pad)
 
 #: the generic analytics image every DockerSSD runs (entry = the program
 #: interpreter below)
 ANALYTICS_IMAGE = "isp-analytics"
 
-#: host-side projections of the kernel's aggregate block
-REDUCE_KINDS = ("count", "sum", "min", "max", "avg", "table")
+#: host-side projections of the kernel's aggregate block ("topk" runs
+#: the scored-scan reducer instead of scan/filter/reduce)
+REDUCE_KINDS = ("count", "sum", "min", "max", "avg", "table", "topk")
 
 
 class ExtentStoreError(Exception):
@@ -223,6 +225,11 @@ class AnalyticsJob:
     # compute-bound operator — the per-request input that flips the
     # offload decision to the host (Fig 11's losing regime).
     scan_gbs: float = 0.0
+    # retrieval (reduce="topk"): the query vector (zero-padded to the
+    # store width at execution), result count, and scoring metric
+    query: Optional[List[float]] = None
+    k: int = 0
+    metric: str = "dot"             # one of kernels.isp_scan.TOPK_METRICS
 
     def validate(self):
         if self.filter_op not in FILTER_OPS:
@@ -231,7 +238,31 @@ class AnalyticsJob:
         if self.reduce not in REDUCE_KINDS:
             raise ContainerError(f"bad reduce {self.reduce!r}; "
                                  f"expected one of {REDUCE_KINDS}")
+        if self.reduce == "topk":
+            if not self.query:
+                raise ContainerError("topk job needs a query vector")
+            if not 1 <= self.k <= MAX_TOPK:
+                raise ContainerError(f"topk k must be in [1, {MAX_TOPK}], "
+                                     f"got {self.k}")
+            if self.metric not in TOPK_METRICS:
+                raise ContainerError(f"bad metric {self.metric!r}; "
+                                     f"expected one of {TOPK_METRICS}")
+        elif self.query is not None:
+            raise ContainerError(f"query only applies to reduce='topk', "
+                                 f"not {self.reduce!r}")
         return self
+
+    def padded_query(self, n_cols: int) -> np.ndarray:
+        """The query zero-padded to the executing store's width — the
+        same padding ``ExtentStore.put`` applied to narrow extents, so
+        padded columns contribute 0 to every score on both paths."""
+        qv = np.asarray(self.query, np.float32)
+        if qv.ndim != 1 or qv.shape[0] > n_cols:
+            raise ContainerError(f"query must be 1-D with <= {n_cols} "
+                                 f"entries, got shape {qv.shape}")
+        q = np.zeros((n_cols,), np.float32)
+        q[:qv.shape[0]] = qv
+        return q
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -245,6 +276,12 @@ def project(block: np.ndarray, job: AnalyticsJob):
     """Host-side projection of the kernel's [8, n_cols] aggregate."""
     if job.reduce == "table":
         return block
+    if job.reduce == "topk":
+        # [[row_id, score], ...] best-first; (NEG_INF, BIG_ID) empty
+        # slots (k > n_rows) are dropped
+        scores, ids = block[0], block[1]
+        return [[int(i), float(s)]
+                for i, s in zip(ids[:job.k], scores[:job.k]) if i < BIG_ID]
     if job.reduce == "count":
         return float(block[0, 0])
     col = job.reduce_col
@@ -305,14 +342,22 @@ def isp_analytics(ctx, jobs=None, job_pages=None):
         if job.extent not in store.extents:
             raise ContainerError(f"no extent {job.extent!r} on this node")
         # cgroup accounting: one VMEM-resident page + the aggregate
-        work = store.page_nbytes + REDUCE_ROWS * store.n_cols * 4
+        out_cols = topk_pad(job.k) if job.reduce == "topk" else store.n_cols
+        work = store.page_nbytes + REDUCE_ROWS * out_cols * 4
         ctx.alloc(work)
         try:
-            block = ops.scan_filter_reduce(
-                store.pages, store.page_table(job.extent),
-                store.extents[job.extent].n_rows, job.threshold,
-                scales=store.scales,
-                filter_col=job.filter_col, filter_op=job.filter_op)
+            if job.reduce == "topk":
+                block = ops.topk_scan(
+                    store.pages, store.page_table(job.extent),
+                    store.extents[job.extent].n_rows,
+                    job.padded_query(store.n_cols),
+                    k=job.k, metric=job.metric, scales=store.scales)
+            else:
+                block = ops.scan_filter_reduce(
+                    store.pages, store.page_table(job.extent),
+                    store.extents[job.extent].n_rows, job.threshold,
+                    scales=store.scales,
+                    filter_col=job.filter_col, filter_op=job.filter_op)
             results.append(np.asarray(jax.block_until_ready(block)))
         finally:
             ctx.free(work)

@@ -89,3 +89,39 @@ def embed_agg(table, indices, weights=None, *, interpret: bool = False):
         interpret=interpret,
         name="embed_agg",
     )(indices, weights, table)
+
+
+def _gather_kernel(idx_ref, table_ref, o_ref):
+    o_ref[0, :] = table_ref[0, :]
+
+
+def embed_gather(table, indices, *, interpret: bool = False):
+    """Batched multi-query row gather (the retrieval-assembly side).
+
+    table: [V, D]; indices: [B, K] int32 — e.g. one top-k id table per
+    query.  Returns [B, K, D] = table[indices], gathered in ONE kernel
+    launch (one jit per [B, K] bucket) so retrieval assembly never
+    loops host-side per request.  Rows keep the table's dtype (token
+    blocks stay int32).
+    """
+    validate_embed_args(table, indices)
+    v, d = table.shape
+    b, kk = indices.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kk),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bb, li, idx: (idx[bb, li], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bb, li, idx: (bb * kk + li, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kk, d), table.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="embed_gather",
+    )(indices, table)
+    return out.reshape(b, kk, d)

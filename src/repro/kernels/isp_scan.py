@@ -55,6 +55,21 @@ REDUCE_ROWS = 8
 #: VMEM page slots of the DMA pipeline (2 = classic double buffering)
 N_BUFFERS = 2
 
+#: scoring metrics of the top-k scored scan
+TOPK_METRICS = ("dot", "cosine")
+#: sentinel id of an empty top-k slot (exactly representable in f32,
+#: larger than any real row id — the deterministic tie-break loser)
+BIG_ID = float(2 ** 30)
+#: widest supported k (the merge loop is O(k) per page; the result
+#: block must stay tiny — that is the whole wire-reduction story)
+MAX_TOPK = 128
+
+
+def topk_pad(k: int) -> int:
+    """Output width of the top-k block: pow2-bucketed, floored at the
+    f32 TPU lane tile (128) so the block stays tile-aligned."""
+    return max(128, 1 << max(int(k) - 1, 0).bit_length())
+
 
 def _predicate(key, threshold, op: str):
     if op == "all":
@@ -265,3 +280,248 @@ def scan_filter_reduce(pages, page_table, n_rows, threshold, *,
         interpret=interpret,
         name=name,
     )(page_table, n_rows, threshold, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Scored scan / top-k — the retrieval reducer
+#
+# Same pipeline, different fold: each page's rows are scored against a
+# query vector (dot or cosine) and merged into a k-slot (score, id)
+# accumulator.  The output block is [REDUCE_ROWS, topk_pad(k)] f32:
+#
+#   row 0  top-k scores, descending
+#   row 1  matching row ids, stored as f32 (exact for ids < 2^24);
+#          empty slots hold (NEG_INF, BIG_ID)
+#   2..7   zero padding (tile alignment)
+#
+# Ties are deterministic: equal scores rank by *smallest row id*, in
+# both the kernel and the reference fold — the merge itself is one
+# shared function (`_topk_fold_page`), so bit-identity holds by
+# construction, not by parallel maintenance.
+# ---------------------------------------------------------------------------
+
+
+def _topk_merge(acc_s, acc_i, cand_s, cand_i, *, k: int):
+    """Merge page candidates into the k-slot accumulator.
+
+    All inputs are [1, n] f32 rows.  k selection passes: take the max
+    remaining score, break ties on the smallest id, knock the winner
+    out, repeat.  Empty slots carry (NEG_INF, BIG_ID) so they lose
+    every comparison and tie-break deterministically last.
+    """
+    c_s = jnp.concatenate([acc_s, cand_s], axis=1)
+    c_i = jnp.concatenate([acc_i, cand_i], axis=1)
+
+    def extract(j, carry):
+        c_s, c_i, o_s, o_i = carry
+        m = jnp.max(c_s)
+        cid = jnp.min(jnp.where(c_s == m, c_i, BIG_ID))
+        o_s = o_s.at[0, j].set(m)
+        o_i = o_i.at[0, j].set(cid)
+        # knock the winner out entirely (score AND id) so exhausted
+        # slots keep yielding the (NEG_INF, BIG_ID) empty sentinel
+        hit = (c_s == m) & (c_i == cid)
+        c_s = jnp.where(hit, NEG_INF, c_s)
+        c_i = jnp.where(hit, BIG_ID, c_i)
+        return c_s, c_i, o_s, o_i
+
+    init = (c_s, c_i,
+            jnp.full((1, k), NEG_INF, jnp.float32),
+            jnp.full((1, k), BIG_ID, jnp.float32))
+    _, _, o_s, o_i = lax.fori_loop(0, k, extract, init)
+    return o_s, o_i
+
+
+def _topk_fold_page(block, pi, n_rows, q, acc_s, acc_i, *,
+                    page_rows: int, k: int, metric: str):
+    """Score one page's rows and merge them into the accumulator —
+    the shared fold of the kernel and ``kernels.ref.topk_scan_ref``
+    (identical ops and order: the bit-identity contract lives here).
+
+    Row dots are an explicitly unrolled add chain over the (static)
+    column count — NOT ``jnp.sum``/``dot_general``, whose accumulation
+    order is implementation-defined and comes out different per
+    compilation context (kernel vs jitted host fold: last-ulp score
+    divergence breaks the ordering).  Explicit f32 adds have a defined
+    order XLA may not reassociate, so both compilations produce the
+    same bits.  ``cosine`` divides by the row norm only; ranking is
+    invariant to the query's scale, so pre-normalize the query for
+    true cosine.
+    """
+    pos = pi * page_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_rows), 1)
+
+    def rowsum(w):                      # [page_rows, n_cols] -> [1, rows]
+        s = w[:, 0]
+        for c in range(1, w.shape[1]):
+            s = s + w[:, c]
+        return s[None, :]
+
+    s = rowsum(block * q)                                 # [1, page_rows]
+    if metric == "cosine":
+        norm = jnp.sqrt(rowsum(block * block))
+        s = s / jnp.maximum(norm, 1e-6)
+    valid = pos < n_rows
+    s = jnp.where(valid, s, NEG_INF)
+    ids = jnp.where(valid, pos.astype(jnp.float32), BIG_ID)
+    return _topk_merge(acc_s, acc_i, s, ids, k=k)
+
+
+def _topk_finish(o_ref, acc_s_ref, acc_i_ref, *, k: int):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[0, :k] = acc_s_ref[0, :]
+    o_ref[1, :k] = acc_i_ref[0, :]
+
+
+def _topk_kernel(pt_ref, nrows_ref, pages_ref, q_ref, o_ref, buf_ref,
+                 sem_ref, acc_s_ref, acc_i_ref, *, page_rows: int,
+                 n_pages: int, k: int, metric: str):
+    n_rows = nrows_ref[0]
+    n_valid = jnp.minimum(jnp.maximum((n_rows + page_rows - 1) // page_rows,
+                                      1), n_pages)
+
+    acc_s_ref[...] = jnp.full_like(acc_s_ref, NEG_INF)
+    acc_i_ref[...] = jnp.full_like(acc_i_ref, BIG_ID)
+    q = q_ref[...]                                        # [1, n_cols]
+
+    def page_dma(slot, idx):
+        return pltpu.make_async_copy(pages_ref.at[pt_ref[idx]],
+                                     buf_ref.at[slot], sem_ref.at[slot])
+
+    page_dma(0, 0).start()
+
+    def body(pi, _):
+        slot = lax.rem(pi, N_BUFFERS)
+        nxt = lax.rem(pi + 1, N_BUFFERS)
+
+        @pl.when(pi + 1 < n_valid)
+        def _prefetch():
+            page_dma(nxt, pi + 1).start()
+
+        page_dma(slot, pi).wait()
+        block = buf_ref[slot].astype(jnp.float32)         # [page_rows, C]
+        acc_s, acc_i = _topk_fold_page(
+            block, pi, n_rows, q, acc_s_ref[...], acc_i_ref[...],
+            page_rows=page_rows, k=k, metric=metric)
+        acc_s_ref[...] = acc_s
+        acc_i_ref[...] = acc_i
+        return ()
+
+    lax.fori_loop(0, n_valid, body, ())
+    _topk_finish(o_ref, acc_s_ref, acc_i_ref, k=k)
+
+
+def _topk_q_kernel(pt_ref, nrows_ref, pages_ref, scales_ref, q_ref, o_ref,
+                   buf_ref, sbuf_ref, sem_ref, ssem_ref, acc_s_ref,
+                   acc_i_ref, *, page_rows: int, n_pages: int, k: int,
+                   metric: str):
+    """Dequantizing top-k: code pages and their per-row scale pages ride
+    the same two DMA lanes as ``_scan_q_kernel``; the fold sees exactly
+    the f32 values the host baseline folds."""
+    n_rows = nrows_ref[0]
+    n_valid = jnp.minimum(jnp.maximum((n_rows + page_rows - 1) // page_rows,
+                                      1), n_pages)
+
+    acc_s_ref[...] = jnp.full_like(acc_s_ref, NEG_INF)
+    acc_i_ref[...] = jnp.full_like(acc_i_ref, BIG_ID)
+    q = q_ref[...]
+
+    def page_dma(slot, idx):
+        return pltpu.make_async_copy(pages_ref.at[pt_ref[idx]],
+                                     buf_ref.at[slot], sem_ref.at[slot])
+
+    def scale_dma(slot, idx):
+        return pltpu.make_async_copy(scales_ref.at[pt_ref[idx]],
+                                     sbuf_ref.at[slot], ssem_ref.at[slot])
+
+    page_dma(0, 0).start()
+    scale_dma(0, 0).start()
+
+    def body(pi, _):
+        slot = lax.rem(pi, N_BUFFERS)
+        nxt = lax.rem(pi + 1, N_BUFFERS)
+
+        @pl.when(pi + 1 < n_valid)
+        def _prefetch():
+            page_dma(nxt, pi + 1).start()
+            scale_dma(nxt, pi + 1).start()
+
+        page_dma(slot, pi).wait()
+        scale_dma(slot, pi).wait()
+        block = buf_ref[slot].astype(jnp.float32) * sbuf_ref[slot]
+        acc_s, acc_i = _topk_fold_page(
+            block, pi, n_rows, q, acc_s_ref[...], acc_i_ref[...],
+            page_rows=page_rows, k=k, metric=metric)
+        acc_s_ref[...] = acc_s
+        acc_i_ref[...] = acc_i
+        return ()
+
+    lax.fori_loop(0, n_valid, body, ())
+    _topk_finish(o_ref, acc_s_ref, acc_i_ref, k=k)
+
+
+def topk_scan(pages, page_table, n_rows, query, *, k: int,
+              metric: str = "dot", scales=None, interpret: bool = False):
+    """Query-scored top-k over an extent's flash-resident pages.
+
+    Same operand contract as :func:`scan_filter_reduce` for ``pages`` /
+    ``page_table`` / ``n_rows`` / ``scales``; ``query`` is [1, n_cols]
+    f32 (zero-pad to the store width).  ``k`` and ``metric`` (see
+    TOPK_METRICS) are static.  Returns [REDUCE_ROWS, topk_pad(k)] f32
+    with scores in row 0 and f32 row ids in row 1 — only this tiny
+    block ever leaves the device/node.
+    """
+    if metric not in TOPK_METRICS:
+        raise ValueError(f"metric must be one of {TOPK_METRICS}, "
+                         f"got {metric!r}")
+    if not 1 <= k <= MAX_TOPK:
+        raise ValueError(f"k must be in [1, {MAX_TOPK}], got {k}")
+    n_phys, page_rows, n_cols = pages.shape
+    if query.shape != (1, n_cols):
+        raise ValueError(f"query must be [1, {n_cols}], "
+                         f"got {query.shape}")
+    pps = page_table.shape[0]
+    kpad = topk_pad(k)
+
+    scratch = [
+        pltpu.VMEM((N_BUFFERS, page_rows, n_cols), pages.dtype),
+        pltpu.SemaphoreType.DMA((N_BUFFERS,)),
+        pltpu.VMEM((1, k), jnp.float32),      # top-k scores
+        pltpu.VMEM((1, k), jnp.float32),      # top-k row ids (as f32)
+    ]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [pages]
+    if scales is None:
+        kernel = functools.partial(_topk_kernel, page_rows=page_rows,
+                                   n_pages=pps, k=k, metric=metric)
+        name = "topk_scan"
+    else:
+        kernel = functools.partial(_topk_q_kernel, page_rows=page_rows,
+                                   n_pages=pps, k=k, metric=metric)
+        name = "topk_scan_q"
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(scales.reshape(n_phys, page_rows, 1)
+                        .astype(jnp.float32))
+        scratch[1:1] = [pltpu.VMEM((N_BUFFERS, page_rows, 1), jnp.float32)]
+        scratch[3:3] = [pltpu.SemaphoreType.DMA((N_BUFFERS,))]
+    # the query rides as a plain VMEM block, after the HBM page pools
+    in_specs.append(pl.BlockSpec((1, n_cols), lambda pi, pt, nr: (0, 0)))
+    operands.append(query.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((REDUCE_ROWS, kpad),
+                               lambda pi, pt, nr: (0, 0)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((REDUCE_ROWS, kpad), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name=name,
+    )(page_table, n_rows, *operands)

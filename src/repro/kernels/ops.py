@@ -12,10 +12,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ref  # noqa: F401  (re-exported oracle module)
 from repro.kernels.embed_agg import (embed_agg as _embed_agg,
+                                     embed_gather as _embed_gather,
                                      validate_embed_args)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.isp_scan import (scan_filter_reduce as _scan_reduce,
-                                    REDUCE_ROWS)  # noqa: F401
+                                    topk_scan as _topk_scan,
+                                    REDUCE_ROWS, topk_pad)  # noqa: F401
 from repro.kernels.paged_attention import (paged_attention as _paged,
                                             paged_attention_q8 as _paged_q8)
 from repro.kernels.rwkv_scan import rwkv_scan as _rwkv
@@ -123,6 +125,57 @@ def scan_filter_reduce_host(data, threshold=0.0, *, page_rows: int,
     return ref.scan_filter_reduce_ref(data, page_rows, threshold,
                                       filter_col=filter_col,
                                       filter_op=filter_op)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
+def _topk_jit(pages, page_table, n_rows, query, scales, k, metric,
+              interpret):
+    return _topk_scan(pages, page_table, n_rows, query, k=k, metric=metric,
+                      scales=scales, interpret=interpret)
+
+
+def topk_scan(pages, page_table, n_rows, query, *, k: int,
+              metric: str = "dot", scales=None,
+              interpret: bool | None = None):
+    """In-storage query-scored top-k over extent pages (jitted, same
+    double-buffered page pipeline and pow2 table bucketing as
+    ``scan_filter_reduce``).
+
+    query: [n_cols] (or [1, n_cols]) — zero-pad to the store width.
+    Returns [8, topk_pad(k)] f32: scores row 0 (descending), f32 row
+    ids row 1; empty slots hold (-1e30, 2^30).  Only this block ever
+    crosses the wire — the retrieval wire-reduction story."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_cols = pages.shape[2]
+    pt = _pow2_pad_table(jnp.asarray(page_table, jnp.int32).reshape(-1))
+    nr = jnp.asarray(n_rows, jnp.int32).reshape(1)
+    q = jnp.asarray(query, jnp.float32).reshape(1, n_cols)
+    return _topk_jit(pages, pt, nr, q, scales, k, metric, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("page_rows", "k", "metric"))
+def topk_scan_host(data, query, *, page_rows: int, k: int,
+                   metric: str = "dot"):
+    """The host-side retrieval baseline (host fetches the whole extent,
+    then folds page-sequentially) — bit-identical to ``topk_scan``."""
+    return ref.topk_scan_ref(data, query, page_rows=page_rows, k=k,
+                             metric=metric)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _embed_gather_jit(table, indices, interpret: bool):
+    return _embed_gather(table, indices, interpret=interpret)
+
+
+def embed_gather(table, indices, interpret: bool | None = None):
+    """Validating wrapper over the batched [B, K] row gather (eager
+    bounds check like ``embed_agg``, then one jit per shape bucket)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    indices = jnp.asarray(indices)
+    validate_embed_args(table, indices)
+    return _embed_gather_jit(table, indices, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

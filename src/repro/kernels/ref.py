@@ -137,6 +137,41 @@ def scan_filter_reduce_ref(data, page_rows: int, threshold=0.0, *,
     return out.at[0].set(cnt).at[1].set(s).at[2].set(mn).at[3].set(mx)
 
 
+def topk_scan_ref(data, query, *, page_rows: int, k: int,
+                  metric: str = "dot"):
+    """Host-side reference for ``kernels.isp_scan.topk_scan``.
+
+    data: [n_rows, n_cols] — the extent the host read back in full.
+    The fold walks pages sequentially and calls the kernel's *own*
+    page fold (``_topk_fold_page``), so scores, merge order, and
+    tie-breaking (smallest row id wins equal scores) are bit-identical
+    to the in-storage path by construction.
+    Returns [8, topk_pad(k)] float32 (scores row 0, f32 ids row 1).
+    """
+    from repro.kernels.isp_scan import (BIG_ID, NEG_INF, REDUCE_ROWS,
+                                        _topk_fold_page, topk_pad)
+    n_rows, n_cols = data.shape
+    n_pages = -(-max(n_rows, 1) // page_rows)
+    pad = n_pages * page_rows - n_rows
+    blocks = jnp.pad(data.astype(jnp.float32), ((0, pad), (0, 0))
+                     ).reshape(n_pages, page_rows, n_cols)
+    q = jnp.asarray(query, jnp.float32).reshape(1, n_cols)
+
+    def fold(carry, xs):
+        acc_s, acc_i = carry
+        pi, block = xs
+        return _topk_fold_page(block, pi, n_rows, q, acc_s, acc_i,
+                               page_rows=page_rows, k=k,
+                               metric=metric), None
+
+    init = (jnp.full((1, k), NEG_INF, jnp.float32),
+            jnp.full((1, k), BIG_ID, jnp.float32))
+    (acc_s, acc_i), _ = lax.scan(
+        fold, init, (jnp.arange(n_pages, dtype=jnp.int32), blocks))
+    out = jnp.zeros((REDUCE_ROWS, topk_pad(k)), jnp.float32)
+    return out.at[0, :k].set(acc_s[0]).at[1, :k].set(acc_i[0])
+
+
 # ---------------------------------------------------------------------------
 # rwkv6 wkv chunked recurrence
 # ---------------------------------------------------------------------------

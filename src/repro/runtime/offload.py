@@ -35,7 +35,7 @@ from repro.core.ether_on import MTU
 from repro.core.extent_store import AnalyticsJob, project
 from repro.core.isp_perf import IspCosts
 from repro.kernels import ops
-from repro.kernels.isp_scan import REDUCE_ROWS
+from repro.kernels.isp_scan import REDUCE_ROWS, topk_pad
 
 
 @dataclasses.dataclass
@@ -101,7 +101,10 @@ class OffloadPlanner:
                   2 * c.path_walk_us * 1e-6 +
                   compute_s)
 
-        result_bytes = REDUCE_ROWS * store.n_cols * 4
+        # topk returns its own tile-padded block; everything else
+        # returns the store-width aggregate
+        out_cols = topk_pad(job.k) if job.reduce == "topk" else store.n_cols
+        result_bytes = REDUCE_ROWS * out_cols * 4
         frames = 1 + max(1, -(-result_bytes // MTU))     # job + result
         dvirtfw_s = (ios * c.flash_io_us * 1e-6 +
                      nbytes / 1e9 / c.flash_bw_gbs +
@@ -168,8 +171,14 @@ class OffloadPlanner:
         # pages) so the block matches the in-storage result bit-for-bit
         if data.shape[1] < store.n_cols:
             data = np.pad(data, ((0, 0), (0, store.n_cols - data.shape[1])))
-        block = np.asarray(ops.scan_filter_reduce_host(
-            jnp.asarray(data), job.threshold, page_rows=store.page_rows,
-            filter_col=job.filter_col, filter_op=job.filter_op))
+        if job.reduce == "topk":
+            block = np.asarray(ops.topk_scan_host(
+                jnp.asarray(data), jnp.asarray(
+                    job.padded_query(store.n_cols)),
+                page_rows=store.page_rows, k=job.k, metric=job.metric))
+        else:
+            block = np.asarray(ops.scan_filter_reduce_host(
+                jnp.asarray(data), job.threshold, page_rows=store.page_rows,
+                filter_col=job.filter_col, filter_op=job.filter_op))
         return {"job": job, "where": where, "est": est, "block": block,
                 "result": project(block, job)}

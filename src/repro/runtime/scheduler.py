@@ -248,12 +248,25 @@ class ContinuousBatcher:
             it += 1
         lat = [r.t_done - r.t_arrive for r in self.finished]
         ttft = [r.t_first - r.t_arrive for r in self.finished]
+        # time per output token after the first (the streaming rate a
+        # user sees once tokens start arriving)
+        tpot = [(r.t_done - r.t_first) / max(len(r.output) - 1, 1)
+                for r in self.finished]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
         return {
             "requests": len(self.finished),
             "iters": it,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "p99_latency_s": pct(lat, 99),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "p50_ttft_s": pct(ttft, 50),
+            "p99_ttft_s": pct(ttft, 99),
+            "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
+            "p50_tpot_s": pct(tpot, 50),
+            "p99_tpot_s": pct(tpot, 99),
             "tier": self.server.tier_stats(),
         }
 

@@ -1,0 +1,394 @@
+"""In-storage vector retrieval: the scored top-k scan kernel, the
+``reduce="topk"`` analytics job over the Ether-oN wire, planner pricing
+and admission, and the RetrievalFrontend feeding prefix-cached serving."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AnalyticsJob, ExtentStore, StoragePool,
+                        analytics_blob, from_jsonable)
+from repro.core.extent_store import project
+from repro.kernels import ops
+from repro.kernels.isp_scan import (BIG_ID, MAX_TOPK, NEG_INF, REDUCE_ROWS,
+                                    topk_pad)
+
+EXT_CFG = {"n_pages": 16, "page_rows": 8, "n_cols": 16}
+
+
+def _pool(n=1, **over):
+    pool = StoragePool(n, extent_cfg=dict(EXT_CFG, **over))
+    pool.broadcast_pull("isp-analytics", analytics_blob())
+    return pool
+
+
+def _store_topk(data, query, k, metric="dot", **over):
+    """Run the kernel path over an ExtentStore holding ``data``."""
+    cfg = dict(EXT_CFG, **over)
+    store = ExtentStore(**cfg)
+    store.put("e", data)
+    return np.asarray(ops.topk_scan(
+        store.pages, store.page_table("e"), data.shape[0],
+        jnp.asarray(np.asarray(query, np.float32)), k=k, metric=metric,
+        scales=store.scales))
+
+
+def _host_topk(data, query, k, metric="dot", page_rows=8, width=16):
+    data = np.asarray(data, np.float32)
+    if data.shape[1] < width:
+        data = np.pad(data, ((0, 0), (0, width - data.shape[1])))
+    return np.asarray(ops.topk_scan_host(
+        jnp.asarray(data), jnp.asarray(np.asarray(query, np.float32)),
+        page_rows=page_rows, k=k, metric=metric))
+
+
+# ---------------------------------------------------------------------------
+# top-k scan kernel vs page-sequential reference fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_rows", [1, 7, 8, 9, 40, 43])
+@pytest.mark.parametrize("metric", ["dot", "cosine"])
+def test_topk_kernel_matches_reference(n_rows, metric):
+    """Bit-identical (not allclose) across pow2-padded page counts: the
+    kernel and the host fold share one page-fold function, so every
+    score, id, and tie-break decision must agree exactly."""
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n_rows, 16)).astype(np.float32)
+    q = rng.normal(size=16).astype(np.float32)
+    out = _store_topk(data, q, 5, metric)
+    ref = _host_topk(data, q, 5, metric)
+    assert out.shape == (REDUCE_ROWS, topk_pad(5))
+    assert np.array_equal(out, ref)
+
+
+def test_topk_order_matches_numpy_on_exact_scores():
+    """Integer-valued rows make the f32 dot products exact, so the
+    kernel's ranking must equal the numpy oracle's (score descending,
+    row id ascending on ties)."""
+    rng = np.random.default_rng(1)
+    data = rng.integers(-3, 4, size=(43, 16)).astype(np.float32)
+    q = rng.integers(-3, 4, size=16).astype(np.float32)
+    out = _store_topk(data, q, 10)
+    s = (data * q).sum(axis=1)
+    order = np.lexsort((np.arange(len(s)), -s))[:10]
+    assert np.array_equal(out[1, :10].astype(np.int64), order)
+    assert np.array_equal(out[0, :10], s[order])
+
+
+def test_topk_duplicate_scores_tiebreak_on_row_id():
+    """All rows identical -> every score ties; winners must come out in
+    ascending row-id order (the deterministic tie-break)."""
+    data = np.tile(np.arange(16, dtype=np.float32), (12, 1))
+    q = np.ones(16, np.float32)
+    out = _store_topk(data, q, 4)
+    assert np.array_equal(out[1, :4], [0.0, 1.0, 2.0, 3.0])
+    assert np.array_equal(out, _host_topk(data, q, 4))
+
+
+def test_topk_k_exceeds_rows_pads_with_sentinels():
+    """k > n_rows: the real rows rank first, the tail keeps the empty
+    (NEG_INF, BIG_ID) sentinel, and ``project`` drops it."""
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(5, 16)).astype(np.float32)
+    q = rng.normal(size=16).astype(np.float32)
+    out = _store_topk(data, q, 8)
+    assert np.array_equal(out, _host_topk(data, q, 8))
+    assert set(out[1, :5].astype(np.int64)) == set(range(5))
+    assert np.all(out[0, 5:8] == NEG_INF)
+    assert np.all(out[1, 5:8] == BIG_ID)
+    job = AnalyticsJob(extent="e", reduce="topk", query=[0.0] * 16, k=8)
+    pairs = project(out, job)
+    assert len(pairs) == 5 and all(i < 5 for i, _ in pairs)
+
+
+def test_topk_cosine_ranking_invariant_to_query_scale():
+    """Cosine normalizes rows only, so scaling the query scales every
+    score by one constant — the returned ids must not move."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(30, 16)).astype(np.float32)
+    q = rng.normal(size=16).astype(np.float32)
+    a = _store_topk(data, q, 6, "cosine")
+    b = _store_topk(data, 4.0 * q, 6, "cosine")
+    assert np.array_equal(a[1, :6], b[1, :6])
+
+
+@pytest.mark.parametrize("page_dtype", ["int8", "fp8"])
+def test_topk_quantized_extents_bit_identical(page_dtype):
+    """int8/fp8 extents: the kernel dequantizes per page in VMEM with
+    the same elementwise multiply ``ExtentStore.get`` applies host-side,
+    so the folds stay bit-identical."""
+    if page_dtype == "fp8":
+        from repro.core.kv_tier import _fp8_dtype
+        if _fp8_dtype() is None:
+            pytest.skip("no fp8 dtype in this jax build")
+    rng = np.random.default_rng(4)
+    data = rng.normal(size=(43, 16)).astype(np.float32)
+    q = rng.normal(size=16).astype(np.float32)
+    store = ExtentStore(**dict(EXT_CFG, page_dtype=page_dtype))
+    store.put("e", data)
+    out = np.asarray(ops.topk_scan(
+        store.pages, store.page_table("e"), 43, jnp.asarray(q), k=5,
+        scales=store.scales))
+    ref = _host_topk(store.get("e"), q, 5)
+    assert np.array_equal(out, ref)
+
+
+def test_topk_validates_arguments():
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(8, 16)).astype(np.float32)
+    store = ExtentStore(**EXT_CFG)
+    store.put("e", data)
+    q = jnp.zeros(16)
+    with pytest.raises(ValueError):
+        ops.topk_scan(store.pages, store.page_table("e"), 8, q, k=0)
+    with pytest.raises(ValueError):
+        ops.topk_scan(store.pages, store.page_table("e"), 8, q,
+                      k=MAX_TOPK + 1)
+    with pytest.raises(ValueError):
+        ops.topk_scan(store.pages, store.page_table("e"), 8, q, k=3,
+                      metric="euclid")
+
+
+# ---------------------------------------------------------------------------
+# batched multi-query embed gather
+# ---------------------------------------------------------------------------
+
+
+def test_embed_gather_batched_matches_numpy():
+    rng = np.random.default_rng(6)
+    table = rng.integers(0, 500, size=(64, 8)).astype(np.int32)
+    idx = rng.integers(0, 64, size=(3, 4)).astype(np.int32)
+    out = np.asarray(ops.embed_gather(jnp.asarray(table),
+                                      jnp.asarray(idx)))
+    assert out.shape == (3, 4, 8)
+    assert np.array_equal(out, table[idx])
+    # same shape, different content: one jit serves the whole batch
+    idx2 = rng.integers(0, 64, size=(3, 4)).astype(np.int32)
+    out2 = np.asarray(ops.embed_gather(jnp.asarray(table),
+                                       jnp.asarray(idx2)))
+    assert np.array_equal(out2, table[idx2])
+
+
+# ---------------------------------------------------------------------------
+# topk AnalyticsJob: validation, wire round-trip, planner pricing
+# ---------------------------------------------------------------------------
+
+
+def test_topk_job_validation():
+    from repro.core import ContainerError
+    ok = AnalyticsJob(extent="e", reduce="topk", query=[0.0] * 4, k=3)
+    ok.validate()
+    with pytest.raises(ContainerError):
+        AnalyticsJob(extent="e", reduce="topk", k=3).validate()  # no query
+    with pytest.raises(ContainerError):
+        AnalyticsJob(extent="e", reduce="topk", query=[0.0], k=0).validate()
+    with pytest.raises(ContainerError):
+        AnalyticsJob(extent="e", reduce="topk", query=[0.0],
+                     k=MAX_TOPK + 1).validate()
+    with pytest.raises(ContainerError):
+        AnalyticsJob(extent="e", reduce="topk", query=[0.0], k=2,
+                     metric="euclid").validate()
+    with pytest.raises(ContainerError):
+        AnalyticsJob(extent="e", reduce="sum", query=[0.0]).validate()
+
+
+def test_topk_job_over_the_wire_matches_host_fold():
+    """JOB frame in, RESULTS frame out: the containerized kernel's block
+    survives the JSON round-trip bit-for-bit and projects to k (id,
+    score) pairs."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(43, 16)).astype(np.float32)
+    pool.nodes[ip].extents.put("emb", data)
+    q = rng.normal(size=16).astype(np.float32)
+    job = AnalyticsJob(extent="emb", reduce="topk",
+                       query=[float(x) for x in q], k=4)
+    block = from_jsonable(pool.driver.submit_jobs(ip, [job.to_dict()]))[0]
+    assert np.array_equal(block, _host_topk(data, q, 4))
+    pairs = project(block, job)
+    assert len(pairs) == 4
+    assert all(isinstance(i, int) and isinstance(s, float)
+               for i, s in pairs)
+
+
+def test_planner_prices_topk_result_frame():
+    """The planner's modeled RESULTS frame for a topk job is the padded
+    (scores, ids) block — k pairs, not the extent."""
+    from repro.runtime.offload import OffloadPlanner
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+    rng = np.random.default_rng(8)
+    pool.nodes[ip].extents.put(
+        "emb", rng.normal(size=(120, 16)).astype(np.float32))
+    job = AnalyticsJob(extent="emb", reduce="topk", query=[0.0] * 16, k=4)
+    est = OffloadPlanner(pool).estimate(job)
+    assert est.result_bytes == REDUCE_ROWS * topk_pad(4) * 4
+    assert est.result_bytes < est.bytes_scanned
+
+
+# ---------------------------------------------------------------------------
+# RetrievalFrontend: admission, assembly, prefix-cached serving
+# ---------------------------------------------------------------------------
+
+
+def _tiny_model():
+    from repro.configs.base import get_arch
+    from repro.models.api import get_model
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _frontend(pool, server=None, *, n_docs=10, k=3, ingest=True, **kw):
+    from repro.runtime.retrieval import RetrievalFrontend
+    rng = np.random.default_rng(9)
+    corpus = rng.integers(0, 64, size=(n_docs, 4)).astype(np.int32)
+    emb = rng.normal(size=(n_docs, 16)).astype(np.float32)
+    fe = RetrievalFrontend(pool, server, corpus_tokens=corpus, k=k,
+                           template=np.arange(6, dtype=np.int32), **kw)
+    if ingest:
+        fe.ingest(emb)
+    return fe, emb
+
+
+def test_frontend_retrieve_device_matches_host():
+    pool = _pool()
+    fe, emb = _frontend(pool)
+    q = np.random.default_rng(10).normal(size=16).astype(np.float32)
+    dev = fe.retrieve([q], force="device")[0]
+    host = fe.retrieve([q], force="host")[0]
+    assert dev["where"] == "device" and host["where"] == "host"
+    assert dev["ids"] == host["ids"]
+    assert dev["scores"] == host["scores"]
+    assert fe.stats["device"] == 1 and fe.stats["host"] == 1
+
+
+def test_frontend_saturated_node_falls_back_to_host():
+    """A serving node with no window headroom must not take the scoring
+    job: the planner reroutes it to the host fold (same bits), counted
+    as "host-admission"."""
+    pool = _pool()
+    ip = pool.alive_nodes()[0]
+
+    class BusyRouter:
+        def node_headroom(self):
+            return {0: 0}               # the only shard: saturated
+
+    pool._server = object()             # fake serving frontend binding
+    pool._serve_ips = [ip]
+    from repro.runtime.offload import OffloadPlanner
+    # corpus big enough that the cost model on its own says "device" —
+    # only the admission surface forces the reroute
+    fe, emb = _frontend(pool, n_docs=60, planner=OffloadPlanner(
+        pool, router=BusyRouter()))
+    assert fe.planner.estimate(AnalyticsJob(
+        extent=fe.extent, reduce="topk", query=[0.0] * 16,
+        k=3)).choice == "device"
+    q = np.random.default_rng(11).normal(size=16).astype(np.float32)
+    hit = fe.retrieve([q])[0]
+    assert hit["where"] == "host-admission"
+    assert fe.stats["host-admission"] == 1
+    # the fallback ranks identically to the pinned device path
+    pinned = fe.retrieve([q], force="device")[0]
+    assert pinned["ids"] == hit["ids"]
+    assert pinned["scores"] == hit["scores"]
+
+
+def test_frontend_fallback_never_stalls_inflight_decode():
+    """Retrieval scoring arriving mid-decode on a saturated pool routes
+    to the host path, and the in-flight horizons finish token-identical
+    to a run with no analytics at all."""
+    from repro.runtime.offload import OffloadPlanner
+    from repro.runtime.pool import PoolServer
+    from repro.runtime.scheduler import PoolRouter, Request
+
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for i in range(2)]
+
+    def run(with_retrieval):
+        srv = PoolServer(model, params, n_nodes=1, page_size=4,
+                         hbm_pages_per_node=8, dtype=jnp.float32)
+        pool = _pool()
+        pool.attach_server(srv)
+        fe, emb = _frontend(pool, n_docs=60)    # big enough for "device"
+        router = PoolRouter(srv, pool, max_active=2, horizon=4)
+        fe.planner = OffloadPlanner(pool, router=router)
+        for i, p in enumerate(prompts):
+            router.submit(Request(rid=i, prompt=p, max_tokens=8))
+        router.step()                   # decode in flight, window busy
+        where = None
+        if with_retrieval:
+            assert router.node_headroom()[0] <= 0
+            q = np.random.default_rng(13).normal(size=16)
+            where = fe.retrieve([q.astype(np.float32)])[0]["where"]
+        st = router.run_to_completion()
+        assert st["requests"] == 2
+        return where, {r.rid: r.output for r in router.finished}
+
+    where, with_ret = run(True)
+    assert where == "host-admission"
+    _, without = run(False)
+    assert with_ret == without
+
+
+def test_frontend_prompt_assembly_rank_order():
+    pool = _pool()
+    fe, emb = _frontend(pool, k=2)
+    q = emb[7] + 0.01 * np.ones(16, np.float32)   # doc 7 dominates
+    prompts, hits = fe.build_prompts([q], [np.asarray([9, 9],
+                                                      np.int32)])
+    assert hits[0]["ids"][0] == 7
+    chunks = np.concatenate(
+        [np.asarray(fe.corpus_tokens)[i] for i in hits[0]["ids"]])
+    expect = np.concatenate([fe.template, chunks,
+                             np.asarray([9, 9], np.int32)])
+    assert np.array_equal(prompts[0], expect)
+
+
+def test_frontend_warm_serving_token_identical():
+    """End to end on a PagedServer: device-retrieval prompts admitted
+    through the prefix cache decode token-identically to the host-side
+    retrieval baseline on a cache-ablated server, and the second wave
+    actually rides prefix pages."""
+    from repro.runtime.serve import PagedServer
+    cfg, model, params = _tiny_model()
+    pool = _pool()
+    warm = PagedServer(model, params, page_size=4, hbm_pages=32,
+                       dtype=jnp.float32)
+    cold = PagedServer(model, params, page_size=4, hbm_pages=32,
+                       dtype=jnp.float32, prefix_cache=False)
+    fe_w, emb = _frontend(pool, warm)
+    fe_c, _ = _frontend(pool, cold, ingest=False)   # shared extent
+    rng = np.random.default_rng(14)
+    q = rng.normal(size=16).astype(np.float32)
+    gen = 4
+
+    def wave(fe, force):
+        outs = {}
+        for i in range(2):
+            qt = np.asarray([i + 1, i + 2], np.int32)
+            _, prompt, _ = fe.submit(i, q, qt, force=force)
+            outs[i] = prompt
+        dec = fe.server.decode(gen)
+        got = {i: (list(outs[i]), dec[i]) for i in range(2)}
+        for i in range(2):
+            fe.server.free_sequence(i)
+        return got
+
+    base = wave(fe_c, "host")           # host retrieval, no cache
+    first = wave(fe_w, "device")        # seeds template+chunks
+    s0 = warm.table.stats.prefix_tokens
+    second = wave(fe_w, "device")       # rides the shared prefix
+    assert [p for p, _ in first.values()] == [p for p, _ in base.values()]
+    assert first == base == second
+    assert warm.table.stats.prefix_tokens > s0, \
+        "second wave admitted without prefix hits"
