@@ -8,8 +8,13 @@ prefill logits (the parent checks every pool size against the 1-node
 ``PagedServer`` reference to 1e-4), tier telemetry and the Ether-oN
 control-plane terms.
 
-  python benchmarks/pool_worker.py --nodes 4 [--mode pool|single] \
-      [--requests 6 --prompt-len 24 --gen 16]
+``--mode degraded`` runs the failure cell instead: the same workload
+through the PoolRouter with one node killed mid-run (plus optional
+``--fault-plan`` fabric chaos) — outputs must match the uninterrupted
+reference, and the record carries recovery latency and the goodput dip.
+
+  python benchmarks/pool_worker.py --nodes 4 [--mode pool|single|degraded] \
+      [--requests 6 --prompt-len 24 --gen 16] [--fault-plan lossy]
 """
 from __future__ import annotations
 
@@ -26,7 +31,13 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, required=True)
-    ap.add_argument("--mode", choices=["pool", "single"], default="pool")
+    ap.add_argument("--mode", choices=["pool", "single", "degraded"],
+                    default="pool")
+    ap.add_argument("--fault-plan", default="none",
+                    help="degraded mode: seeded fabric fault plan "
+                         "layered on the mid-run kill — a preset name "
+                         "(none/lossy/storm), inline JSON, or a path "
+                         "(repro.core.faults.load_plan)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
@@ -70,6 +81,106 @@ def main():
 
     rec = {"nodes": args.nodes, "mode": args.mode,
            "page_dtype": args.page_dtype}
+
+    if args.mode == "degraded":
+        # -- degraded-mode cell: the main workload through the
+        # PoolRouter with one DockerSSD killed mid-run (optionally
+        # under --fault-plan fabric chaos).  An uninterrupted run on an
+        # identically warmed stack is the reference: the chaos run must
+        # finish every request with token-identical output, and the
+        # record carries the recovery latency (kill -> every victim
+        # sequence re-placed and decoding on a survivor) and the
+        # goodput dip the failure cost.
+        from repro.core.faults import load_plan
+        from repro.runtime.pool import PoolServer
+        from repro.runtime.scheduler import PoolRouter, Request
+
+        def fresh():
+            server = PoolServer(
+                model, params, n_nodes=args.nodes,
+                page_size=args.page_size,
+                hbm_pages_per_node=-(-8 * args.requests // args.nodes),
+                dtype=jnp.float32, page_dtype=args.page_dtype)
+            pool = StoragePool(args.nodes, heartbeat_timeout=0.0)
+            pool.attach_server(server)
+            if args.fault_plan != "none":
+                pool.attach_faults(load_plan(args.fault_plan))
+            return server, pool
+
+        def drive(server, pool, kill):
+            """One full workload pass through a fresh router.  ``kill``
+            fails the node owning the first active sequence once decode
+            is under way (iteration 2 — mid-run, after the first
+            horizon)."""
+            router = PoolRouter(server, pool, max_active=args.requests,
+                                horizon=max(args.horizon, 1),
+                                prefill_chunk=2 * args.page_size)
+            for i, p in enumerate(prompts):
+                router.submit(Request(rid=i, prompt=p,
+                                      max_tokens=args.gen))
+            timeline = []             # (step wall s, tokens emitted)
+            victims, killed, t_kill, recovery_s = [], None, None, None
+            while router.waiting or router.prefilling or router.active:
+                if kill and t_kill is None and router.active:
+                    rid = next(iter(router.active))
+                    killed = server.node_of(rid)
+                    victims = [r for r in list(router.active)
+                               if server.node_of(r) == killed]
+                    pool.nodes[pool.serving_ips()[killed]].fail()
+                    t_kill = time.perf_counter()
+                t0 = time.perf_counter()
+                n = router.step()
+                timeline.append((time.perf_counter() - t0, n))
+                if t_kill is not None and recovery_s is None:
+                    done = {f.rid for f in router.finished}
+                    if all(r in router.active or r in done
+                           for r in victims):
+                        recovery_s = time.perf_counter() - t_kill
+            out = {r.rid: list(r.output) for r in router.finished}
+            return out, timeline, router, killed, recovery_s
+
+        # reference: one untimed pass warms the jit buckets (admission
+        # chunks, horizon steps), then the timed uninterrupted run
+        server, pool = fresh()
+        drive(server, pool, kill=False)
+        ref_out, ref_tl, _, _, _ = drive(server, pool, kill=False)
+
+        # chaos: same warm-up discipline on a fresh stack (a killed
+        # node cannot be revived), then the timed run with the kill
+        server, pool = fresh()
+        drive(server, pool, kill=False)
+        out, tl, router, killed, recovery_s = drive(server, pool,
+                                                    kill=True)
+
+        assert out == ref_out, \
+            "degraded run diverged from the uninterrupted reference"
+        assert recovery_s is not None, "victim sequences never recovered"
+        toks = args.requests * args.gen
+        ref_s = sum(dt for dt, _ in ref_tl)
+        deg_s = sum(dt for dt, _ in tl)
+        st = pool.driver.stats
+        rec["degraded"] = {
+            "killed_node": killed,
+            "fault_plan": args.fault_plan,
+            "outputs_identical_after_kill": out == ref_out,
+            "recovery_s": recovery_s,
+            "requeues": router.requeues,
+            "rejected": len(router.rejected),
+            "ref_tokens_per_s": toks / ref_s,
+            "degraded_tokens_per_s": toks / deg_s,
+            "goodput_vs_uninterrupted": ref_s / deg_s,
+            "steps_ref": len(ref_tl),
+            "steps_degraded": len(tl),
+            "retransmits": st.retransmits,
+            "nacks": st.nacks,
+            "dup_frames": st.dup_frames,
+        }
+        if pool.fault_injector is not None:
+            rec["degraded"]["faults"] = \
+                pool.fault_injector.stats.as_dict()
+        print(json.dumps(rec))
+        return
+
     if args.mode == "single":
         from repro.runtime.serve import PagedServer
         server = PagedServer(model, params, page_size=args.page_size,

@@ -909,7 +909,8 @@ def serve_decode(out_path="BENCH_serve.json", quick=False):
 # ---------------------------------------------------------------------------
 
 
-def pool_serving(out_path="BENCH_pool.json", quick=False):
+def pool_serving(out_path="BENCH_pool.json", quick=False,
+                 fault_plan="none"):
     """Pool-serving scaling benchmark: the same workload through the
     1-node ``PagedServer`` and the mesh-sharded ``PoolServer`` on
     1/2/4/8 simulated nodes (forced host devices — each pool size is a
@@ -918,9 +919,13 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
     Asserts the pool path matches the single-node reference to 1e-4 on
     prefill logits and exactly on greedy outputs (per-token AND
     horizon), plus a conservative horizon-speedup floor, then writes
-    ``BENCH_pool.json`` with per-pool-size tokens/s.  CPU simulation
-    numbers measure the mechanism (one jitted step per token,
-    LSE-merged partials), not TPU perf."""
+    ``BENCH_pool.json`` with per-pool-size tokens/s.  A final
+    degraded-mode cell kills one node of the largest pool mid-run
+    (optionally under ``--fault-plan`` fabric chaos) and records the
+    recovery latency and goodput dip, with outputs still identical to
+    the uninterrupted run.  CPU simulation numbers measure the
+    mechanism (one jitted step per token, LSE-merged partials), not
+    TPU perf."""
     import subprocess
     import sys as _sys
 
@@ -932,11 +937,12 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
     wl = {"requests": 6, "prompt_len": 24, "gen": 16, "page_size": 8,
           "horizon": 8}
 
-    def run(mode, nodes):
+    def run(mode, nodes, extra=()):
         out = subprocess.run(
             [_sys.executable, worker, "--nodes", str(nodes),
              "--mode", mode]
-            + [f"--{k.replace('_', '-')}={v}" for k, v in wl.items()],
+            + [f"--{k.replace('_', '-')}={v}" for k, v in wl.items()]
+            + list(extra),
             capture_output=True, text=True, timeout=900)
         assert out.returncode == 0, out.stderr[-3000:]
         return json.loads(out.stdout.splitlines()[-1])
@@ -1017,6 +1023,28 @@ def pool_serving(out_path="BENCH_pool.json", quick=False):
         floor = 1.2 if n >= 2 else 0.8
         assert h_speed >= floor, \
             f"pool({n}) horizon speedup {h_speed:.2f}x < {floor}x floor"
+    # -- degraded-mode cell: kill 1 of 4 nodes mid-run (the 2-node pool
+    # under --quick; ``--fault-plan`` layers seeded fabric chaos on
+    # top).  The worker asserts the chaos run's outputs are
+    # token-identical to an uninterrupted run on an identically warmed
+    # stack; the artifact records the recovery latency (kill -> victims
+    # re-placed and decoding on survivors) and the goodput dip.
+    dn = 4 if 4 in sizes else max(n for n in sizes if n >= 2)
+    deg = run("degraded", dn,
+              extra=[f"--fault-plan={fault_plan}"])["degraded"]
+    assert deg["outputs_identical_after_kill"], \
+        f"degraded({dn}) outputs diverged from the uninterrupted run"
+    assert deg["recovery_s"] is not None and deg["requeues"] >= 1, \
+        f"degraded({dn}) kill produced no failover requeue"
+    result["degraded"] = dict(deg, nodes=dn)
+    _csv(f"pool_degraded_{dn}", deg["recovery_s"] * 1e6,
+         f"goodput={deg['goodput_vs_uninterrupted']:.2f},"
+         f"requeues={deg['requeues']},plan={fault_plan}")
+    print(f"  degraded ({dn} nodes, node {deg['killed_node']} killed "
+          f"mid-run, plan={fault_plan}): outputs identical | recovery "
+          f"{deg['recovery_s']*1e3:.0f} ms | goodput "
+          f"{deg['goodput_vs_uninterrupted']:.2f}x of uninterrupted | "
+          f"{deg['requeues']} requeued, {deg['rejected']} shed")
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     print(f"  outputs match the single-node reference on every pool size, "
@@ -1337,12 +1365,19 @@ def main() -> None:
                     help="serve: shorter gen + 2 horizons; "
                          "pool: 1/2 nodes instead of 1/2/4/8; "
                          "isp: 2 small workloads instead of 4 full-size")
+    ap.add_argument("--fault-plan", default="none",
+                    help="pool: seeded fabric fault plan for the "
+                         "degraded-mode cell — a preset name "
+                         "(none/lossy/storm), inline JSON, or a path "
+                         "(repro.core.faults.load_plan)")
     args = ap.parse_args()
     which = args.benches or list(BENCHES)
     print("name,us_per_call,derived")
     for name in which:
         print(f"== {name} " + "=" * (66 - len(name)))
-        if name in ("serve", "pool", "isp"):
+        if name == "pool":
+            BENCHES[name](quick=args.quick, fault_plan=args.fault_plan)
+        elif name in ("serve", "isp"):
             BENCHES[name](quick=args.quick)
         else:
             BENCHES[name]()

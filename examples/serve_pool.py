@@ -12,8 +12,14 @@ node is killed: the heartbeat machinery drops its sequences and the
 router re-prefills them on the survivors, reproducing the exact greedy
 outputs of an uninterrupted run.
 
-  PYTHONPATH=src python examples/serve_pool.py
+``--fault-plan`` additionally puts a seeded fault injector on the
+fabric boundary (drops, CRC-caught corruption, duplicates, reordering
+delays) — the reliable-delivery layer absorbs all of it and the outputs
+still match token for token.
+
+  PYTHONPATH=src python examples/serve_pool.py [--fault-plan lossy]
 """
+import argparse
 import dataclasses
 import os
 import re
@@ -44,6 +50,13 @@ from repro.runtime.serve import PagedServer
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fault-plan", default="none",
+                    help="seeded fabric fault plan for scenario 1 — a "
+                         "preset name (none/lossy/storm), inline JSON, "
+                         "or a path to a plan file "
+                         "(repro.core.faults.load_plan)")
+    args = ap.parse_args()
     cfg = dataclasses.replace(
         get_arch("granite-3-2b"),
         n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
@@ -70,6 +83,10 @@ def main():
                         hbm_pages_per_node=16, dtype=jnp.float32)
     pool = StoragePool(N_NODES, heartbeat_timeout=0.0)
     pool.attach_server(server)
+    if args.fault_plan != "none":
+        from repro.core.faults import load_plan
+        pool.attach_faults(load_plan(args.fault_plan))
+        print(f"fault injector armed: plan '{args.fault_plan}'")
     # horizon=4: four tokens per host interaction — the router admits,
     # evicts and polls heartbeats at horizon boundaries while the fused
     # on-device token loop runs uninterrupted in between
@@ -107,6 +124,14 @@ def main():
     print(f"Ether-oN control plane: {ct['control_frames']:.0f} frames "
           f"({ct['frames_per_1k_tokens']:.1f}/1K tokens), "
           f"{ct['us_per_token']:.2f} us/token — off the decode hot path")
+    if pool.fault_injector is not None:
+        fs = pool.fault_injector.stats
+        ds = pool.driver.stats
+        print(f"chaos absorbed: {fs.dropped} dropped / {fs.corrupted} "
+              f"corrupted / {fs.duplicated} duplicated / {fs.delayed} "
+              f"delayed -> {ds.retransmits} retransmits, {ds.nacks} "
+              f"NACKs, {ds.dup_frames} dups discarded — outputs still "
+              f"identical")
 
     # --- scenario 2: one system prompt shared across the pool ----------
     # N requests carry the same 18-token template + distinct tails.  The

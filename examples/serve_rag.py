@@ -66,7 +66,7 @@ def main():
                            template=template, k=k)
     fe_cold = RetrievalFrontend(pool, cold, corpus_tokens=corpus,
                                 template=template, k=k)
-    ip = fe.ingest(emb)
+    ip = fe.ingest(emb)[0]
     print(f"corpus extent: {n_docs}x{d_emb} embeddings on node {ip}")
 
     # every request asks about one topic (same query vector), with its

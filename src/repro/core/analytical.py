@@ -335,10 +335,13 @@ def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
     the token-rate tensor traffic rides jax collectives and never shows
     up here.  The per-token figures quantify the paper's claim that the
     control plane is off the serving hot path — a few frames per
-    *sequence*, amortized to noise per generated token."""
+    *sequence*, amortized to noise per generated token.  On a lossy
+    fabric the reliability terms price what delivery actually cost:
+    retransmitted frames, checksum NACKs, dedup hits and the virtual
+    time spent in retransmit backoff (all exactly zero fault-free)."""
     toks = max(int(n_tokens), 1)
     wire = ether_stats.bytes_tx + ether_stats.bytes_rx
-    return {
+    terms = {
         "control_frames": float(ether_stats.control_frames),
         "frames_per_1k_tokens":
             1e3 * ether_stats.control_frames / toks,
@@ -346,6 +349,25 @@ def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
         "wire_bytes_per_token": wire / toks,
         "us_total": float(ether_stats.time_us),
         "us_per_token": ether_stats.time_us / toks,
+    }
+    terms.update(reliability_terms(ether_stats))
+    return terms
+
+
+def reliability_terms(ether_stats) -> Dict[str, float]:
+    """Delivery-reliability cost terms shared by the control- and
+    data-plane breakdowns (``getattr`` so pre-reliability stats objects
+    — or mocks — price as a clean fabric)."""
+    backoff = float(getattr(ether_stats, "backoff_us", 0.0))
+    time_us = float(getattr(ether_stats, "time_us", 0.0))
+    return {
+        "retransmits": float(getattr(ether_stats, "retransmits", 0)),
+        "nacks": float(getattr(ether_stats, "nacks", 0)),
+        "dup_frames": float(getattr(ether_stats, "dup_frames", 0)),
+        "backoff_us": backoff,
+        # fraction of the fabric's virtual time lost to retry waits —
+        # the goodput tax the fault plan levied
+        "backoff_frac": backoff / time_us if time_us > 0 else 0.0,
     }
 
 
@@ -566,7 +588,7 @@ def data_plane_terms(ether_stats, bytes_scanned: int,
     wire."""
     jobs = max(int(n_jobs), 1)
     wire = ether_stats.bytes_tx + ether_stats.bytes_rx
-    return {
+    terms = {
         "job_frames": float(ether_stats.job_frames),
         "result_bytes": float(ether_stats.result_bytes),
         "wire_bytes": float(wire),
@@ -575,6 +597,8 @@ def data_plane_terms(ether_stats, bytes_scanned: int,
         "us_per_job": ether_stats.time_us / jobs,
         "reduction_ratio": bytes_scanned / max(wire, 1),
     }
+    terms.update(reliability_terms(ether_stats))
+    return terms
 
 
 # ---------------------------------------------------------------------------

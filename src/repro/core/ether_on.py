@@ -16,6 +16,17 @@ are tunneled through two vendor-specific NVMe commands
 The event loop is deterministic; per-operation cost accounting feeds
 the Fig-3/Fig-11 models.  On the TPU mapping (DESIGN.md) this layer is
 the pool's control plane; bulk tensor traffic rides jax collectives.
+
+Delivery is **reliable** (DESIGN.md §Fault model): every frame carries
+a per-flow sequence number; receivers ACK/NACK synchronously (the NVMe
+completion status — a reliable side channel, never a frame of its
+own), dedup by seq, and stash out-of-order arrivals until the gap
+fills; senders retransmit on timeout with exponential backoff, bounded
+by ``max_retries``.  A checksum mismatch is a NACK -> retransmit, not
+an exception.  On a fault-free fabric the reliable path is
+byte-identical in cost accounting to the historical direct delivery —
+retransmit/NACK/dedup counters stay exactly zero.  Faults come only
+from an attached :class:`~repro.core.faults.FaultInjector`.
 """
 from __future__ import annotations
 
@@ -44,6 +55,9 @@ class EthernetFrame:
     payload: bytes
     ethertype: int = 0x0800
     checksum: int = 0
+    # per-flow delivery sequence number (-1 = unsequenced legacy frame);
+    # a header field, so payload corruption never damages it
+    seq: int = -1
 
     def seal(self) -> "EthernetFrame":
         self.checksum = zlib.crc32(self.payload)
@@ -75,6 +89,12 @@ class Costs:
     dma_per_page: float = 0.9
     completion_msi: float = 1.2
     page_copy_per_kb: float = 0.08
+    # base retransmit timeout; attempt k waits 2^k of these
+    retransmit_timeout_us: float = 25.0
+
+
+#: bounded retries per frame (attempts = max_retries + 1)
+MAX_RETRIES = 8
 
 
 class EtherONStats:
@@ -90,15 +110,23 @@ class EtherONStats:
         self.job_frames = 0          # analytics JOB submissions
         self.result_bytes = 0        # reduced aggregates shipped back
         self.extent_reads = 0        # host-reads-everything fetches
+        # reliable-delivery counters — exactly zero on a fault-free
+        # fabric (the chaos suite pins both directions of that claim)
+        self.retransmits = 0         # timed-out frames resent
+        self.nacks = 0               # checksum-mismatch rejections
+        self.dup_frames = 0          # receive-side dedup hits
+        self.backoff_us = 0.0        # virtual time spent in backoff
         self.time_us = 0.0
 
 
 class EtherONDriver:
     """Host-side kernel driver + virtual network adapter."""
 
-    def __init__(self, host_ip: str, costs: Costs = Costs()):
+    def __init__(self, host_ip: str, costs: Costs = Costs(),
+                 max_retries: int = MAX_RETRIES):
         self.host_ip = host_ip
         self.costs = costs
+        self.max_retries = max_retries
         self.stats = EtherONStats()
         self._cid = 0
         self._devices: Dict[str, "DockerSSDEndpoint"] = {}
@@ -106,6 +134,13 @@ class EtherONDriver:
         self._rx_backlog: Dict[str, Deque[EthernetFrame]] = {}
         self._inbox: Deque[EthernetFrame] = deque()
         self._next_page = 0
+        # reliable delivery state: per-destination tx seq, per-source
+        # expected upcall seq + reorder stash
+        self._tx_seq: Dict[str, int] = {}
+        self._up_expected: Dict[str, int] = {}
+        self._up_stash: Dict[str, Dict[int, EthernetFrame]] = {}
+        #: attached chaos source (core.faults.FaultInjector) or None
+        self.faults = None
 
     # -- device attach / init ------------------------------------------------
 
@@ -114,9 +149,22 @@ class EtherONDriver:
         dev._driver = self
         self._outstanding_rx[dev.ip] = deque()
         self._rx_backlog[dev.ip] = deque()
+        self._tx_seq[dev.ip] = 0
+        self._up_expected[dev.ip] = 0
+        self._up_stash[dev.ip] = {}
         # kernel init: pre-submit the upcall commands
         for _ in range(UPCALL_SLOTS):
             self._post_receive(dev.ip)
+
+    def attach_faults(self, injector):
+        """Wire a :class:`~repro.core.faults.FaultInjector` onto the
+        fabric boundary (None detaches)."""
+        self.faults = injector
+
+    def _lat_mult(self, ip: str) -> float:
+        """Straggler latency multiplier for fabric ops touching ``ip``."""
+        return self.faults.latency_mult(ip) if self.faults is not None \
+            else 1.0
 
     def _alloc_pages(self, nbytes: int) -> List[int]:
         n = max(1, -(-nbytes // PAGE))
@@ -137,21 +185,73 @@ class EtherONDriver:
     # -- host -> SSD ----------------------------------------------------------
 
     def transmit(self, frame: EthernetFrame):
-        """Translate an Ethernet frame into a 0xE0 NVMe command."""
+        """Translate an Ethernet frame into a 0xE0 NVMe command and
+        deliver it reliably: stop-and-wait per destination — each
+        attempt pays the full command cost; an unacked attempt pays an
+        exponentially-backed-off timeout and retransmits, bounded by
+        ``max_retries``.  On a fault-free fabric attempt 0 acks and the
+        accounting is byte-identical to unconditional delivery."""
         if frame.dst_ip not in self._devices:
             raise EtherONError(f"no route to {frame.dst_ip}")
         frame.seal()
-        pages = self._alloc_pages(frame.wire_bytes)
-        self._cid += 1
-        cmd = NVMeCommand(OPC_TRANSMIT, self._cid, sq_id=0, prp=pages,
-                          n_pages=len(pages), frame=frame)
+        seq = self._tx_seq[frame.dst_ip]
+        self._tx_seq[frame.dst_ip] = seq + 1
+        frame.seq = seq
+        dev = self._devices[frame.dst_ip]
         c = self.costs
-        self.stats.tx_commands += 1
-        self.stats.bytes_tx += frame.wire_bytes
-        self.stats.time_us += (c.page_copy_per_kb * frame.wire_bytes / 1024 +
-                               c.doorbell + c.dma_per_page * len(pages) +
-                               c.completion_msi)
-        self._devices[frame.dst_ip]._receive_from_host(cmd)
+        mult = self._lat_mult(frame.dst_ip)
+        for attempt in range(self.max_retries + 1):
+            pages = self._alloc_pages(frame.wire_bytes)
+            self._cid += 1
+            cmd = NVMeCommand(OPC_TRANSMIT, self._cid, sq_id=0, prp=pages,
+                              n_pages=len(pages), frame=frame)
+            self.stats.tx_commands += 1
+            self.stats.bytes_tx += frame.wire_bytes
+            self.stats.time_us += mult * (
+                c.page_copy_per_kb * frame.wire_bytes / 1024 +
+                c.doorbell + c.dma_per_page * len(pages) +
+                c.completion_msi)
+            if self._deliver_transmit(dev, cmd):
+                return
+            # timeout: exponential backoff before the retransmit
+            self.stats.retransmits += 1
+            wait = c.retransmit_timeout_us * (1 << attempt)
+            self.stats.backoff_us += wait
+            self.stats.time_us += wait
+        raise EtherONError(
+            f"delivery to {frame.dst_ip} failed after "
+            f"{self.max_retries + 1} attempts (seq {seq}): node down "
+            f"or fabric dropping every copy")
+
+    def _deliver_transmit(self, dev: "DockerSSDEndpoint",
+                          cmd: NVMeCommand) -> bool:
+        """One delivery attempt through the (possibly faulty) fabric.
+        Returns True when the destination acked OUR sequence number —
+        released held frames and stale duplicates resolve to dup-acks
+        that never complete the current command."""
+        frame = cmd.frame
+        if self.faults is not None:
+            delivery = self.faults.transit(frame, "down", dev.ip)
+        else:
+            delivery = [frame]
+        if not dev.alive:
+            # a dead node consumes nothing and acks nothing; released
+            # held frames die with it
+            return False
+        acked = False
+        for f in delivery:
+            fc = cmd if f is frame else NVMeCommand(
+                OPC_TRANSMIT, cmd.cid, sq_id=0, prp=cmd.prp,
+                n_pages=cmd.n_pages, frame=f)
+            status = dev._receive_from_host(fc)
+            if status == "nack":
+                self.stats.nacks += 1
+                continue
+            if status == "dup":
+                self.stats.dup_frames += 1
+            if f.seq == frame.seq and status in ("ack", "dup"):
+                acked = True
+        return acked
 
     # -- serving control plane -------------------------------------------------
 
@@ -246,6 +346,55 @@ class EtherONDriver:
 
     # -- SSD -> host (upcall path) ---------------------------------------------
 
+    def _deliver_upcall(self, ip: str, frame: EthernetFrame) -> str:
+        """One SSD->host delivery attempt through the (possibly faulty)
+        fabric.  Returns the receive status for ``frame``'s own seq —
+        "ack" (consumed or stashed), "nack" (checksum mismatch), "dup"
+        (already have it), or "lost" (dropped/held in flight) — the
+        reliable completion-status side channel the device's retransmit
+        loop keys on."""
+        if self.faults is not None:
+            delivery = self.faults.transit(frame, "up", ip)
+        else:
+            delivery = [frame]
+        status = "lost"
+        for f in delivery:
+            st = self._upcall_rx(ip, f)
+            if f.seq == frame.seq and status != "ack":
+                status = st
+        return status
+
+    def _upcall_rx(self, ip: str, frame: EthernetFrame) -> str:
+        """Receive-side delivery state machine: CRC check -> NACK,
+        seq dedup, reorder stash, in-order release into the upcall
+        consume path."""
+        if not frame.verify():
+            self.stats.nacks += 1
+            return "nack"
+        if frame.seq < 0:               # unsequenced legacy frame
+            self._upcall(ip, frame)
+            return "ack"
+        exp = self._up_expected[ip]
+        if frame.seq < exp:
+            self.stats.dup_frames += 1
+            return "dup"
+        stash = self._up_stash[ip]
+        if frame.seq > exp:
+            if frame.seq in stash:
+                self.stats.dup_frames += 1
+                return "dup"
+            # out of order: hold (acked — received, just early) until
+            # the gap fills, so reassembly never sees a reordering
+            stash[frame.seq] = frame
+            return "ack"
+        self._up_expected[ip] = exp + 1
+        self._upcall(ip, frame)
+        while self._up_expected[ip] in stash:
+            nxt = stash.pop(self._up_expected[ip])
+            self._up_expected[ip] += 1
+            self._upcall(ip, nxt)
+        return "ack"
+
     def _upcall(self, ip: str, frame: EthernetFrame):
         """Device completes an outstanding 0xE1 command."""
         q = self._outstanding_rx[ip]
@@ -260,9 +409,9 @@ class EtherONDriver:
         c = self.costs
         self.stats.rx_completions += 1
         self.stats.bytes_rx += frame.wire_bytes
-        self.stats.time_us += (c.dma_per_page * cmd.n_pages +
-                               c.completion_msi +
-                               c.page_copy_per_kb * frame.wire_bytes / 1024)
+        self.stats.time_us += self._lat_mult(ip) * (
+            c.dma_per_page * cmd.n_pages + c.completion_msi +
+            c.page_copy_per_kb * frame.wire_bytes / 1024)
         self._inbox.append(frame)
         # immediately re-post to keep communication alive
         self._post_receive(ip)
@@ -290,24 +439,66 @@ class DockerSSDEndpoint:
         self._driver: Optional[EtherONDriver] = None
         self._handler: Optional[Callable[[EthernetFrame], Optional[bytes]]] = None
         self.rx_frames = 0
+        #: fabric-level liveness: a dead endpoint consumes nothing and
+        #: acks nothing (DockerSSDNode.fail/recover toggles this)
+        self.alive = True
+        # reliable delivery state
+        self._rx_expected = 0           # next host->SSD seq to process
+        self._up_seq = 0                # next SSD->host seq to assign
 
     def set_handler(self, fn: Callable[[EthernetFrame], Optional[bytes]]):
         self._handler = fn
 
-    def _receive_from_host(self, cmd: NVMeCommand):
+    def _receive_from_host(self, cmd: NVMeCommand) -> str:
+        """Process one 0xE0 command; the return value is the NVMe
+        completion status the driver's retransmit loop keys on: "ack"
+        (processed), "nack" (checksum mismatch — retransmit), "dup"
+        (already processed — acked without re-running side effects)."""
         assert cmd.opcode == OPC_TRANSMIT
         frame = cmd.frame
         if not frame.verify():
-            raise EtherONError("checksum mismatch on transmit frame")
+            return "nack"               # NACK -> driver retransmits
+        if frame.seq >= 0:
+            if frame.seq < self._rx_expected:
+                return "dup"
+            # stop-and-wait sender: a gap means the sender gave up on
+            # that seq (and told its caller) — accept and advance
+            self._rx_expected = frame.seq + 1
         self.rx_frames += 1
         if self._handler is not None:
             resp = self._handler(frame)
             if resp is not None:
                 self.send_to_host(resp, dst_ip=frame.src_ip)
+        return "ack"
 
     def send_to_host(self, payload: bytes, dst_ip: str):
-        """ISP-container initiated traffic — possibly multiple MTU frames."""
+        """ISP-container initiated traffic — possibly multiple MTU
+        frames, delivered reliably: the whole burst goes out pipelined,
+        then unacked frames retransmit in bounded exponential-backoff
+        rounds (the receive side dedups and reorders by seq, so
+        reassembly survives any loss/duplication/reordering mix)."""
+        frames = []
         for off in range(0, max(len(payload), 1), MTU):
             chunk = payload[off:off + MTU]
             frame = EthernetFrame(self.ip, dst_ip, chunk).seal()
-            self._driver._upcall(self.ip, frame)
+            frame.seq = self._up_seq
+            self._up_seq += 1
+            frames.append(frame)
+        drv = self._driver
+        pending = frames
+        for round_no in range(drv.max_retries + 1):
+            # "ack" covers consumed AND stashed-out-of-order frames;
+            # "dup" means the receiver already holds it — both settle
+            # the frame.  "nack"/"lost" leave it for the next round.
+            pending = [f for f in pending
+                       if drv._deliver_upcall(self.ip, f)
+                       not in ("ack", "dup")]
+            if not pending:
+                return
+            drv.stats.retransmits += len(pending)
+            wait = drv.costs.retransmit_timeout_us * (1 << round_no)
+            drv.stats.backoff_us += wait
+            drv.stats.time_us += wait
+        raise EtherONError(
+            f"upcall delivery from {self.ip} lost {len(pending)} "
+            f"frame(s) after {drv.max_retries + 1} rounds")

@@ -19,7 +19,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.container import MiniDocker, to_jsonable
-from repro.core.ether_on import DockerSSDEndpoint, EtherONDriver
+from repro.core.ether_on import (DockerSSDEndpoint, EtherONDriver,
+                                 EtherONError)
 from repro.core.extent_store import ANALYTICS_IMAGE, ExtentStore
 from repro.core.lambda_fs import SHARABLE_NS, LambdaFS
 from repro.core.virtual_fw import VirtualFW
@@ -53,6 +54,9 @@ class DockerSSDNode:
         self.docker = MiniDocker(self.fw, self.fs, extents=self.extents)
         # λFS lock syncs ride the pool's Ether-oN driver
         self.alive = True
+        # straggler != dead: a suspect node keeps its sequences and
+        # extents but receives no NEW placements until it clears
+        self.suspect = False
         self.last_heartbeat = 0.0
         self.latency_ema_ms = 1.0
         self.serving_log: List[Tuple[str, int]] = []
@@ -155,9 +159,14 @@ class DockerSSDNode:
 
     def fail(self):
         self.alive = False
+        # the fabric endpoint dies with the node: in-flight deliveries
+        # time out and the driver's bounded retransmit gives up
+        self.endpoint.alive = False
 
     def recover(self):
         self.alive = True
+        self.endpoint.alive = True
+        self.suspect = False
 
 
 @dataclasses.dataclass
@@ -189,12 +198,52 @@ class StoragePool:
         self.extent_cfg = extent_cfg
         self.placements: Dict[str, Placement] = {}
         self.events: List[Tuple[str, str]] = []
+        self.fault_injector = None
         # pool-serving frontend state (attach_server)
         self._server = None
         self._serve_job: Optional[str] = None
         self._requeue: List[int] = []
         for i in range(n_nodes):
             self._add_node(i, spec)
+
+    # -- chaos wiring ---------------------------------------------------------
+
+    def attach_faults(self, plan_or_injector) -> "FaultInjector":
+        """Put a seeded fault injector on the pool's fabric boundary.
+
+        Scheduled crashes fail the node and run serving/container
+        failover immediately (deterministic — no dependence on
+        heartbeat wall-clock); straggler latency feeds each node's
+        latency EMA so the heartbeat sweep flips it to *suspect*."""
+        from repro.core.faults import FaultInjector, FaultPlan
+
+        if isinstance(plan_or_injector, FaultPlan):
+            inj = FaultInjector(plan_or_injector)
+        else:
+            inj = plan_or_injector
+
+        def _crash(ip: str):
+            node = self.nodes.get(ip)
+            if node is None or not node.alive:
+                return
+            node.fail()
+            self.events.append(("fault-crash", ip))
+            self._serve_failover(ip)
+            self._reschedule_off(ip)
+
+        def _lat(ip: str, mult: float):
+            node = self.nodes.get(ip)
+            if node is not None:
+                # nominal fabric latency is ~1 ms; a straggler pays
+                # mult x, so the EMA converges toward mult
+                node.latency_ema_ms = (0.8 * node.latency_ema_ms +
+                                       0.2 * float(mult))
+
+        inj.on_crash = _crash
+        inj.on_latency = _lat
+        self.fault_injector = inj
+        self.driver.attach_faults(inj)
+        return inj
 
     # -- membership -----------------------------------------------------------
 
@@ -214,7 +263,31 @@ class StoragePool:
             # the serving placement before _reschedule_off rewires it
             self._serve_failover(ip)
             self._reschedule_off(ip)
+        # suspect sweep: stragglers are *degraded*, not dead — existing
+        # work stays, new placements steer away until the EMA clears
+        slow = set(self.stragglers())
+        for ip, node in self.nodes.items():
+            was = node.suspect
+            node.suspect = node.alive and ip in slow
+            if node.suspect and not was:
+                self.events.append(("suspect", ip))
+            elif was and not node.suspect:
+                self.events.append(("suspect-cleared", ip))
         return dead
+
+    def suspect_nodes(self) -> List[str]:
+        return [ip for ip, n in self.nodes.items() if n.suspect]
+
+    def mark_unreachable(self, ip: str):
+        """Delivery to ``ip`` exhausted the fabric's retransmit budget:
+        treat the node as dead *now* — run serving/container failover —
+        instead of waiting for the heartbeat sweep to notice."""
+        node = self.nodes.get(ip)
+        if node is not None and node.alive:
+            node.fail()
+            self.events.append(("unreachable", ip))
+        self._serve_failover(ip)
+        self._reschedule_off(ip)
 
     def stragglers(self) -> List[str]:
         alive = [self.nodes[ip] for ip in self.alive_nodes()]
@@ -232,11 +305,17 @@ class StoragePool:
 
     def locate_extent(self, name: str) -> Optional[str]:
         """IP of the alive node whose flash holds extent ``name`` (data
-        placement is the scheduling input of the offload planner)."""
-        for ip in self.alive_nodes():
-            if name in self.nodes[ip].extents.extents:
-                return ip
-        return None
+        placement is the scheduling input of the offload planner).
+        Prefers a non-suspect replica when one exists."""
+        hits = self.locate_replicas(name)
+        good = [ip for ip in hits if not self.nodes[ip].suspect]
+        return (good or hits)[0] if hits else None
+
+    def locate_replicas(self, name: str) -> List[str]:
+        """Every alive node holding extent ``name`` — the retry set for
+        a job whose first delivery attempt lost its node."""
+        return [ip for ip in self.alive_nodes()
+                if name in self.nodes[ip].extents.extents]
 
     def place_distributed(self, job: str, image: str, *, dp: int = 1,
                           tp: int = 1, pp: int = 1) -> Placement:
@@ -303,6 +382,25 @@ class StoragePool:
     def serving_ips(self) -> List[str]:
         return list(self._serve_ips)
 
+    def suspect_shards(self) -> set:
+        """Mesh shard indices currently backed by a suspect node."""
+        if self._server is None:
+            return set()
+        return {i for i, ip in enumerate(self._serve_ips)
+                if ip in self.nodes and self.nodes[ip].suspect}
+
+    def _pick_serving_node(self, n_tokens: int) -> int:
+        """Least-loaded healthy shard, steering around suspects unless
+        every alive shard is suspect (advisory state must never
+        deadlock admission)."""
+        srv = self._server
+        alive = srv.alive_nodes()
+        if not alive:
+            raise EtherONError("no serving nodes alive")
+        sus = self.suspect_shards()
+        cand = [s for s in alive if s not in sus] or alive
+        return max(cand, key=lambda s: (srv.table.shard_free_pages(s), -s))
+
     def place_sequence(self, seq_id: int, n_tokens: int,
                        node: Optional[int] = None,
                        prompt=None) -> int:
@@ -310,17 +408,33 @@ class StoragePool:
         ``prompt``'s prefix when one exists, else least-loaded by free
         window pages, unless the router already picked one), announce
         the placement to that node over Ether-oN, and return the shard
-        index for ``PoolServer.add_request``/``begin_request``."""
+        index for ``PoolServer.add_request``/``begin_request``.
+
+        A placement announcement that exhausts the fabric's retransmit
+        budget means the chosen node is unreachable — it is failed over
+        on the spot and the sequence re-placed on a surviving shard."""
         srv = self._server
         if node is None and prompt is not None:
             node = srv.pick_prefix_node(prompt, n_tokens)
-        if node is None:
-            node = srv.least_loaded_node()
-        self.driver.send_control(
-            self._serve_ips[node], "place", seq_id,
-            extra=str(srv.pages_needed(n_tokens)))
-        self._drain_acks()
-        return node
+            if node is not None and node in self.suspect_shards() and \
+                    set(srv.alive_nodes()) - self.suspect_shards():
+                node = None     # warm prefix isn't worth a straggler
+        while True:
+            if node is None:
+                node = self._pick_serving_node(n_tokens)
+            try:
+                self.driver.send_control(
+                    self._serve_ips[node], "place", seq_id,
+                    extra=str(srv.pages_needed(n_tokens)))
+                self._drain_acks()
+                return node
+            except EtherONError:
+                ip = self._serve_ips[node]
+                self.events.append(("place-retry", f"{seq_id}:{ip}"))
+                self.mark_unreachable(ip)
+                node = None
+                if not srv.alive_nodes():
+                    raise
 
     def retire_sequence(self, seq_id: int) -> int:
         """Free a finished sequence: notify the owning node (every node,
@@ -331,7 +445,14 @@ class StoragePool:
         shards = [owner] if owner is not None else srv.alive_nodes()
         for s in shards:
             if s in srv.alive_nodes():      # no frames to dead nodes
-                self.driver.send_control(self._serve_ips[s], "free", seq_id)
+                try:
+                    self.driver.send_control(self._serve_ips[s], "free",
+                                             seq_id)
+                except EtherONError:
+                    # the owner died with the free in flight: its pages
+                    # died with it — fail it over and fall through to
+                    # the (idempotent) server-side release
+                    self.mark_unreachable(self._serve_ips[s])
         self._drain_acks()
         return srv.free_sequence(seq_id)
 

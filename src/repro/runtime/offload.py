@@ -31,7 +31,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.container import from_jsonable
-from repro.core.ether_on import MTU
+from repro.core.ether_on import MTU, EtherONError
 from repro.core.extent_store import AnalyticsJob, project
 from repro.core.isp_perf import IspCosts
 from repro.kernels import ops
@@ -146,22 +146,63 @@ class OffloadPlanner:
         batches: Dict[str, List[int]] = {}
         for i, (job, est) in enumerate(zip(jobs, ests)):
             where = force or est.choice
-            if (force is None and where == "device"
-                    and not self._node_admits(est.node_ip)):
-                where = "host-admission"       # serving owns the node now
+            if force is None and where == "device":
                 # an explicit force="device" is a pin, never rerouted
+                if self.pool.nodes[est.node_ip].suspect:
+                    where = "host-suspect"     # straggler: no new jobs
+                elif not self._node_admits(est.node_ip):
+                    where = "host-admission"   # serving owns the node now
             if where == "device":
                 batches.setdefault(est.node_ip, []).append(i)
             else:
-                records[i] = self._run_host(job, est, where)
+                try:
+                    records[i] = self._run_host(job, est, where)
+                except EtherONError:
+                    self.pool.mark_unreachable(est.node_ip)
+                    records[i] = self._retry_elsewhere(job, est)
         for ip, idxs in batches.items():
             payload = [jobs[i].to_dict() for i in idxs]
-            out = from_jsonable(self.pool.driver.submit_jobs(ip, payload))
+            try:
+                out = from_jsonable(self.pool.driver.submit_jobs(
+                    ip, payload))
+            except EtherONError:
+                # the node vanished between placement and submission —
+                # each job retries on a healthy replica or the host
+                self.pool.mark_unreachable(ip)
+                for i in idxs:
+                    records[i] = self._retry_elsewhere(jobs[i], ests[i])
+                continue
             for i, block in zip(idxs, out):
                 records[i] = {"job": jobs[i], "where": "device",
                               "est": ests[i], "block": block,
                               "result": project(block, jobs[i])}
         return records
+
+    def _retry_elsewhere(self, job: AnalyticsJob,
+                         est: OffloadEstimate) -> dict:
+        """Degradation ladder for a job whose node became unreachable:
+        resubmit on the best surviving replica; if its RESULTS never
+        arrive either, fetch the extent and fold on the host
+        (bit-identical to the in-storage reduce); only when every
+        replica's node is gone does the job fail."""
+        while True:
+            ip = self.pool.locate_extent(job.extent)   # prefers healthy
+            if ip is None:
+                raise EtherONError(
+                    f"extent {job.extent!r} unreachable: every replica's "
+                    f"node is dead")
+            est2 = dataclasses.replace(est, node_ip=ip)
+            try:
+                out = from_jsonable(self.pool.driver.submit_jobs(
+                    ip, [job.to_dict()]))
+                return {"job": job, "where": "device-retry", "est": est2,
+                        "block": out[0], "result": project(out[0], job)}
+            except EtherONError:
+                pass
+            try:
+                return self._run_host(job, est2, "host-fallback")
+            except EtherONError:
+                self.pool.mark_unreachable(ip)
 
     def _run_host(self, job: AnalyticsJob, est: OffloadEstimate,
                   where: str) -> dict:

@@ -228,7 +228,13 @@ class PoolServer(PagedServer):
         tier are gone.  Every sequence with pages homed there is dropped
         (its ids are returned so the router can re-prefill them on the
         survivors) and the shard is taken out of allocation."""
-        victims = sorted(self.table.sequences_on_shard(node))
+        victims = set(self.table.sequences_on_shard(node))
+        # an admission opened here whose first chunk hasn't allocated
+        # pages yet is homed here too (placement is recorded at
+        # begin_request, pages only at the first prefill chunk) — it
+        # must requeue with the rest, not prefill onto a dead shard
+        victims |= {s for s, n in self._placement.items() if n == node}
+        victims = sorted(victims)
         self._dead.add(node)
         for s in victims:
             self.free_sequence(s)
@@ -299,15 +305,17 @@ class PoolServer(PagedServer):
 
     def decode_horizon_step(self, params, state, page_table, lengths,
                             tokens, budget, eos_id, key=None,
-                            temperature=None, top_p=None, *,
-                            horizon: int):
+                            temperature=None, top_p=None, streams=None,
+                            *, horizon: int):
         if key is None:
             # shard_map specs are positional: materialize the sampling
-            # triple (greedy ignores the values inside the traced
+            # quad (greedy ignores the values inside the traced
             # switch, so this costs nothing and keeps one spec set)
             key = jax.random.PRNGKey(0)
             temperature = jnp.float32(0.0)
             top_p = jnp.float32(1.0)
+        if streams is None:
+            streams = jnp.zeros(lengths.shape, jnp.int32)
         fn = self._sharded_horizons.get(horizon)
         if fn is None:
             in_specs, out_specs = shd.pool_horizon_specs(self.quantized)
@@ -316,11 +324,11 @@ class PoolServer(PagedServer):
                 mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
             self._sharded_horizons[horizon] = fn
         return fn(params, state, page_table, lengths, tokens, budget,
-                  eos_id, key, temperature, top_p)
+                  eos_id, key, temperature, top_p, streams)
 
     def _horizon_body(self, params, state, page_table, lengths,
                       tokens, budget, eos_id, key, temperature, top_p,
-                      *, horizon: int):
+                      streams, *, horizon: int):
         """Per-node slice of one fused decode horizon.
 
         The shared ``_fused_horizon_scan`` scaffold with the pool's two
@@ -341,14 +349,18 @@ class PoolServer(PagedServer):
                                                     page_table)
         return self._fused_horizon_scan(
             params, state, page_table, lengths, tokens,
-            budget, eos_id, key, temperature, top_p, horizon=horizon,
+            budget, eos_id, key, temperature, top_p, streams,
+            horizon=horizon,
             append_target=append_target, attention=attention)
 
     # -- speculative draft-verify (sharded) -----------------------------------
 
     def decode_spec_step(self, params, state, page_table, lengths,
                          tokens, budget, eos_id, hist, hist_len, key,
-                         temperature, top_p, *, horizon: int):
+                         temperature, top_p, streams=None, *,
+                         horizon: int):
+        if streams is None:
+            streams = jnp.zeros(lengths.shape, jnp.int32)
         fn = self._sharded_specs.get(horizon)
         if fn is None:
             in_specs, out_specs = shd.pool_spec_specs(self.quantized)
@@ -357,11 +369,12 @@ class PoolServer(PagedServer):
                 mesh=self.mesh, in_specs=in_specs, out_specs=out_specs)
             self._sharded_specs[horizon] = fn
         return fn(params, state, page_table, lengths, tokens, budget,
-                  eos_id, hist, hist_len, key, temperature, top_p)
+                  eos_id, hist, hist_len, key, temperature, top_p,
+                  streams)
 
     def _spec_body(self, params, state, page_table, lengths, tokens,
                    budget, eos_id, hist, hist_len, key, temperature,
-                   top_p, *, horizon: int):
+                   top_p, streams, *, horizon: int):
         """Per-node slice of one speculative draft-verify pass.
 
         The shared ``_spec_verify_scan`` scaffold with the pool hooks:
@@ -378,7 +391,8 @@ class PoolServer(PagedServer):
             state["k"].shape[1], jnp.repeat(page_table, horizon, axis=0))
         return self._spec_verify_scan(
             params, state, page_table, lengths, tokens, budget, eos_id,
-            hist, hist_len, key, temperature, top_p, horizon=horizon,
+            hist, hist_len, key, temperature, top_p, streams,
+            horizon=horizon,
             append_target=append_target, attention=attention)
 
     def _chunk_body(self, params, state, page_row, tokens, start,

@@ -66,23 +66,38 @@ class RetrievalFrontend:
                          if template is not None
                          else np.zeros((0,), np.int32))
         self.planner = planner or OffloadPlanner(pool, router=router)
-        #: where scoring actually ran, by planner verdict
+        #: where scoring actually ran, by planner verdict (degraded
+        #: modes — suspect reroute, unreachable-node retry, host
+        #: fallback — get their own buckets)
         self.stats: Dict[str, int] = {"device": 0, "host": 0,
-                                      "host-admission": 0}
+                                      "host-admission": 0,
+                                      "host-suspect": 0,
+                                      "device-retry": 0,
+                                      "host-fallback": 0}
 
     # -- corpus ---------------------------------------------------------------
 
-    def ingest(self, embeddings, node_ip: Optional[str] = None) -> str:
+    def ingest(self, embeddings, node_ip: Optional[str] = None,
+               replicas: int = 1) -> List[str]:
         """Place the corpus embedding matrix ([n_docs, d] — one row per
-        ``corpus_tokens`` block) as a node-resident extent."""
+        ``corpus_tokens`` block) as a node-resident extent on
+        ``replicas`` distinct alive nodes (``replicas > 1`` is what
+        keeps retrieval bit-identical through a node loss: the planner
+        retries on the surviving copy).  Returns the chosen ips."""
         embeddings = np.asarray(embeddings, np.float32)
         if embeddings.shape[0] != self.corpus_tokens.shape[0]:
             raise ValueError(
                 f"{embeddings.shape[0]} embedding rows but "
                 f"{self.corpus_tokens.shape[0]} corpus token blocks")
-        ip = node_ip or self.pool.alive_nodes()[0]
-        self.pool.nodes[ip].extents.put(self.extent, embeddings)
-        return ip
+        alive = self.pool.alive_nodes()
+        if replicas > len(alive):
+            raise ValueError(f"asked for {replicas} replicas; only "
+                             f"{len(alive)} nodes alive")
+        first = node_ip or alive[0]
+        ips = [first] + [ip for ip in alive if ip != first][:replicas - 1]
+        for ip in ips:
+            self.pool.nodes[ip].extents.put(self.extent, embeddings)
+        return ips
 
     # -- retrieval ------------------------------------------------------------
 

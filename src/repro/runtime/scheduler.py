@@ -47,6 +47,10 @@ class Request:
     t_first: float = 0.0
     t_done: float = 0.0
     output: List[int] = dataclasses.field(default_factory=list)
+    # failover bookkeeping: how many times this request lost its node
+    # and re-entered the queue (bounded — see PoolRouter.max_requeues)
+    requeues: int = 0
+    reject_reason: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -78,7 +82,8 @@ class ContinuousBatcher:
 
     def __init__(self, server, *, max_active: int = 8, horizon: int = 1,
                  prefill_chunk: Optional[int] = None,
-                 speculative: bool = False, sampling=None):
+                 speculative: bool = False, sampling=None,
+                 max_waiting: Optional[int] = None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
         if speculative and horizon < 2:
@@ -98,16 +103,44 @@ class ContinuousBatcher:
         # admission never stalls decode longer than one chunk.  None =
         # legacy blocking admission (the whole suffix in one chunk).
         self.prefill_chunk = prefill_chunk
+        # explicit backpressure: submissions beyond this queue depth are
+        # rejected up front instead of waiting unboundedly (None = no cap)
+        self.max_waiting = max_waiting
         self.waiting: Deque[Request] = deque()
         self.prefilling: Dict[int, Request] = {}
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, req: Request):
+    def _capacity_impossible(self, req: Request) -> Optional[str]:
+        """Reason this request could NEVER be admitted, or None."""
+        if self._pages_needed(req) > self.server.hbm_pages:
+            return (f"needs {self._pages_needed(req)} pages; window has "
+                    f"{self.server.hbm_pages}")
+        return None
+
+    def _reject(self, req: Request, reason: str):
+        req.reject_reason = reason
+        self.rejected.append(req)
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Returns False (and records the request on
+        ``rejected`` with a reason) when it can never fit or the queue
+        is at its backpressure cap — load is shed explicitly at the
+        door, never dropped silently inside the loop."""
         req.t_arrive = time.monotonic()
+        why = self._capacity_impossible(req)
+        if why is not None:
+            self._reject(req, why)
+            return False
+        if self.max_waiting is not None and \
+                len(self.waiting) >= self.max_waiting:
+            self._reject(req, f"queue full ({self.max_waiting} waiting)")
+            return False
         self.waiting.append(req)
+        return True
 
     def _pages_needed(self, req: Request) -> int:
         return self.server.pages_needed(len(req.prompt) + req.max_tokens)
@@ -122,8 +155,9 @@ class ContinuousBatcher:
         """The tokens a (re-)prefill must write: the prompt plus any
         output already generated.  Fresh requests have no output, so
         this is the plain prompt; a failover-requeued request resumes by
-        teacher-forcing its own history (greedy decode makes the
-        continuation identical to the uninterrupted run)."""
+        teacher-forcing its own history (greedy *and* sampled decode
+        continue identically to the uninterrupted run — draws are keyed
+        per (sequence id, absolute position), not per pass)."""
         if not req.output:
             return req.prompt
         return np.concatenate([np.asarray(req.prompt, np.int32),
@@ -146,10 +180,19 @@ class ContinuousBatcher:
         self.server.free_sequence(rid)
 
     def _activate(self, req: Request, last):
-        """Admission finished: seed the first output token."""
+        """Admission finished: seed the first output token — greedy
+        argmax, or (temperature > 0) the identical per-(sequence,
+        position) draw the device sampler would make at this position,
+        so a failover-requeued request continues exactly like the
+        uninterrupted sampled run."""
+        from repro.runtime.serve import sampled_token
+
         if not req.output:          # requeues keep their first-token stamp
             req.t_first = time.monotonic()
-        req.output.append(int(np.argmax(np.asarray(last))))
+        tok = sampled_token(np.asarray(last), self.sampling, req.rid,
+                            len(req.prompt) + len(req.output))
+        req.output.append(tok)
+        self.server.set_pending(req.rid, tok)
         self.active[req.rid] = req
 
     def _admit(self):
@@ -176,6 +219,10 @@ class ContinuousBatcher:
                 del self.prefilling[rid]
                 self._activate(req, last)
 
+    def _failover(self):
+        """Failure-sync hook — PoolRouter overrides to requeue
+        sequences lost to node deaths.  No-op on a single server."""
+
     # -- the serving loop -----------------------------------------------------
 
     def step(self) -> int:
@@ -185,6 +232,11 @@ class ContinuousBatcher:
         self._admit()
         # retire anything already done from its prefill token
         self._retire()
+        # a node can die DURING admission/retirement (its control
+        # frames tick a fault injector's crash schedule): re-sync the
+        # active set before decoding, or the step would feed sequences
+        # the server just dropped
+        self._failover()
         if not self.active:
             return 0
         if self.horizon <= 1:
@@ -258,6 +310,7 @@ class ContinuousBatcher:
 
         return {
             "requests": len(self.finished),
+            "rejected": len(self.rejected),
             "iters": it,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "p99_latency_s": pct(lat, 99),
@@ -290,8 +343,9 @@ class PoolRouter(ContinuousBatcher):
         pool's heartbeats; sequences homed on a node that died are
         dropped by the server and re-enter the queue at the front,
         where the next admission re-prefills prompt+history on a
-        surviving node (greedy decode makes the completed output
-        identical to an uninterrupted run).  A *striped* extent spans
+        surviving node (greedy and sampled decode both complete the
+        output identically to an uninterrupted run — sampling draws are
+        keyed per sequence/position).  A *striped* extent spans
         every node, so a node failure is unrecoverable within the job:
         the router raises immediately instead of requeueing work that
         could never re-admit (restart the pool job — DESIGN.md §Pool
@@ -300,15 +354,41 @@ class PoolRouter(ContinuousBatcher):
 
     def __init__(self, server, pool=None, *, max_active: int = 8,
                  horizon: int = 1, prefill_chunk: Optional[int] = None,
-                 speculative: bool = False, sampling=None):
+                 speculative: bool = False, sampling=None,
+                 max_waiting: Optional[int] = None,
+                 max_requeues: int = 3):
         super().__init__(server, max_active=max_active, horizon=horizon,
                          prefill_chunk=prefill_chunk,
-                         speculative=speculative, sampling=sampling)
+                         speculative=speculative, sampling=sampling,
+                         max_waiting=max_waiting)
         self.pool = pool
         self.requeues = 0
+        # per-request failover cap: when nodes die faster than
+        # re-prefill recovers, the storm sheds the unlucky requests
+        # explicitly instead of cycling them through the queue forever
+        self.max_requeues = max_requeues
         self._target_node: Optional[int] = None
 
+    def _suspect_shards(self) -> set:
+        return self.pool.suspect_shards() if self.pool is not None \
+            else set()
+
     # -- per-node admission ---------------------------------------------------
+
+    def _capacity_impossible(self, req: Request) -> Optional[str]:
+        srv = self.server
+        need = self._pages_needed(req)
+        cap = srv.pages_per_node
+        if srv.policy == "placed":
+            if need > cap:
+                return (f"needs {need} pages; a node's window has {cap}")
+            return None
+        share = max(self._striped_share(need, s, srv.n_nodes)
+                    for s in range(srv.n_nodes))
+        if share > cap:
+            return (f"striped share is {share} pages/node; a node's "
+                    f"window has {cap}")
+        return None
 
     @staticmethod
     def _striped_share(n_pages: int, node: int, n_nodes: int) -> int:
@@ -354,9 +434,13 @@ class PoolRouter(ContinuousBatcher):
             # prefix (zero prefill compute there); else least-loaded
             self._target_node = None
             if fits:
+                # suspect shards are last resort: a warm prefix on a
+                # straggler is slower than a cold prefill elsewhere
+                good = [s for s in fits
+                        if s not in self._suspect_shards()] or fits
                 pn, hit = srv.best_prefix_node(self._prompt_of(req))
-                self._target_node = pn if (hit and pn in fits) else \
-                    min(fits, key=lambda s: (load[s], s))
+                self._target_node = pn if (hit and pn in good) else \
+                    min(good, key=lambda s: (load[s], s))
             return bool(fits)
         self._check_striped_alive()
         return all(load[s] + self._striped_share(need, s, srv.n_nodes) <= cap
@@ -418,6 +502,12 @@ class PoolRouter(ContinuousBatcher):
             if req is None:                     # admission was in flight
                 req = self.prefilling.pop(rid, None)
             if req is not None:
+                req.requeues += 1
+                if req.requeues > self.max_requeues:
+                    # requeue storm: shed this request explicitly
+                    self._reject(req, f"lost its node "
+                                 f"{req.requeues} times")
+                    continue
                 self.requeues += 1
                 self.waiting.appendleft(req)
 

@@ -225,6 +225,30 @@ def sampling_log_probs(logits, temperature, top_p):
     return lp - jax.nn.logsumexp(lp, axis=-1, keepdims=True)
 
 
+def sampled_token(logits, sampling, stream: int, position: int) -> int:
+    """Host-side mirror of the device sampler for ONE token: the token
+    at absolute ``position`` of sequence ``stream``, drawn from
+    ``logits`` [V] under ``sampling`` with the same
+    per-(sequence, position) Gumbel-max key the fused scaffold uses.
+    Greedy configs reduce to plain argmax.
+
+    This is the admission-time selection a scheduler needs: the token
+    after a (re-)prefill is chosen from host-visible logits, and it
+    must equal the draw the device would have made at that position —
+    otherwise a failover-requeued sequence resuming at temperature > 0
+    would diverge from the uninterrupted run."""
+    row = jnp.asarray(logits).reshape(-1)
+    if sampling is None or sampling.greedy:
+        return int(jnp.argmax(row))
+    lp = sampling_log_probs(row, jnp.float32(sampling.temperature),
+                            jnp.float32(sampling.top_p))
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(sampling.seed),
+                           int(stream) & 0x7FFFFFFF), int(position))
+    g = jax.random.gumbel(key, lp.shape, jnp.float32)
+    return int(jnp.argmax(lp + g))
+
+
 # n-gram drafter tuning: a candidate site must match at least
 # SPEC_MIN_MATCH trailing history tokens (a bigram minimum drowns in
 # spurious matches on non-repetitive text — every false draft burns a
@@ -399,6 +423,19 @@ class PagedServer:
         argmax produced by its last prefill/decode step."""
         return dict(self._pending)
 
+    def set_pending(self, seq_id: int, token: int):
+        """Override the pending next token for ``seq_id`` — the token
+        the next decode call will feed first.  Schedulers doing sampled
+        selection host-side (``sampled_token``) use this so the device
+        continues from the token they actually reported; the drafter
+        history entry mirroring the old pending token is rewritten to
+        match (the fed token is what the drafter will see)."""
+        tok = int(token)
+        hist = self._history.get(seq_id)
+        if hist and hist[-1] == self._pending.get(seq_id):
+            hist[-1] = tok
+        self._pending[seq_id] = tok
+
     def free_sequence(self, seq_id: int) -> int:
         """Retire a sequence: all its HBM + host-tier pages are released
         and immediately reusable.  Returns the number of pages freed."""
@@ -545,7 +582,8 @@ class PagedServer:
 
     def _fused_horizon_scan(self, params, state, page_table, lengths,
                             tokens, budget, eos_id, key=None,
-                            temperature=None, top_p=None, *, horizon: int,
+                            temperature=None, top_p=None, streams=None,
+                            *, horizon: int,
                             append_target, attention):
         """The fused-step scaffold shared by the single-node and pool
         horizon bodies: one ``lax.scan`` over ``horizon`` decode steps
@@ -566,11 +604,17 @@ class PagedServer:
         scaffold, token identity by construction).
 
         ``key``/``temperature``/``top_p`` enable on-device sampling:
-        each step folds its index into the key and Gumbel-samples from
-        the temperature/top-p target; ``temperature <= 0`` falls
-        through to the greedy argmax *inside* the traced switch, so
-        toggling sampling never retraces and greedy outputs stay
-        bit-identical to the key-free program.
+        each row's draw folds ``(streams[b], absolute position)`` into
+        the key — ``streams`` is the [B] stable per-sequence id, the
+        position is the emitted token's 1-based index in its sequence —
+        so a sampled token is a pure function of (seed, sequence,
+        position).  That is what makes sampling reproducible across
+        failover re-prefill (same sequence, same positions => same
+        draws, regardless of batch slot, pass boundaries or which node
+        runs the step) and identical between the plain and speculative
+        paths.  ``temperature <= 0`` falls through to the greedy argmax
+        *inside* the traced switch, so toggling sampling never retraces
+        and greedy outputs stay bit-identical to the key-free program.
         """
         cfg = self.cfg
         b = tokens.shape[0]
@@ -608,9 +652,17 @@ class PagedServer:
                 # top-p sort + Gumbel draw at runtime
                 def _sample(lg):
                     lp = sampling_log_probs(lg, temperature, top_p)
-                    g = jax.random.gumbel(jax.random.fold_in(key, i),
-                                          lp.shape, jnp.float32)
-                    return jnp.argmax(lp + g, axis=-1).astype(jnp.int32)
+
+                    def draw(s, p, row_lp):
+                        k = jax.random.fold_in(
+                            jax.random.fold_in(key, s), p)
+                        g = jax.random.gumbel(k, row_lp.shape,
+                                              jnp.float32)
+                        return jnp.argmax(row_lp + g).astype(jnp.int32)
+                    # new_lengths is the emitted token's 1-based
+                    # position — the coordinate the spec verify path
+                    # folds too
+                    return jax.vmap(draw)(streams, new_lengths, lp)
                 nxt = lax.cond(temperature > 0, _sample,
                                lambda lg: jnp.argmax(
                                    lg, axis=-1).astype(jnp.int32),
@@ -631,8 +683,8 @@ class PagedServer:
 
     def decode_horizon_step(self, params, state, page_table, lengths,
                             tokens, budget, eos_id, key=None,
-                            temperature=None, top_p=None, *,
-                            horizon: int):
+                            temperature=None, top_p=None, streams=None,
+                            *, horizon: int):
         """``horizon`` fused decode steps in ONE device program.
 
         A single ``lax.scan`` over the horizon: each step appends the
@@ -658,7 +710,8 @@ class PagedServer:
         n_phys = state["k"].shape[1]
         return self._fused_horizon_scan(
             params, state, page_table, lengths, tokens,
-            budget, eos_id, key, temperature, top_p, horizon=horizon,
+            budget, eos_id, key, temperature, top_p, streams,
+            horizon=horizon,
             # out-of-bounds sentinel => scatter drops finished/padding
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
@@ -669,7 +722,8 @@ class PagedServer:
 
     def _spec_verify_scan(self, params, state, page_table, lengths,
                           tokens, budget, eos_id, hist, hist_len, key,
-                          temperature, top_p, *, horizon: int,
+                          temperature, top_p, streams=None, *,
+                          horizon: int,
                           append_target, attention):
         """The draft-verify scaffold shared by the single-node and pool
         speculative bodies (the hooks mirror
@@ -685,13 +739,18 @@ class PagedServer:
         model pass, which is the entire speedup); position ``j``'s
         logits then judge candidate ``d_{j+1}``.  Acceptance on device:
         greedy mode accepts while ``argmax == candidate``; sampling
-        mode does point-mass rejection sampling (accept ``d`` w.p.
-        ``p(d)``, else Gumbel-sample the ``d``-masked residual — the
-        emitted stream is distributed exactly as non-speculative
-        sampling).  The longest ok-prefix plus the bonus token from the
-        first mismatch is emitted; everything downstream of the first
-        break is masked to -1 so ``commit_horizon`` rolls its pages
-        back.
+        mode uses *Gumbel coupling* — pre-draw the target token from
+        the same per-(stream, position) key the plain fused horizon
+        folds, accept a candidate iff it equals that target, and emit
+        the target either way.  For a point-mass draft this IS
+        rejection sampling (a candidate ``d`` is accepted with
+        probability exactly ``p(d)``, and the emitted marginal is the
+        sampling target), with the stronger property that the sampled
+        stream is token-identical to the non-speculative path — the
+        invariant failover requeue and the chaos suite check.  The
+        longest ok-prefix plus the bonus token from the first mismatch
+        is emitted; everything downstream of the first break is masked
+        to -1 so ``commit_horizon`` rolls its pages back.
 
         Returns (packed [horizon+1, B] int32 — emitted rows then the
         per-sequence drafted-count row, ONE device->host transfer —
@@ -735,7 +794,6 @@ class PagedServer:
         h = L.apply_norm(params["final_norm"], h, cfg.norm)
         logits = L.unembed(params["embed"], params.get("lm_head"), h,
                            cfg.tie_embeddings).astype(jnp.float32)
-        v_sz = logits.shape[-1]
 
         greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # candidate that position j's logits verify: d_{j+1}; the last
@@ -749,37 +807,24 @@ class PagedServer:
             return greedy_tok == d_next, greedy_tok
 
         def _sample_sel(lg):
-            # three independent streams per step position, derived on
-            # device from the pass key — every pool node draws the same
-            pos_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
-                jnp.arange(hzn, dtype=jnp.int32))
-            sub = jax.vmap(lambda k: jax.random.split(k, 3))(pos_keys)
-            u = jax.vmap(
-                lambda k: jax.random.uniform(k, (b,)))(sub[:, 0]).T
-            g_res = jnp.swapaxes(jax.vmap(
-                lambda k: jax.random.gumbel(k, (b, v_sz)))(sub[:, 1]),
-                0, 1)
-            g_full = jnp.swapaxes(jax.vmap(
-                lambda k: jax.random.gumbel(k, (b, v_sz)))(sub[:, 2]),
-                0, 1)
+            # Gumbel coupling: one pre-drawn target per (stream,
+            # absolute position) — position j's emission lands at
+            # 1-based position pos[:, j] + 1, the coordinate the plain
+            # fused horizon folds — every pool node draws the same
             lp = sampling_log_probs(lg, temperature, top_p)
-            p_d = jnp.take_along_axis(
-                jnp.exp(lp), jnp.clip(d_next, 0, v_sz - 1)[..., None],
-                axis=-1)[..., 0]                               # [B, H]
-            acc_sample = u < p_d
-            vi = jnp.arange(v_sz, dtype=jnp.int32)
-            resid_lp = jnp.where(vi[None, None, :] == d_next[..., None],
-                                 NEG_INF, lp)
-            resid_tok = jnp.argmax(resid_lp + g_res,
-                                   axis=-1).astype(jnp.int32)
-            full_tok = jnp.argmax(lp + g_full, axis=-1).astype(jnp.int32)
-            samp_out = jnp.where(acc_sample & has_draft, d_next,
-                                 jnp.where(has_draft, resid_tok,
-                                           full_tok))
-            return acc_sample, samp_out
+
+            def draw_row(s, row_pos, row_lp):
+                def one(p, l):
+                    k = jax.random.fold_in(jax.random.fold_in(key, s),
+                                           p)
+                    g = jax.random.gumbel(k, l.shape, jnp.float32)
+                    return jnp.argmax(l + g).astype(jnp.int32)
+                return jax.vmap(one)(row_pos + 1, row_lp)
+            target = jax.vmap(draw_row)(streams, pos, lp)      # [B, H]
+            return target == d_next, target
 
         # lax.cond (not where): a greedy pass must not pay the top-p
-        # sort + three Gumbel/uniform draws at runtime
+        # sort + H Gumbel draws at runtime
         accept_raw, out_tok = lax.cond(temperature > 0, _sample_sel,
                                        _greedy_sel, logits)
         accept = accept_raw & has_draft                        # [B, H]
@@ -797,7 +842,8 @@ class PagedServer:
 
     def decode_spec_step(self, params, state, page_table, lengths,
                          tokens, budget, eos_id, hist, hist_len, key,
-                         temperature, top_p, *, horizon: int):
+                         temperature, top_p, streams=None, *,
+                         horizon: int):
         """One jitted speculative draft-verify pass on one device.
 
         Arguments as :meth:`decode_horizon_step` plus ``hist``
@@ -811,7 +857,8 @@ class PagedServer:
         rows_table = jnp.repeat(page_table, horizon, axis=0)
         return self._spec_verify_scan(
             params, state, page_table, lengths, tokens, budget, eos_id,
-            hist, hist_len, key, temperature, top_p, horizon=horizon,
+            hist, hist_len, key, temperature, top_p, streams,
+            horizon=horizon,
             append_target=lambda phys, valid:
                 jnp.where(valid, phys, n_phys),
             attention=lambda q, st, row_lengths:
@@ -1129,6 +1176,16 @@ class PagedServer:
         buds[:len(seqs)] = [budgets[s] for s in seqs]
         return jnp.asarray(table), jnp.asarray(lens), jnp.asarray(buds)
 
+    @staticmethod
+    def _stream_ids(seqs, b2: int):
+        """[b2] int32 per-row sampling-stream ids: the sequence id,
+        stable across requeue/re-prefill and independent of batch slot
+        — the coordinate that makes sampled draws failover-
+        reproducible (padding rows never sample; any id works)."""
+        streams = np.zeros((b2,), np.int32)
+        streams[:len(seqs)] = [int(s) & 0x7FFFFFFF for s in seqs]
+        return jnp.asarray(streams)
+
     def horizon_batch(self, tokens: Dict[int, int],
                       budgets: Dict[int, int], horizon: int,
                       eos_id: Optional[int] = None,
@@ -1151,8 +1208,7 @@ class PagedServer:
         sampling = sampling or GREEDY
         seqs = list(tokens)
         if _key is None:
-            _key = jax.random.fold_in(
-                jax.random.PRNGKey(sampling.seed), 0)
+            _key = jax.random.PRNGKey(sampling.seed)
         h_run = _pow2_floor(min(horizon, max(budgets[s] for s in seqs)))
         page_table, lengths, buds = self._plan_horizon(
             seqs, {s: min(budgets[s], h_run) for s in seqs})
@@ -1165,7 +1221,9 @@ class PagedServer:
                 page_table, lengths, jnp.asarray(toks), buds,
                 jnp.asarray(eos), _key,
                 jnp.float32(sampling.temperature),
-                jnp.float32(sampling.top_p), horizon=h_run)
+                jnp.float32(sampling.top_p),
+                self._stream_ids(seqs, lengths.shape[0]),
+                horizon=h_run)
             # THE one transfer of the horizon: [h_run, B] int32 tokens
             emitted = np.asarray(emitted)
             self.store.adopt(state)
@@ -1240,8 +1298,7 @@ class PagedServer:
         sampling = sampling or GREEDY
         seqs = list(tokens)
         if _key is None:
-            _key = jax.random.fold_in(
-                jax.random.PRNGKey(sampling.seed), 0)
+            _key = jax.random.PRNGKey(sampling.seed)
         h_run = _pow2_floor(min(horizon, max(budgets[s] for s in seqs)))
         gated = self.spec_alpha_ema < self.spec_alpha_floor
         if gated:
@@ -1277,7 +1334,8 @@ class PagedServer:
                 lengths, jnp.asarray(toks), buds, jnp.asarray(eos),
                 jnp.asarray(hist), jnp.asarray(hlen), _key,
                 jnp.float32(sampling.temperature),
-                jnp.float32(sampling.top_p), horizon=h_run)
+                jnp.float32(sampling.top_p),
+                self._stream_ids(seqs, b2), horizon=h_run)
             # THE one transfer of the pass: [h_run + 1, B] int32
             # (emitted rows + the drafted-count telemetry row)
             packed = np.asarray(packed)
@@ -1427,21 +1485,20 @@ class PagedServer:
                 live = [s for s in live if remaining[s] > 0]
             self._pending.update(cur)
             return out
-        # one PRNG key per pass, folded from the sampling seed — the
-        # same derivation on every pool node, so sampled tokens are
-        # device-invariant (and reproducible per decode() call)
+        # ONE key from the sampling seed for every pass: draws are
+        # keyed per (sequence id, absolute position) inside the device
+        # program, so the key must NOT vary per pass — a requeued
+        # sequence resuming mid-stream on another node (different pass
+        # index, different batch) still re-derives the same draws
         base_key = jax.random.PRNGKey(sampling.seed)
-        pass_idx = 0
         batch_fn = (self.spec_horizon_batch if speculative
                     else self.horizon_batch)
         while live:
-            pass_key = jax.random.fold_in(base_key, pass_idx)
-            pass_idx += 1
             got = batch_fn(
                 {s: cur[s] for s in live},
                 {s: remaining[s] for s in live},
                 min(horizon, max(remaining[s] for s in live)),
-                eos_id=eos_id, sampling=sampling, _key=pass_key)
+                eos_id=eos_id, sampling=sampling, _key=base_key)
             for s in live:
                 out[s].extend(got[s])
                 remaining[s] -= len(got[s])

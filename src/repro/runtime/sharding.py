@@ -276,30 +276,30 @@ def pool_chunk_specs(quantized: bool = False):
 def pool_horizon_specs(quantized: bool = False):
     """(in_specs, out_specs) for the shard_mapped fused decode horizon
     ``(params, state, page_table, lengths, tokens, budget, eos_id, key,
-    temperature, top_p) -> (emitted, logits, state)``.  Same
+    temperature, top_p, streams) -> (emitted, logits, state)``.  Same
     replication story as :func:`pool_step_specs` — only the page
     windows are split; the control-plane carries (lengths / budgets /
-    tokens / PRNG key / sampling params) are replicated arithmetic, and
-    the emitted token stack / final-step logits are device-invariant
-    because every node selects from the *merged* logits with the same
-    key-derived randomness."""
+    tokens / PRNG key / sampling params / stream ids) are replicated
+    arithmetic, and the emitted token stack / final-step logits are
+    device-invariant because every node selects from the *merged*
+    logits with the same key-derived randomness."""
     store = pool_state_spec(quantized)
-    return ((P(), store, P(), P(), P(), P(), P(), P(), P(), P()),
+    return ((P(), store, P(), P(), P(), P(), P(), P(), P(), P(), P()),
             (P(), P(), store))
 
 
 def pool_spec_specs(quantized: bool = False):
     """(in_specs, out_specs) for the shard_mapped speculative
     draft-verify pass ``(params, state, page_table, lengths, tokens,
-    budget, eos_id, hist, hist_len, key, temperature, top_p) ->
-    (packed, state)``.  The drafter's history table rides replicated
-    like the page table (host->device control), the PRNG key and
-    sampling scalars are replicated so every node derives the identical
-    candidates, acceptance mask and samples from the merged logits, and
-    only the page windows are split."""
+    budget, eos_id, hist, hist_len, key, temperature, top_p, streams)
+    -> (packed, state)``.  The drafter's history table rides replicated
+    like the page table (host->device control), the PRNG key, sampling
+    scalars and stream ids are replicated so every node derives the
+    identical candidates, acceptance mask and samples from the merged
+    logits, and only the page windows are split."""
     store = pool_state_spec(quantized)
     return ((P(), store, P(), P(), P(), P(), P(), P(), P(), P(), P(),
-             P()),
+             P(), P()),
             (P(), store))
 
 

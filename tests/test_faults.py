@@ -1,0 +1,629 @@
+"""Chaos suite: deterministic fault injection at the Ether-oN boundary.
+
+Fast lane: FaultPlan round trip and validation, the delivery state
+machine in isolation (NACK/dup/reorder/gap), byte-identical fabric
+transfer under the canned lossy/storm plans, the zero-fault cost pin
+(reliable delivery must cost exactly what unconditional delivery cost),
+graceful degradation (scheduled crashes, straggler -> suspect steering,
+the analytics retry ladder), explicit load shedding, and the sampled
+failover-reproducibility contract on one device.
+
+Slow lane (subprocess with forced host devices): an end-to-end chaos
+run — lossy fabric + a mid-run node kill + a straggler, at
+temperature > 0 — token-identical to the fault-free reference, a
+requeue-storm shedding run, and a randomized-seed fabric sweep.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import AnalyticsJob, StoragePool, analytics_blob
+from repro.core.ether_on import (Costs, DockerSSDEndpoint, EtherONDriver,
+                                 EtherONError, EthernetFrame, NVMeCommand,
+                                 OPC_TRANSMIT)
+from repro.core.faults import (PRESET_PLANS, FaultInjector, FaultPlan,
+                               load_plan)
+from repro.runtime.offload import OffloadPlanner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HOST = "10.0.0.1"
+EXT_CFG = {"n_pages": 16, "page_rows": 8, "n_cols": 16}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: declarative, validated, JSON-round-trippable
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_roundtrip_and_presets(tmp_path):
+    plan = FaultPlan(seed=3, p_drop=0.1, p_corrupt=0.02, p_dup=0.05,
+                     p_delay=0.04, delay_ops=2,
+                     crashes={"10.0.1.2": 5}, stragglers={"10.0.1.3": 4.0})
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    assert plan.lossy and not FaultPlan().lossy
+    # --fault-plan accepts a preset name, inline JSON, or a file path
+    assert load_plan("lossy") == PRESET_PLANS["lossy"]
+    assert load_plan(plan.to_json()) == plan
+    path = tmp_path / "plan.json"
+    path.write_text(plan.to_json())
+    assert load_plan(str(path)) == plan
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="p_drop"):
+        FaultPlan(p_drop=1.5)
+    with pytest.raises(ValueError, match="delay_ops"):
+        FaultPlan(delay_ops=0)
+
+
+def test_injector_replay_is_deterministic():
+    """Same plan + same traffic => the exact same fault decisions."""
+    plan = FaultPlan(seed=9, p_drop=0.2, p_corrupt=0.1, p_dup=0.1,
+                     p_delay=0.1)
+
+    def run():
+        inj = FaultInjector(plan)
+        seen = []
+        for i in range(40):
+            f = EthernetFrame(HOST, "10.0.1.2", b"m%d" % i).seal()
+            f.seq = i
+            seen += [(g.seq, g.verify()) for g in
+                     inj.transit(f, "down", "10.0.1.2")]
+        return seen, inj.stats.as_dict()
+
+    assert run() == run()
+    delivered, stats = run()
+    assert stats["frames_seen"] == 40
+    assert stats["dropped"] > 0 and stats["corrupted"] > 0
+    # corrupted copies fail CRC; the sender's original is never damaged
+    assert any(not ok for _, ok in delivered)
+
+
+# ---------------------------------------------------------------------------
+# delivery state machine in isolation
+# ---------------------------------------------------------------------------
+
+
+def _cmd(frame, cid=1):
+    return NVMeCommand(OPC_TRANSMIT, cid, sq_id=0, prp=[0], n_pages=1,
+                       frame=frame)
+
+
+def test_receive_nack_dup_and_gap():
+    """Device-side 0xE0 receive: CRC mismatch NACKs without side
+    effects, a duplicate acks without re-running the handler, and a seq
+    gap (stop-and-wait sender gave up) accepts and advances."""
+    dev = DockerSSDEndpoint("10.0.1.2")
+    got = []
+    dev.set_handler(lambda fr: got.append(fr.payload))
+    good = EthernetFrame(HOST, dev.ip, b"hello").seal()
+    good.seq = 0
+    bad = dataclasses.replace(good, payload=b"hellx")
+    bad.checksum = good.checksum            # payload no longer matches
+    assert dev._receive_from_host(_cmd(bad)) == "nack"
+    assert got == [] and dev.rx_frames == 0
+    assert dev._receive_from_host(_cmd(good)) == "ack"
+    assert dev._receive_from_host(_cmd(good)) == "dup"
+    assert got == [b"hello"]                # handler ran exactly once
+    late = EthernetFrame(HOST, dev.ip, b"later").seal()
+    late.seq = 5                            # seqs 1-4 were given up on
+    assert dev._receive_from_host(_cmd(late)) == "ack"
+    assert dev._rx_expected == 6
+
+
+def test_upcall_reorder_stash_and_dedup():
+    """Host-side 0xE1 receive: out-of-order frames stash until the gap
+    fills, duplicates and corruption are counted, and the inbox always
+    yields the original byte order."""
+    drv = EtherONDriver(HOST)
+    drv.attach(DockerSSDEndpoint("10.0.1.2"))
+
+    def fr(seq, payload):
+        f = EthernetFrame("10.0.1.2", HOST, payload).seal()
+        f.seq = seq
+        return f
+
+    assert drv._upcall_rx("10.0.1.2", fr(1, b"B")) == "ack"   # early: stash
+    assert drv.poll() is None
+    bad = fr(0, b"A")
+    bad.payload = b"Z"                       # checksum now stale
+    assert drv._upcall_rx("10.0.1.2", bad) == "nack"
+    assert drv._upcall_rx("10.0.1.2", fr(0, b"A")) == "ack"   # flushes stash
+    assert drv._upcall_rx("10.0.1.2", fr(0, b"A")) == "dup"
+    assert [drv.poll().payload, drv.poll().payload] == [b"A", b"B"]
+    assert drv.stats.nacks == 1 and drv.stats.dup_frames == 1
+
+
+def test_dead_node_transmit_raises_after_bounded_retries():
+    drv = EtherONDriver(HOST, max_retries=2)
+    dev = DockerSSDEndpoint("10.0.1.2")
+    drv.attach(dev)
+    dev.alive = False
+    with pytest.raises(EtherONError, match="failed after 3 attempts"):
+        drv.transmit(EthernetFrame(HOST, dev.ip, b"ping"))
+    assert drv.stats.retransmits == 3
+    # backoff doubled per attempt: 25 + 50 + 100
+    assert drv.stats.backoff_us == pytest.approx(
+        Costs().retransmit_timeout_us * 7)
+
+
+# ---------------------------------------------------------------------------
+# fabric invariants under fault plans
+# ---------------------------------------------------------------------------
+
+
+def _fabric(plan=None):
+    drv = EtherONDriver(HOST)
+    dev = DockerSSDEndpoint("10.0.1.2")
+    rec = []
+    dev.set_handler(lambda fr: rec.append(fr.payload))
+    drv.attach(dev)
+    inj = None
+    if plan is not None:
+        inj = FaultInjector(plan)
+        drv.attach_faults(inj)
+    return drv, dev, rec, inj
+
+
+def _exercise(drv, dev, n_down=12, up_bytes=5000):
+    """A bidirectional workload: n_down host->SSD frames, then one
+    multi-MTU SSD->host burst.  Returns (sent, reassembled)."""
+    sent = [b"msg-%03d" % i for i in range(n_down)]
+    for p in sent:
+        drv.transmit(EthernetFrame(HOST, dev.ip, p))
+    blob = np.random.default_rng(0).integers(
+        0, 256, up_bytes, dtype=np.uint8).tobytes()
+    dev.send_to_host(blob, HOST)
+    chunks = []
+    while (f := drv.poll()) is not None:
+        chunks.append(f.payload)
+    return sent, blob, b"".join(chunks)
+
+
+@pytest.mark.parametrize("preset", ["lossy", "storm"])
+def test_fabric_byte_identity_under_preset_plans(preset):
+    """The tentpole invariant at the fabric layer: under drop + corrupt
+    + dup + reorder, both directions reassemble byte-identically, every
+    recovery action is visible in the stats, and the whole run replays
+    deterministically."""
+
+    def run():
+        drv, dev, rec, inj = _fabric(PRESET_PLANS[preset])
+        sent, blob, up = _exercise(drv, dev)
+        assert rec == sent, "host->SSD payloads reordered or damaged"
+        assert up == blob, "SSD->host burst did not reassemble"
+        return vars(drv.stats), inj.stats.as_dict()
+
+    stats, inj = run()
+    assert (stats, inj) == run()            # replayable bit for bit
+    assert stats["retransmits"] > 0 and stats["backoff_us"] > 0
+    # every corruption the injector made was caught by CRC and NACKed
+    assert inj["corrupted"] > 0 and stats["nacks"] == inj["corrupted"]
+    # every injected duplicate (plus any retransmit crossing a stashed
+    # original) was deduped at the receiver
+    assert stats["dup_frames"] >= inj["duplicated"] > 0
+
+
+def test_zero_fault_plan_costs_byte_identical():
+    """With an attached injector whose probabilities are all zero, the
+    reliable path must cost *exactly* what the no-injector fabric
+    costs — and every reliability counter must be exactly zero."""
+    a = _fabric(None)
+    b = _fabric(FaultPlan())
+    for drv, dev, rec, _ in (a, b):
+        sent, blob, up = _exercise(drv, dev)
+        assert rec == sent and up == blob
+    sa, sb = vars(a[0].stats), vars(b[0].stats)
+    assert sa == sb
+    for k in ("retransmits", "nacks", "dup_frames", "backoff_us"):
+        assert sb[k] == 0, (k, sb[k])
+
+
+def test_straggler_latency_is_charged_to_the_fabric_clock():
+    fast, _, _, _ = _fabric(FaultPlan())
+    slow, _, _, inj = _fabric(FaultPlan(stragglers={"10.0.1.2": 4.0}))
+    for drv, dev in ((fast, fast._devices["10.0.1.2"]),
+                     (slow, slow._devices["10.0.1.2"])):
+        _exercise(drv, dev, n_down=4, up_bytes=100)
+    assert inj.latency_mult("10.0.1.2") == 4.0
+    assert slow.stats.time_us > fast.stats.time_us * 2
+
+
+# ---------------------------------------------------------------------------
+# pool degradation: crashes, suspects, the analytics retry ladder
+# ---------------------------------------------------------------------------
+
+
+def _ping(pool, ip, n=1):
+    for _ in range(n):
+        pool.driver.send_control(ip, "ping", 0)
+    pool._drain_acks()
+
+
+def test_scheduled_crash_fires_pool_failover():
+    pool = StoragePool(2)
+    ips = pool.alive_nodes()
+    inj = pool.attach_faults(FaultPlan(crashes={ips[1]: 3}))
+    _ping(pool, ips[0], n=3)                # op clock past the tick
+    assert inj.node_crashed(ips[1])
+    assert ips[1] not in pool.alive_nodes()
+    assert ("fault-crash", ips[1]) in pool.events
+    # the dead node's endpoint is dead too: delivery gives up cleanly
+    with pytest.raises(EtherONError, match="node down"):
+        pool.driver.send_control(ips[1], "ping", 0)
+
+
+def test_straggler_becomes_suspect_and_clears():
+    pool = StoragePool(3, extent_cfg=EXT_CFG)
+    ips = pool.alive_nodes()
+    pool.attach_faults(FaultPlan(stragglers={ips[0]: 8.0}))
+    data = np.random.default_rng(1).normal(size=(8, 16)).astype(np.float32)
+    for ip in (ips[0], ips[1]):
+        pool.nodes[ip].extents.put("e", data)
+    _ping(pool, ips[0], n=6)                # EMA converges toward 8x
+    pool.check_heartbeats()
+    assert pool.suspect_nodes() == [ips[0]]
+    assert ("suspect", ips[0]) in pool.events
+    # degraded, not dead: extents stay but new work steers away
+    assert pool.locate_extent("e") == ips[1]
+    assert set(pool.locate_replicas("e")) == {ips[0], ips[1]}
+    pool.nodes[ips[0]].latency_ema_ms = 1.0
+    pool.check_heartbeats()
+    assert pool.suspect_nodes() == []
+    assert ("suspect-cleared", ips[0]) in pool.events
+    assert pool.locate_extent("e") == ips[0]
+
+
+def _analytics_pool(n=3):
+    pool = StoragePool(n, extent_cfg=EXT_CFG)
+    pool.broadcast_pull("isp-analytics", analytics_blob())
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(40, 16)).astype(np.float32)
+    ips = pool.alive_nodes()
+    for ip in ips[:2]:                      # replicated on two nodes
+        pool.nodes[ip].extents.put("e", data)
+    job = AnalyticsJob(extent="e", reduce="topk",
+                       query=[float(x) for x in rng.normal(size=16)], k=5)
+    return pool, ips, job
+
+
+def test_analytics_device_retry_on_replica_is_bit_identical():
+    """Satellite: the extent's node dies between placement and JOB
+    submission — the job resubmits on the surviving replica and the
+    result is bit-identical to the healthy run."""
+    pool, ips, job = _analytics_pool()
+    ref = OffloadPlanner(pool).execute([job], force="device")[0]
+    assert ref["where"] == "device" and ref["est"].node_ip == ips[0]
+    # the node is placed on ips[0], then its endpoint dies before the
+    # JOB frame lands (alive=True: the planner still routes there)
+    pool.nodes[ips[0]].endpoint.alive = False
+    rec = OffloadPlanner(pool).execute([job], force="device")[0]
+    assert rec["where"] == "device-retry"
+    assert rec["est"].node_ip == ips[1]
+    assert np.array_equal(rec["block"], ref["block"])
+    assert rec["result"] == ref["result"]
+    assert ("unreachable", ips[0]) in pool.events
+    assert pool.driver.stats.retransmits > 0
+
+
+def test_analytics_host_fallback_is_bit_identical():
+    """When no replica answers JOB frames either, the ladder drops to
+    host execution over the tunnel — still bit-identical."""
+    pool, ips, job = _analytics_pool()
+    ref = OffloadPlanner(pool).execute([job], force="device")[0]
+    pool.nodes[ips[0]].endpoint.alive = False
+    real_submit = pool.driver.submit_jobs
+
+    def no_jobs(ip, jobs):
+        raise EtherONError(f"node {ip} lost its analytics container")
+
+    pool.driver.submit_jobs = no_jobs
+    rec = OffloadPlanner(pool).execute([job], force="device")[0]
+    assert rec["where"] == "host-fallback"
+    assert np.array_equal(rec["block"], ref["block"])
+    assert rec["result"] == ref["result"]
+    pool.driver.submit_jobs = real_submit
+
+
+def test_analytics_raises_only_when_every_replica_is_dead():
+    pool, ips, job = _analytics_pool()
+    pool.nodes[ips[0]].fail()               # first replica already gone
+    pool.nodes[ips[1]].endpoint.alive = False   # second dies in flight
+    with pytest.raises(EtherONError, match="every replica"):
+        OffloadPlanner(pool).execute([job], force="device")
+
+
+def test_suspect_node_gets_no_new_analytics():
+    pool, ips, job = _analytics_pool()
+    host_ref = OffloadPlanner(pool).execute([job], force="host")[0]
+    # one suspect replica: placement steers to the healthy one
+    pool.nodes[ips[0]].suspect = True
+    rec = OffloadPlanner(pool).execute([job])[0]
+    assert rec["where"] == "device" and rec["est"].node_ip == ips[1]
+    # every replica suspect: the job runs on the host instead
+    pool.nodes[ips[1]].suspect = True
+    rec = OffloadPlanner(pool).execute([job])[0]
+    assert rec["where"] == "host-suspect"
+    assert rec["result"] == host_ref["result"]
+
+
+def test_reliability_terms_reach_the_analytical_model():
+    from repro.core.analytical import (control_plane_terms,
+                                       data_plane_terms,
+                                       reliability_terms)
+    pool, ips, job = _analytics_pool()
+    pool.attach_faults(PRESET_PLANS["storm"])
+    OffloadPlanner(pool).execute([job], force="device")
+    st = pool.driver.stats
+    terms = reliability_terms(st)
+    assert terms["retransmits"] == st.retransmits
+    assert terms["nacks"] == st.nacks > 0
+    assert 0 < terms["backoff_frac"] < 1
+    assert terms["backoff_us"] == pytest.approx(st.backoff_us)
+    cp = control_plane_terms(st, n_tokens=100)
+    dp = data_plane_terms(st, bytes_scanned=10_000, n_jobs=1)
+    for t in (cp, dp):
+        assert t["retransmits"] == st.retransmits
+        assert t["backoff_us"] == pytest.approx(st.backoff_us)
+
+
+# ---------------------------------------------------------------------------
+# explicit load shedding (scheduler backpressure + rejection)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_server():
+    import dataclasses as dc
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_arch
+    from repro.models.api import get_model
+    from repro.runtime.serve import PagedServer
+
+    cfg = dc.replace(get_arch("granite_3_2b").reduced(),
+                     n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, PagedServer(model, params, page_size=4, hbm_pages=16,
+                            dtype=jnp.float32)
+
+
+def test_scheduler_sheds_load_explicitly():
+    from repro.runtime.scheduler import ContinuousBatcher, Request
+
+    cfg, server = _tiny_server()
+    rng = np.random.default_rng(3)
+    sched = ContinuousBatcher(server, max_active=2, max_waiting=2)
+
+    def req(rid, n_prompt=6, max_tokens=3):
+        return Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, n_prompt, dtype=np.int32),
+            max_tokens=max_tokens)
+
+    # capacity-impossible: more pages than the whole window can hold
+    assert sched.submit(req(0, n_prompt=6, max_tokens=200)) is False
+    assert "pages" in sched.rejected[0].reject_reason
+    # backpressure: the queue cap rejects at the door, never silently
+    assert sched.submit(req(1)) and sched.submit(req(2))
+    assert sched.submit(req(3)) is False
+    assert "queue full" in sched.rejected[1].reject_reason
+    stats = sched.run_to_completion()
+    assert stats["requests"] == 2 and stats["rejected"] == 2
+    by_id = {r.rid: r for r in sched.finished}
+    assert len(by_id[1].output) == 3 and len(by_id[2].output) == 3
+
+
+# ---------------------------------------------------------------------------
+# sampled failover reproducibility (one device)
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_decode_is_pass_schedule_invariant():
+    """Draws are a pure function of (seed, sequence, position): the
+    same request decoded in one call or split across calls — the shape
+    of a failover requeue resuming mid-stream — yields the same
+    tokens."""
+    from repro.runtime.serve import PagedServer, SamplingConfig
+
+    cfg, server = _tiny_server()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+    samp = SamplingConfig(temperature=0.8, top_p=0.9, seed=11)
+    server.add_request(0, prompt)
+    whole = server.decode(8, horizon=4, sampling=samp)[0]
+    _, server2 = _tiny_server()
+    server2.add_request(0, prompt)
+    split = server2.decode(4, horizon=4, sampling=samp)[0]
+    split += server2.decode(4, horizon=4, sampling=samp)[0]
+    assert split == whole
+
+
+def test_speculative_sampled_matches_plain_sampled():
+    """Gumbel-coupled acceptance: speculative decode at temperature > 0
+    emits exactly the tokens plain sampled decode would."""
+    from repro.runtime.serve import SamplingConfig
+
+    cfg, server = _tiny_server()
+    rng = np.random.default_rng(5)
+    # a repetitive prompt gives the drafter real acceptances
+    prompt = np.tile(rng.integers(0, cfg.vocab_size, 3,
+                                  dtype=np.int32), 4)
+    samp = SamplingConfig(temperature=0.7, seed=21)
+    server.add_request(0, prompt)
+    plain = server.decode(10, horizon=4, sampling=samp)[0]
+    _, server2 = _tiny_server()
+    server2.add_request(0, prompt)
+    spec = server2.decode(10, horizon=4, sampling=samp,
+                          speculative=True)[0]
+    assert spec == plain
+
+
+# ---------------------------------------------------------------------------
+# slow lane: end-to-end chaos on a real multi-node pool
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+_CHAOS_SETUP = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_arch
+    from repro.core.faults import FaultPlan
+    from repro.core.storage_pool import StoragePool
+    from repro.models.api import get_model
+    from repro.runtime.pool import PoolServer
+    from repro.runtime.scheduler import PoolRouter, Request
+    from repro.runtime.serve import SamplingConfig
+
+    cfg = dataclasses.replace(get_arch("granite_3_2b").reduced(),
+                              n_layers=2, vocab_size=64)
+    model = get_model(cfg, compute_dtype=jnp.float32, moe_no_drop=True)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for _ in range(5)]
+    gens = [4, 6, 3, 5, 4]
+    samp = SamplingConfig(temperature=0.8, top_p=0.9, seed=11)
+
+    def run(plan_of=None, **router_kw):
+        srv = PoolServer(model, params, n_nodes=4, page_size=4,
+                         hbm_pages_per_node=8, dtype=jnp.float32)
+        pool = StoragePool(4, heartbeat_timeout=0.0)
+        pool.attach_server(srv)
+        if plan_of is not None:
+            pool.attach_faults(plan_of(pool))
+        router = PoolRouter(srv, pool, max_active=5, horizon=4,
+                            sampling=samp, **router_kw)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            router.submit(Request(rid=i, prompt=p, max_tokens=g))
+        stats = router.run_to_completion()
+        return {r.rid: r.output for r in router.finished}, pool, \\
+            router, stats
+
+    ref, ref_pool, _, _ = run()
+"""
+
+
+@pytest.mark.slow
+def test_chaos_run_is_token_identical_to_fault_free():
+    """THE invariant: a lossy fabric, a scheduled mid-run node kill and
+    a straggler — at temperature > 0 — complete with zero unhandled
+    exceptions, token-identical outputs, and every recovery action
+    visible in the counters."""
+    stdout = _run(_CHAOS_SETUP + """
+    def plan_of(pool):
+        ips = pool.serving_ips()
+        return FaultPlan(seed=7, p_drop=0.08, p_corrupt=0.05,
+                         p_dup=0.06, p_delay=0.06, delay_ops=2,
+                         crashes={ips[1]: 12},
+                         stragglers={ips[0]: 8.0})
+
+    out, pool, router, stats = run(plan_of)
+    assert out == ref, (out, ref)
+    victim = pool.serving_ips()[1]
+    assert victim not in pool.alive_nodes()
+    assert any(e == ("fault-crash", victim) for e in pool.events)
+    st = pool.driver.stats
+    assert st.retransmits > 0 and st.nacks > 0
+    assert pool.fault_injector.stats.corrupted > 0
+    # fault-free reference kept its counters at exactly zero
+    rs = ref_pool.driver.stats
+    assert rs.retransmits == rs.nacks == rs.dup_frames == 0
+    assert rs.backoff_us == 0.0
+    print("CHAOS_OK", st.retransmits, st.nacks, st.dup_frames)
+    """)
+    assert "CHAOS_OK" in stdout
+
+
+@pytest.mark.slow
+def test_requeue_storm_sheds_instead_of_spinning():
+    """With the per-request failover budget at zero, a node kill sheds
+    the victims explicitly; the survivors still finish identically."""
+    stdout = _run(_CHAOS_SETUP + """
+    srv = PoolServer(model, params, n_nodes=4, page_size=4,
+                     hbm_pages_per_node=8, dtype=jnp.float32)
+    pool = StoragePool(4, heartbeat_timeout=0.0)
+    pool.attach_server(srv)
+    router = PoolRouter(srv, pool, max_active=5, horizon=4,
+                        sampling=samp, max_requeues=0)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        router.submit(Request(rid=i, prompt=p, max_tokens=g))
+    router.step()
+    rid = next(iter(router.active))         # a still-running request
+    victim = srv.node_of(rid)
+    pool.nodes[pool.serving_ips()[victim]].fail()
+    stats = router.run_to_completion()
+    assert stats["rejected"] >= 1
+    shed = {r.rid for r in router.rejected}
+    assert all("lost its node" in r.reject_reason
+               for r in router.rejected)
+    for r in router.finished:
+        assert r.output == ref[r.rid], (r.rid, r.output)
+    assert shed | {r.rid for r in router.finished} == set(range(5))
+    print("SHED_OK", sorted(shed))
+    """)
+    assert "SHED_OK" in stdout
+
+
+@pytest.mark.slow
+def test_node_death_during_chunked_admission_requeues():
+    """A node can die after an admission *opened* on it (placement
+    recorded at begin_request) but before its first prefill chunk
+    allocated any pages.  fail_node must count that sequence as a
+    victim too — otherwise the router keeps prefilling onto a dead
+    shard — and the requeued request must finish identically."""
+    stdout = _run(_CHAOS_SETUP + """
+    srv = PoolServer(model, params, n_nodes=4, page_size=4,
+                     hbm_pages_per_node=8, dtype=jnp.float32)
+    pool = StoragePool(4, heartbeat_timeout=0.0)
+    pool.attach_server(srv)
+    router = PoolRouter(srv, pool, max_active=5, horizon=4,
+                        sampling=samp, prefill_chunk=4)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        router.submit(Request(rid=i, prompt=p, max_tokens=g))
+    # one _admit opens every admission but chunks only the first: the
+    # rest are placed with zero pages allocated
+    router._admit()
+    rid = [r for r in router.prefilling if srv.table.length(r) == 0][0]
+    victim = srv.node_of(rid)
+    assert victim is not None
+    pool.nodes[pool.serving_ips()[victim]].fail()
+    router.run_to_completion()
+    out = {r.rid: r.output for r in router.finished}
+    assert out == ref, (out, ref)
+    assert router.requeues >= 1
+    print("ADMIT_KILL_OK", rid, victim)
+    """)
+    assert "ADMIT_KILL_OK" in stdout
+
+
+@pytest.mark.slow
+def test_randomized_seed_sweep_keeps_byte_identity():
+    """Chaos sweep: many random seeds, same invariant — the reliable
+    fabric reassembles byte-identically every time."""
+    seeds = np.random.default_rng(0).integers(0, 2**31, 25)
+    for s in seeds:
+        plan = FaultPlan(seed=int(s), p_drop=0.1, p_corrupt=0.08,
+                         p_dup=0.08, p_delay=0.08, delay_ops=2)
+        drv, dev, rec, inj = _fabric(plan)
+        sent, blob, up = _exercise(drv, dev, n_down=8, up_bytes=4000)
+        assert rec == sent, f"seed {s}: down-path divergence"
+        assert up == blob, f"seed {s}: up-path divergence"
+        if inj.stats.corrupted:
+            assert drv.stats.nacks == inj.stats.corrupted
