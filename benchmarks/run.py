@@ -1045,6 +1045,39 @@ def pool_serving(out_path="BENCH_pool.json", quick=False,
           f"{deg['recovery_s']*1e3:.0f} ms | goodput "
           f"{deg['goodput_vs_uninterrupted']:.2f}x of uninterrupted | "
           f"{deg['requeues']} requeued, {deg['rejected']} shed")
+    # -- autoscale cell: open-loop Poisson traffic against the elastic
+    # pool (steady -> burst -> cooldown).  The worker's Autoscaler grows
+    # the serving set on the SLO breach and drains it back on sustained
+    # headroom; a mid-cooldown maintenance drain retires a loaded node
+    # so the warm path (live device-to-device page migration) is
+    # exercised and MIGRATE-accounted.  The worker asserts its own
+    # floors (zero shed requests, scale-up AND drain happened, recovery
+    # recorded, zero MIGRATE frames while static) and exits non-zero on
+    # any miss — the quick lane gates on that.
+    asw = os.path.join(repo, "benchmarks", "autoscale_worker.py")
+    out = subprocess.run(
+        [_sys.executable, asw, "--nodes", "4", "--initial", "2"]
+        + (["--quick"] if quick else []),
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    ascale = json.loads(out.stdout.splitlines()[-1])
+    assert ascale["rejected"] == 0, "autoscale cell shed requests"
+    assert ascale["peak_nodes"] > ascale["initial"] and \
+        ascale["final_nodes"] == ascale["initial"]
+    assert ascale["migrate_frames"] > 0, \
+        "maintenance drain produced no MIGRATE frames"
+    result["autoscale"] = ascale
+    _csv("pool_autoscale", ascale["slo_recovery_s"] * 1e6,
+         f"peak={ascale['peak_nodes']},rejected={ascale['rejected']},"
+         f"migrated={ascale['migrate_frames']}")
+    b = ascale["phases"]["burst"]
+    print(f"  autoscale (Poisson {ascale['initial']}->"
+          f"{ascale['peak_nodes']}->{ascale['final_nodes']} nodes): "
+          f"SLO recovery {ascale['slo_recovery_s']*1e3:.0f} ms | "
+          f"burst TTFT p50 {b['p50_ttft_s']*1e3:.0f} / p99 "
+          f"{b['p99_ttft_s']*1e3:.0f} ms | "
+          f"{ascale['migrate_frames']} pages migrated warm on drain | "
+          f"{ascale['rejected']} shed")
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     print(f"  outputs match the single-node reference on every pool size, "

@@ -220,6 +220,82 @@ def main():
           f"(accepted-length hist {st['accepted_len_hist']}) — outputs "
           f"identical to the plain fused horizon")
 
+    # --- scenario 4: elastic pool — scale up under load, drain back ----
+    # The same PoolServer capacity bucket serves with 2 of 4 nodes;
+    # load arrives, the pool grows to 4 (parked shards re-join — the
+    # compiled mesh programs never retrace), then drains back to 2 with
+    # sequences still decoding: resident pages migrate device-to-device
+    # over MIGRATE frames and outputs stay token-identical to a pool
+    # that ran at 4 nodes the whole time, with zero requests shed.
+    from repro.runtime.serve import SamplingConfig
+    el_prompts = [rng.integers(0, cfg.vocab_size, prompt_len,
+                               dtype=np.int32) for _ in range(6)]
+    el_gens = [10, 12, 9, 11, 10, 12]
+    samp = SamplingConfig(temperature=0.8, top_p=0.9, seed=11)
+
+    def elastic_run(elastic):
+        srv = PoolServer(model, params, n_nodes=N_NODES,
+                         active=(2 if elastic else None), page_size=8,
+                         hbm_pages_per_node=32, dtype=jnp.float32)
+        epool = StoragePool(2 if elastic else N_NODES,
+                            heartbeat_timeout=1e9)
+        epool.attach_server(srv)
+        erouter = PoolRouter(srv, epool, max_active=6, horizon=4,
+                             prefill_chunk=8, sampling=samp)
+        phase_of = {}
+        for i, (p, g) in enumerate(zip(el_prompts[:3], el_gens[:3])):
+            erouter.submit(Request(rid=i, prompt=p, max_tokens=g))
+            phase_of[i] = "2-node"
+        if elastic:
+            erouter.step(); erouter.step()
+            epool.scale_to(4)            # wire + activate parked shards
+        for i, (p, g) in enumerate(zip(el_prompts[3:], el_gens[3:]),
+                                   start=3):
+            erouter.submit(Request(rid=i, prompt=p, max_tokens=g))
+            phase_of[i] = "4-node"
+        if elastic:
+            # decode until the new nodes actually host live sequences,
+            # so the drain-back exercises live page migration
+            guard = 0
+            while guard < 60 and not (
+                    srv.table.sequences_on_shard(2)
+                    and srv.table.sequences_on_shard(3)):
+                erouter.step()
+                guard += 1
+            for node in (3, 2):
+                epool.drain_serving_node(node)
+            for i in list(erouter.active) + list(erouter.prefilling):
+                phase_of[i] = "drain-back"
+        erouter.run_to_completion()
+        return ({r.rid: list(r.output) for r in erouter.finished},
+                erouter, epool, srv, phase_of)
+
+    fix_out, fix_r, _, _, _ = elastic_run(False)
+    el_out, el_r, el_pool, el_srv, phase_of = elastic_run(True)
+    assert el_out == fix_out, \
+        "elastic outputs diverged from the fixed-4-node run"
+    assert not el_r.rejected and not fix_r.rejected, \
+        "elastic scaling shed requests"
+    est = el_pool.driver.stats
+    assert est.migrate_frames > 0, "drain-back migrated no pages"
+    print(f"\nelastic pool: 2 -> 4 -> 2 nodes under load "
+          f"(temperature={samp.temperature}) — outputs identical to a "
+          f"fixed 4-node run, 0 shed, {est.migrate_frames} pages "
+          f"migrated warm ({est.migrate_bytes} bytes over MIGRATE "
+          f"frames), alive={el_srv.alive_nodes()}")
+    for ph in ("2-node", "4-node", "drain-back"):
+        reqs = [r for r in el_r.finished if phase_of.get(r.rid) == ph]
+        if not reqs:
+            continue
+        ttft = [r.t_first - r.t_arrive for r in reqs]
+        tpot = [(r.t_done - r.t_first) / max(len(r.output) - 1, 1)
+                for r in reqs]
+        print(f"  {ph:>10}: {len(reqs)} req | TTFT p50 "
+              f"{np.percentile(ttft, 50)*1e3:.0f} / p99 "
+              f"{np.percentile(ttft, 99)*1e3:.0f} ms | TPOT p50 "
+              f"{np.percentile(tpot, 50)*1e3:.1f} / p99 "
+              f"{np.percentile(tpot, 99)*1e3:.1f} ms")
+
     # what this buys at full scale (paper Fig 12b, our analytical model):
     res = A.evaluate_pool()
     r = A.headline_ratios(res)

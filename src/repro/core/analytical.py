@@ -351,7 +351,29 @@ def control_plane_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
         "us_per_token": ether_stats.time_us / toks,
     }
     terms.update(reliability_terms(ether_stats))
+    terms.update(migration_terms(ether_stats, toks))
     return terms
+
+
+def migration_terms(ether_stats, n_tokens: int) -> Dict[str, float]:
+    """Elastic-drain (warm-path live migration) cost terms.
+
+    One MIGRATE frame per page moved device-to-device off a draining
+    node; ``migrate_bytes`` are the moved page payloads (they ride the
+    mesh, not the host fabric, but the copy cost is priced into the
+    driver's virtual time).  Every term is exactly zero on a static
+    pool — the elastic suite pins that, the same discipline as the
+    reliability counters.  ``getattr`` keeps pre-elastic stats objects
+    (or mocks) pricing as a static pool."""
+    toks = max(int(n_tokens), 1)
+    frames = float(getattr(ether_stats, "migrate_frames", 0))
+    mbytes = float(getattr(ether_stats, "migrate_bytes", 0))
+    return {
+        "migrate_frames": frames,
+        "migrate_frames_per_1k_tokens": 1e3 * frames / toks,
+        "migrate_bytes": mbytes,
+        "migrate_bytes_per_token": mbytes / toks,
+    }
 
 
 def reliability_terms(ether_stats) -> Dict[str, float]:

@@ -116,6 +116,11 @@ class EtherONStats:
         self.nacks = 0               # checksum-mismatch rejections
         self.dup_frames = 0          # receive-side dedup hits
         self.backoff_us = 0.0        # virtual time spent in backoff
+        # elastic drain (warm path) — exactly zero on a static pool
+        # (the elastic suite pins that): one MIGRATE announcement per
+        # page moved device-to-device, plus the moved page bytes
+        self.migrate_frames = 0
+        self.migrate_bytes = 0
         self.time_us = 0.0
 
 
@@ -268,6 +273,26 @@ class EtherONDriver:
         collectives (DESIGN.md §Pool serving)."""
         payload = f"SERVE {verb} {seq_id} {extra}".rstrip().encode()
         self.stats.control_frames += 1
+        self.transmit(EthernetFrame(self.host_ip, dst_ip, payload))
+
+    def send_migrate(self, dst_ip: str, seq_id: int, page_idx: int,
+                     nbytes: int, src_node: int, dst_node: int):
+        """Warm-path page-migration announcement (elastic drain).
+
+        One ``SERVE migrate`` frame per moved page tells the receiving
+        node a page of ``seq_id`` now lives in its window.  The frame
+        rides the reliable tunnel (ack'd, CRC-checked, retried with
+        backoff), so under chaos its retransmits land in the same
+        delivery counters as every other frame.  The page payload
+        itself never crosses the host fabric — it moves
+        device-to-device (``PageStore.copy_page``) — but the moved
+        bytes are accounted here (``migrate_bytes`` + the per-kb copy
+        cost) so ``analytical.migration_terms`` can price a drain."""
+        self.stats.migrate_frames += 1
+        self.stats.migrate_bytes += int(nbytes)
+        self.stats.time_us += self.costs.page_copy_per_kb * (nbytes / 1024.0)
+        payload = (f"SERVE migrate {seq_id} "
+                   f"{page_idx}:{src_node}>{dst_node}:{nbytes}").encode()
         self.transmit(EthernetFrame(self.host_ip, dst_ip, payload))
 
     # -- analytics data plane ---------------------------------------------------

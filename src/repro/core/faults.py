@@ -57,6 +57,9 @@ class FaultPlan:
     * ``stragglers`` — ``{ip: latency_multiplier}``: every frame
       touching ``ip`` pays ``x`` the normal fabric latency (surfaced
       via ``on_latency`` so the pool's EMA/suspect detection sees it).
+      The wildcard key ``"*"`` applies to every node — it lets a plan
+      written before the pool's ips exist (a preset, a CLI flag, the
+      chaos-during-drain suite) slow the whole fabric down.
     """
     seed: int = 0
     p_drop: float = 0.0
@@ -151,13 +154,15 @@ class FaultInjector:
                 self.stats.crashed_nodes.append(cip)
                 if self.on_crash is not None:
                     self.on_crash(cip)
-        mult = self.plan.stragglers.get(ip)
+        mult = self.plan.stragglers.get(ip, self.plan.stragglers.get("*"))
         if mult is not None and self.on_latency is not None:
             self.on_latency(ip, float(mult))
 
     def latency_mult(self, ip: str) -> float:
-        """Straggler multiplier for fabric ops touching ``ip``."""
-        return float(self.plan.stragglers.get(ip, 1.0))
+        """Straggler multiplier for fabric ops touching ``ip`` (the
+        ``"*"`` wildcard slows every node)."""
+        return float(self.plan.stragglers.get(
+            ip, self.plan.stragglers.get("*", 1.0)))
 
     def node_crashed(self, ip: str) -> bool:
         return ip in self._crashed

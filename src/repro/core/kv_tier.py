@@ -100,6 +100,11 @@ class KVTierStats:
     # fused-horizon / speculative partial commit: reserved pages whose
     # appends were rejected (draft mismatch, EOS, budget) and returned
     horizon_pages_rolled_back: int = 0
+    # elastic drain (warm path): pages moved device-to-device off a
+    # draining shard / onto a surviving one.  Exactly zero on a static
+    # pool — the elastic suite pins that.
+    migrated_out: int = 0
+    migrated_in: int = 0
 
 
 class PageStore:
@@ -350,6 +355,11 @@ class PageTableManager:
                        (s + 1) * self.pages_per_shard))
             for s in range(n_shards)]
         self._dead_shards: set = set()
+        # parked shards (elastic drain): the window is intact but the
+        # node has left the serving set — allocation refuses it until a
+        # re-join unparks it.  Distinct from dead: parked data survived
+        # (it was migrated off), dead data is gone.
+        self._parked_shards: set = set()
         # logical -> physical, LRU-ordered.  Several logical keys may map
         # to ONE physical page (prefix sharing); _rc counts the sharers.
         self._resident: "OrderedDict[Tuple[int,int], int]" = OrderedDict()
@@ -462,6 +472,12 @@ class PageTableManager:
                  if self.shard_of(k[0], k[1]) == shard}
         return seqs
 
+    def resident_on_shard(self, seq_id: int, shard: int):
+        """[(page_idx, phys)] of a sequence's resident pages homed on
+        ``shard`` — the warm-drain work list."""
+        return [(k[1], phys) for k, phys in self._resident.items()
+                if k[0] == seq_id and self.shard_of_phys(phys) == shard]
+
     def disable_shard(self, shard: int):
         """Take a shard's window out of service (node failure): nothing
         can be allocated there again, and its prefix index/cache is
@@ -474,6 +490,68 @@ class PageTableManager:
             self._invalidate(phys)
             self._cached.pop(phys, None)
         self._prefix_index[shard] = {}
+
+    # -- elastic membership (drain / join) -----------------------------------
+
+    def park_shard(self, shard: int):
+        """Take a shard out of allocation WITHOUT losing its window (a
+        planned drain, not a failure): ``_take_phys`` refuses it and the
+        prefix walk skips it, but the free list survives so a later
+        ``unpark_shard`` returns the window to service untouched."""
+        self._parked_shards.add(shard)
+
+    def unpark_shard(self, shard: int):
+        """Return a parked shard's window to allocation (node re-join)."""
+        if shard in self._dead_shards:
+            raise RuntimeError(
+                f"page shard {shard} is dead (node failed); a lost window "
+                "cannot rejoin — its contents are gone")
+        self._parked_shards.discard(shard)
+
+    def migrate_page(self, src_phys: int, dst_shard: int) -> int:
+        """Warm-path live migration of ONE physical page onto
+        ``dst_shard`` via a device-side copy (``PageStore.copy_page`` —
+        the bytes never cross the host boundary).  Every logical sharer
+        follows the page: resident mappings remap in place (LRU order
+        preserved), the refcount transfers whole, and a prefix-index
+        entry re-homes under the destination shard so warm admissions
+        keep hitting it.  The source slot returns to its shard's free
+        list.  Returns the new physical id."""
+        src_shard = self.shard_of_phys(src_phys)
+        if src_shard == dst_shard:
+            return src_phys
+        if src_phys not in self._rc and src_phys not in self._cached:
+            raise ValueError(f"page {src_phys} is not resident")
+        new = self._take_phys(dst_shard)
+        self.store.copy_page(src_phys, new)
+        for lkey, phys in self._resident.items():            # LRU preserved
+            if phys == src_phys:
+                self._resident[lkey] = new
+        if src_phys in self._rc:
+            self._rc[new] = self._rc.pop(src_phys)
+        d = self._page_digest.pop(src_phys, None)
+        if d is not None:
+            self._prefix_index[src_shard].pop(d, None)
+            self._prefix_index[dst_shard][d] = new
+            self._page_digest[new] = d
+        if src_phys in self._cached:
+            self._cached.pop(src_phys)
+            self._cached[new] = None
+        self._free[src_shard].append(src_phys)
+        self._bump(src_shard, "migrated_out")
+        self._bump(dst_shard, "migrated_in")
+        return new
+
+    def release_shard_cache(self, shard: int):
+        """Drop the unreferenced prefix-cache pages a draining shard
+        still holds: they are reclaimable by definition (no sequence
+        references them), so a drain spends migration bandwidth only on
+        live pages and lets warm prompts recompute later."""
+        for phys in [p for p in self._cached
+                     if self.shard_of_phys(p) == shard]:
+            self._cached.pop(phys)
+            self._invalidate(phys)
+            self._free[shard].append(phys)
 
     # -- page lifecycle ------------------------------------------------------
 
@@ -541,6 +619,10 @@ class PageTableManager:
         reclaim the LRU unreferenced cache page, then evict."""
         if shard in self._dead_shards:
             raise RuntimeError(f"page shard {shard} is dead (node failed)")
+        if shard in self._parked_shards:
+            raise RuntimeError(
+                f"page shard {shard} is parked (node drained); "
+                "unpark_shard re-joins it")
         if self._free[shard]:
             return self._free[shard].pop()
         for phys in self._cached:                            # LRU order
@@ -609,7 +691,7 @@ class PageTableManager:
         hasher = self._hasher()                    # covers toks[:n]
         while n < cap:
             shard = shard_for(pi)
-            if shard in self._dead_shards:
+            if shard in self._dead_shards or shard in self._parked_shards:
                 break
             got = self._probe_page(self._prefix_index[shard], toks,
                                    n, min(n + self.page,

@@ -366,17 +366,28 @@ class StoragePool:
     # jitted step (DESIGN.md §Pool serving).
 
     def attach_server(self, server, job: str = "llm-serve") -> Placement:
-        """Bind a ``runtime.pool.PoolServer`` to this pool: the serving
-        placement's i-th node backs mesh shard i.  Needs ``server.
-        n_nodes`` free healthy nodes (one distributed job, tp=pool)."""
-        pl = self.place_distributed(job, "llm-serve", tp=server.n_nodes)
+        """Bind a ``runtime.pool.PoolServer`` to this pool: each fabric
+        node in the serving placement backs one mesh shard.  Needs one
+        free healthy node per *active* shard (an elastic server's
+        parked shards may start unbacked — ``scale_to`` /
+        ``grow_serving`` wire nodes to them later).  Spare free nodes
+        back parked shards eagerly, so a later join is pure
+        activation."""
+        active = server.alive_nodes()
+        free = [ip for ip in self.alive_nodes()
+                if ip not in self._occupied()]
+        k = max(len(active), min(server.n_nodes, len(free)))
+        pl = self.place_distributed(job, "llm-serve", tp=k)
         self._server = server
         self._serve_job = job
         # stable shard-indexed ip map: container rescheduling may rewire
         # the *placement* after a failure, but mesh shard i keeps its
-        # identity (a lost window is not revived by a restarted container
-        # — elastic re-shard is a later PR)
-        self._serve_ips = list(pl.node_ips)
+        # identity (a lost window is not revived by a restarted
+        # container).  Active shards are backed first; None marks a
+        # parked shard still waiting for a fabric node.
+        self._serve_ips = [None] * server.n_nodes
+        for ip, s in zip(pl.node_ips, list(active) + server.parked_nodes()):
+            self._serve_ips[s] = ip
         return pl
 
     def serving_ips(self) -> List[str]:
@@ -532,7 +543,119 @@ class StoragePool:
         return node
 
     def scale_to(self, n: int, spec: Optional[NodeSpec] = None):
+        """Grow the fabric to ``n`` nodes.  With a serving mesh
+        attached, every new node must be wired into the shard map (an
+        unbacked parked shard, which it backs and activates) — a node
+        that could never serve pages is rejected up front rather than
+        silently joining the fabric.  Without a server the nodes join
+        the fabric plain (analytics pools).  Shrinking is not this
+        knob: drain serving nodes with ``drain_serving_node``."""
         cur = len(self.nodes)
+        if n < cur:
+            raise ValueError(
+                f"scale_to grows the fabric (have {cur}, asked {n}); "
+                "remove serving nodes with drain_serving_node instead")
+        if self._server is not None:
+            slots = self._serve_ips.count(None)
+            if n - cur > slots:
+                raise RuntimeError(
+                    f"serving mesh has {slots} unbacked shard(s) left "
+                    f"(capacity {self._server.n_nodes}, the pow2 bucket "
+                    f"compiled at startup); scale_to({n}) would attach "
+                    f"{n - cur - slots} node(s) that could never serve "
+                    "pages — provision a PoolServer with a larger "
+                    "n_nodes bucket instead")
         for i in range(cur, n):
-            self._add_node(i, spec)
+            node = self._add_node(i, spec)
+            if self._server is not None:
+                self._wire_serving_node(node.ip)
         self.events.append(("scale", str(n)))
+
+    def _wire_serving_node(self, ip: str) -> int:
+        """Back one unbacked mesh shard with fabric node ``ip`` and
+        activate it (join announced over Ether-oN).  Zero retrace: the
+        shard's device program has existed since startup."""
+        srv = self._server
+        shard = self._serve_ips.index(None)
+        self._serve_ips[shard] = ip
+        pl = self.placements[self._serve_job]
+        pl.node_ips.append(ip)
+        pl.stage_of[ip] = 0
+        self.driver.send_control(ip, "join", shard)
+        self._drain_acks()
+        srv.activate_node(shard)
+        self.events.append(("serve-join", f"{ip}:{shard}"))
+        return shard
+
+    def grow_serving(self, n_active: int):
+        """Raise the serving set to ``n_active`` nodes: re-activate
+        parked shards that kept their backing node, wire free fabric
+        nodes to unbacked shards, and only then grow the fabric itself
+        (``scale_to``).  Each step is one node — the autoscaler's unit
+        of change."""
+        srv = self._server
+        if srv is None:
+            raise RuntimeError("no server attached")
+        if n_active > srv.n_nodes:
+            raise RuntimeError(
+                f"asked for {n_active} serving nodes but the mesh "
+                f"bucket compiled at startup holds {srv.n_nodes}; "
+                "provision a PoolServer with a larger n_nodes bucket")
+        while len(srv.alive_nodes()) < n_active:
+            backed = [s for s in srv.parked_nodes()
+                      if s not in srv._dead
+                      and self._serve_ips[s] is not None
+                      and self.nodes[self._serve_ips[s]].alive]
+            if backed:
+                s = backed[0]
+                self.driver.send_control(self._serve_ips[s], "join", s)
+                self._drain_acks()
+                srv.activate_node(s)
+                self.events.append(
+                    ("serve-join", f"{self._serve_ips[s]}:{s}"))
+                continue
+            free = [ip for ip in self.alive_nodes()
+                    if ip not in self._occupied()]
+            if free:
+                self._wire_serving_node(free[0])
+            else:
+                self.scale_to(len(self.nodes) + 1)
+
+    def drain_serving_node(self, node: int) -> Dict:
+        """Zero-drop drain of serving node ``node`` (planned removal —
+        the autoscaler's scale-down step).  Announces the drain, then
+        walks the server's two-path drain: each warm page move is
+        announced to its destination with a MIGRATE frame (reliable
+        tunnel — chaos retransmits land in the delivery counters), and
+        cold victims enter the requeue list the router already drains
+        (PR-2 failover re-prefill), so nothing is shed."""
+        srv = self._server
+        if srv is None:
+            raise RuntimeError("no server attached")
+        ip = self._serve_ips[node]
+        self.events.append(("serve-drain", f"{ip}:{node}"))
+        try:
+            self.driver.send_control(ip, "drain", node)
+            self._drain_acks()
+        except EtherONError:
+            # unreachable drainee: the planned drain degenerates into
+            # the unplanned-failure path (requeue via failover)
+            self.mark_unreachable(ip)
+        if node in srv._dead:
+            return {"victims": [], "migrated_pages": 0, "cold": [],
+                    "moved": {}}
+        page_bytes = srv.store.page_bytes()
+
+        def on_migrate(seq_id, page_idx, src, dst):
+            dst_ip = self._serve_ips[dst]
+            try:
+                self.driver.send_migrate(dst_ip, seq_id, page_idx,
+                                         page_bytes, src, dst)
+            except EtherONError:
+                self.mark_unreachable(dst_ip)
+                raise
+
+        rep = srv.drain_node(node, on_migrate=on_migrate)
+        self._drain_acks()
+        self._requeue.extend(rep["cold"])
+        return rep

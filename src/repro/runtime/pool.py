@@ -69,6 +69,7 @@ class PoolServer(PagedServer):
     """
 
     def __init__(self, model, params, *, n_nodes: Optional[int] = None,
+                 active: Optional[int] = None,
                  mesh: Optional[Mesh] = None, page_size: int = 16,
                  hbm_pages_per_node: int = 32, dtype=jnp.float32,
                  policy: str = "placed", prefix_cache: bool = True,
@@ -76,20 +77,33 @@ class PoolServer(PagedServer):
                  hbm_bytes_per_node: Optional[int] = None):
         if policy not in ("placed", "striped"):
             raise ValueError(f"unknown placement policy {policy!r}")
+        if active is not None and policy != "placed":
+            raise ValueError(
+                "elastic pools (active=) need the placed policy — a "
+                "striped extent spans every node by construction, so "
+                "membership cannot change under it")
         if mesh is None:
-            devs = jax.devices()
-            n = n_nodes if n_nodes is not None else len(devs)
-            if n > len(devs):
-                raise ValueError(
-                    f"{n} pool nodes need {n} devices but only "
-                    f"{len(devs)} are visible; set XLA_FLAGS="
-                    f"--xla_force_host_platform_device_count={n} before "
-                    f"importing jax to simulate the pool on CPU")
-            mesh = Mesh(np.asarray(devs[:n]), (POOL_AXIS,))
+            n = n_nodes if n_nodes is not None else len(jax.devices())
+            if active is not None:
+                # elastic capacity compiles against the pow2 mesh
+                # bucket: membership changes inside the bucket reuse
+                # every compiled program (zero retrace), growing past
+                # it means provisioning a new server
+                n = shd.mesh_bucket(n)
+            mesh = shd.pool_mesh(n)
         if POOL_AXIS not in mesh.axis_names:
             raise ValueError(f"pool mesh needs a {POOL_AXIS!r} axis")
         self.mesh = mesh
         self.n_nodes = int(mesh.shape[POOL_AXIS])
+        if active is not None and not (1 <= active <= self.n_nodes):
+            raise ValueError(f"active={active} must be in "
+                             f"[1, {self.n_nodes}]")
+        # elastic membership: shards beyond the initially-active count
+        # start parked — their windows exist (the mesh and store are
+        # sized for the full bucket) but placement skips them until a
+        # join activates them
+        self._parked: set = (set(range(active, self.n_nodes))
+                             if active is not None else set())
         if hbm_bytes_per_node is not None:
             # per-node byte budget -> dtype-aware page count (same
             # capacity knob as PagedServer's hbm_bytes, per DockerSSD)
@@ -133,6 +147,8 @@ class PoolServer(PagedServer):
                                  shard_of=self._shard_of)
         for s in self._dead:
             table.disable_shard(s)
+        for s in self._parked:
+            table.park_shard(s)
         return table
 
     def _shard_of(self, seq_id: int, page_idx: int) -> int:
@@ -143,7 +159,16 @@ class PoolServer(PagedServer):
     # -- pool placement surface ----------------------------------------------
 
     def alive_nodes(self) -> List[int]:
-        return [s for s in range(self.n_nodes) if s not in self._dead]
+        """Nodes placement may target: not failed, not parked."""
+        return [s for s in range(self.n_nodes)
+                if s not in self._dead and s not in self._parked]
+
+    def parked_nodes(self) -> List[int]:
+        return sorted(self._parked)
+
+    @property
+    def active_count(self) -> int:
+        return len(self.alive_nodes())
 
     def node_free_pages(self) -> List[int]:
         return [self.table.shard_free_pages(s) for s in range(self.n_nodes)]
@@ -236,10 +261,105 @@ class PoolServer(PagedServer):
         victims |= {s for s, n in self._placement.items() if n == node}
         victims = sorted(victims)
         self._dead.add(node)
+        self._parked.discard(node)
         for s in victims:
             self.free_sequence(s)
         self.table.disable_shard(node)
         return victims
+
+    # -- elastic membership (join / drain) ------------------------------------
+
+    def activate_node(self, node: int):
+        """Join a parked node into the serving set.  Zero retrace: the
+        shard_map programs were compiled once against the full pow2
+        mesh bucket, and an inactive shard simply owned no pages (its
+        attention partials are the LSE identity), so activation is pure
+        host-side bookkeeping — the very next decode step may place
+        pages there."""
+        if node in self._dead:
+            raise RuntimeError(
+                f"node {node} is dead (window lost); a failed node "
+                "cannot rejoin the serving set")
+        if not (0 <= node < self.n_nodes):
+            raise ValueError(f"node {node} outside mesh bucket "
+                             f"[0, {self.n_nodes})")
+        self._parked.discard(node)
+        self.table.unpark_shard(node)
+
+    def _drain_dst(self, need: int, exclude: int) -> Optional[int]:
+        """Pick the warm-migration destination: the least-loaded alive
+        node (excluding the drainee) whose window has room for ``need``
+        pages.  None -> the caller takes the cold path."""
+        cand = [s for s in self.alive_nodes() if s != exclude]
+        if not cand:
+            return None
+        best = max(cand, key=lambda s: (self.table.shard_free_pages(s), -s))
+        return best if self.table.shard_free_pages(best) >= need else None
+
+    def drain_node(self, node: int, on_migrate=None) -> Dict:
+        """Two-path zero-drop drain: remove ``node`` from the serving
+        set while every request keeps decoding.
+
+        Warm path (preferred): each victim sequence's resident pages
+        move device-to-device onto a surviving node's window
+        (``PageTableManager.migrate_page`` — exact bytes, so sampling
+        streams and logits are untouched and outputs stay
+        token-identical).  ``on_migrate(seq_id, page_idx, src, dst)``
+        fires per moved page — the StoragePool frontend announces each
+        one with a MIGRATE frame for cost accounting.
+
+        Cold path (fallback): a victim whose pages don't fit anywhere
+        (or whose destination dies mid-migration) is freed and reported
+        in ``cold`` — the caller requeues it through the PR-2 failover
+        machinery, which teacher-forces the already-emitted tokens, so
+        outputs stay token-identical there too.
+
+        Shared prefix pages migrate once; every sharer's mapping
+        follows the copy.  A sharer later re-placed elsewhere keeps
+        reading the moved page — the merged attention is
+        ownership-agnostic, so only *new* appends land on the sharer's
+        own node.  Runs between scheduler steps (no pages pinned).
+        """
+        if self.policy != "placed":
+            raise RuntimeError("striped pools cannot drain a node — the "
+                               "extent spans every node by construction")
+        if node in self._dead:
+            raise RuntimeError(f"node {node} is dead; drain is for "
+                               "planned removal of a live node")
+        if len(self.alive_nodes()) <= 1:
+            raise RuntimeError("cannot drain the last active node")
+        # park first so concurrent placement and destination picking
+        # exclude the drainee
+        self._parked.add(node)
+        self.table.park_shard(node)
+        victims = set(self.table.sequences_on_shard(node))
+        victims |= {s for s, n in self._placement.items() if n == node}
+        victims = sorted(victims)
+        migrated, cold, moved = 0, [], {}
+        for seq in victims:
+            try:
+                res = self.table.resident_on_shard(seq, node)
+                dst = self._drain_dst(len(res), node)
+                if dst is None:
+                    self.free_sequence(seq)
+                    cold.append(seq)
+                    continue
+                for pi, phys in res:
+                    self.table.migrate_page(phys, dst)
+                    migrated += 1
+                    if on_migrate is not None:
+                        on_migrate(seq, pi, node, dst)
+                self._placement[seq] = dst
+                moved[seq] = dst
+            except Exception:
+                # destination lost mid-migration (its failover already
+                # requeued whatever reached it) — cold path for this
+                # victim, survivors re-pick a destination
+                self.free_sequence(seq)
+                cold.append(seq)
+        self.table.release_shard_cache(node)
+        return {"victims": victims, "migrated_pages": migrated,
+                "cold": cold, "moved": moved}
 
     # -- per-node telemetry ---------------------------------------------------
 

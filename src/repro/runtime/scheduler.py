@@ -51,6 +51,12 @@ class Request:
     # and re-entered the queue (bounded — see PoolRouter.max_requeues)
     requeues: int = 0
     reject_reason: Optional[str] = None
+    # per-request deadline budget, seconds from arrival.  A request
+    # still waiting for admission past its deadline is shed at the next
+    # scheduler boundary with a recorded reason (the answer would
+    # arrive too late to be useful); None = no deadline.  Requests
+    # already decoding run to completion — their TTFT was met.
+    deadline_s: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -223,12 +229,32 @@ class ContinuousBatcher:
         """Failure-sync hook — PoolRouter overrides to requeue
         sequences lost to node deaths.  No-op on a single server."""
 
+    def _shed_expired(self):
+        """Deadline enforcement at the scheduler boundary: a request
+        whose deadline budget expired while it waited is shed with a
+        recorded reason before any pages are spent on it (extends the
+        explicit load-shedding surface — capacity-impossible, queue
+        cap, requeue storm)."""
+        if not any(r.deadline_s is not None for r in self.waiting):
+            return
+        now = time.monotonic()
+        keep: Deque[Request] = deque()
+        for req in self.waiting:
+            waited = now - req.t_arrive
+            if req.deadline_s is not None and waited > req.deadline_s:
+                self._reject(req, f"deadline {req.deadline_s:.3f}s "
+                             f"exceeded after {waited:.3f}s in queue")
+            else:
+                keep.append(req)
+        self.waiting = keep
+
     # -- the serving loop -----------------------------------------------------
 
     def step(self) -> int:
         """One scheduler iteration: admit, decode the active set once
         (one token, or one fused horizon), retire finished sequences.
         Returns tokens produced."""
+        self._shed_expired()
         self._admit()
         # retire anything already done from its prefill token
         self._retire()

@@ -225,6 +225,40 @@ def decode_token_spec(mesh: Mesh, batch: int) -> P:
 # ---------------------------------------------------------------------------
 
 
+def mesh_bucket(n: int) -> int:
+    """Pow2 capacity bucket for an elastic pool mesh.
+
+    Elastic pools compile their shard_map programs ONCE, against a mesh
+    of ``mesh_bucket(n)`` devices; scaling inside the bucket is a pure
+    membership change (shards park/unpark, no retrace — see DESIGN.md
+    §Elastic pool), and crossing the bucket means provisioning a new
+    server.  Pow2 keeps the bucket count logarithmic in pool size, the
+    same bound the horizon/batch pow2 bucketing gives compiled-program
+    count."""
+    if n < 1:
+        raise ValueError(f"pool capacity must be >= 1, got {n}")
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+def pool_mesh(capacity: int, devices=None) -> Mesh:
+    """Build the pool mesh over ``capacity`` devices (one DockerSSD per
+    ``model`` shard).  Raises with the CPU-simulation hint when the
+    process doesn't expose enough devices — the count is bound at jax
+    import, which is why every pool size runs in its own process in the
+    benchmarks/tests."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if capacity > len(devs):
+        raise ValueError(
+            f"{capacity} pool nodes need {capacity} devices but only "
+            f"{len(devs)} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={capacity} before "
+            f"importing jax to simulate the pool on CPU")
+    return Mesh(np.asarray(devs[:capacity]), ("model",))
+
+
 def pool_store_spec() -> P:
     """Spec for the stacked PageStore arrays
     ``[n_layers, hbm_pages, page, Hkv, D]``: the *pages* axis is sharded
